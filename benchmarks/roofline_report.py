@@ -1,0 +1,81 @@
+"""Aggregate dry-run JSONs into the EXPERIMENTS.md roofline tables.
+
+  PYTHONPATH=src python -m benchmarks.roofline_report [--out results/roofline.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt(x, digits=3):
+    if x == 0:
+        return "0"
+    return f"{x:.{digits}g}"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="results/dryrun")
+    ap.add_argument("--out", default="results/roofline.md")
+    args = ap.parse_args()
+
+    recs = []
+    for f in sorted(glob.glob(os.path.join(args.dir, "*.json"))):
+        r = json.load(open(f))
+        r["_file"] = os.path.basename(f)
+        recs.append(r)
+
+    lines = []
+    for tag, title in (("singlepod", "Single pod (16x16 = 256 chips)"),
+                       ("multipod", "Multi-pod (2x16x16 = 512 chips)")):
+        rows = [r for r in recs if f"__{tag}__" in r["_file"]]
+        if not rows:
+            continue
+        lines.append(f"### {title}\n")
+        lines.append("| arch | shape | compute s | memory s | collective s |"
+                     " bound | MODEL/HLO flops | arg+tmp GB/chip | fits 16G |")
+        lines.append("|---|---|---|---|---|---|---|---|---|")
+        for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+            if not r.get("ok"):
+                lines.append(f"| {r['arch']} | {r['shape']} | FAILED: "
+                             f"{str(r.get('error'))[:60]} | | | | | | |")
+                continue
+            gb = r["mem"]["argument_gb"] + r["mem"]["temp_gb"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {fmt(r['compute_s'])} | "
+                f"{fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+                f"**{r['bottleneck']}** | {r['useful_flops_ratio']:.3f} | "
+                f"{gb:.1f} | {'yes' if gb <= 16 else 'NO'} |")
+        lines.append("")
+
+    extra = [r for r in recs if "__singlepod__" not in r["_file"]
+             and "__multipod__" not in r["_file"]]
+    if extra:
+        lines.append("### Hillclimb / variant runs\n")
+        lines.append("| file | compute s | memory s | collective s | bound |"
+                     " MODEL/HLO | note |")
+        lines.append("|---|---|---|---|---|---|---|")
+        for r in sorted(extra, key=lambda r: r["_file"]):
+            if not r.get("ok"):
+                lines.append(f"| {r['_file']} | FAILED | | | | | "
+                             f"{str(r.get('error'))[:60]} |")
+                continue
+            lines.append(
+                f"| {r['_file'].replace('.json','')} | {fmt(r['compute_s'])} |"
+                f" {fmt(r['memory_s'])} | {fmt(r['collective_s'])} | "
+                f"{r['bottleneck']} | {r['useful_flops_ratio']:.3f} | "
+                f"mesh={r['mesh']} w={r.get('weights_mode','auto')} "
+                f"moe={r.get('moe_impl')} |")
+        lines.append("")
+
+    out = "\n".join(lines)
+    with open(args.out, "w") as f:
+        f.write(out)
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Fig.-14 style adaptability demo: steer the accuracy/cost trade-off with
+alpha and beta across all five paper pipelines.
+
+  PYTHONPATH=src python examples/adaptability.py
+"""
+from repro.core import optimizer as OPT
+from repro.core import paper_profiles as PP
+
+
+def main() -> None:
+    lam = 15.0
+    print(f"{'pipeline':12s} {'preference':16s} {'PAS':>7s} {'cost':>6s}")
+    for pname, fn in PP.PIPELINES.items():
+        pipe = fn()
+        for alpha, beta, tag in ((0.2, 2.0, "resource-prior"),
+                                 (2.0, 1.0, "balanced"),
+                                 (50.0, 0.2, "accuracy-prior")):
+            sol = OPT.solve_enum(pipe, lam,
+                                 OPT.Objective(alpha=alpha, beta=beta))
+            if sol.feasible:
+                print(f"{pname:12s} {tag:16s} {sol.pas:7.2f} {sol.cost:6.0f}")
+            else:
+                print(f"{pname:12s} {tag:16s} infeasible at lambda={lam}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.core import (accuracy, adapter, baselines, optimizer,  # noqa: F401
+                        paper_profiles, pipeline, predictor, profiler,
+                        queueing, simulator, trace)

@@ -1,0 +1,51 @@
+"""Baseline policies from the paper's evaluation (§5.1).
+
+* FA2 (Razavi et al., RTAS'22): optimal joint (batch, replicas) per stage for
+  cost, but the model variant is FIXED.  FA2-low pins every stage to its
+  lightest variant, FA2-high to its heaviest.  With the variant fixed, the
+  minimum-cost feasible configuration is exactly what our enumeration solver
+  returns with alpha = 0 (pure cost minimization) — equivalent to FA2's DP.
+* RIM (Hu et al., IoTDI'21): model switching only; replication is pinned to a
+  static high value, batching added for fairness (as the paper does).  RIM
+  maximizes accuracy subject to latency/throughput feasibility.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import optimizer as OPT
+from repro.core.pipeline import PipelineModel
+
+
+def fa2(pipe: PipelineModel, arrival: float, level: str = "low",
+        max_replicas: int = OPT.DEFAULT_MAX_REPLICAS) -> OPT.Solution:
+    """FA2-low / FA2-high: fixed variants, min-cost (batch, replicas)."""
+    variants = [s.lightest.name if level == "low" else s.heaviest.name
+                for s in pipe.stages]
+    obj = OPT.Objective(alpha=0.0, beta=1.0, delta=1e-6, metric="pas")
+    return OPT.solve_enum(pipe, arrival, obj, max_replicas=max_replicas,
+                          restrict_variants=variants)
+
+
+def rim(pipe: PipelineModel, arrival: float, static_replicas: int = 24,
+        max_replicas: int = OPT.DEFAULT_MAX_REPLICAS) -> OPT.Solution:
+    """RIM: variant switching at a static (over-provisioned) replication."""
+    obj = OPT.Objective(alpha=1.0, beta=0.0, delta=1e-6, metric="pas")
+    return OPT.solve_enum(pipe, arrival, obj, max_replicas=max_replicas,
+                          fixed_replicas=static_replicas)
+
+
+def ipa(pipe: PipelineModel, arrival: float,
+        obj: Optional[OPT.Objective] = None,
+        max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
+        solver: str = "auto") -> OPT.Solution:
+    return OPT.solve(pipe, arrival, obj or OPT.Objective(),
+                     solver=solver, max_replicas=max_replicas)
+
+
+POLICIES = {
+    "ipa": lambda pipe, lam, **kw: ipa(pipe, lam, **kw),
+    "fa2_low": lambda pipe, lam, **kw: fa2(pipe, lam, "low"),
+    "fa2_high": lambda pipe, lam, **kw: fa2(pipe, lam, "high"),
+    "rim": lambda pipe, lam, **kw: rim(pipe, lam),
+}

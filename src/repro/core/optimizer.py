@@ -1,0 +1,302 @@
+"""IPA's optimizer: the Integer Program of Eq. 10.
+
+Decision per stage: (variant m, batch b, replicas n).  Key structural fact
+used by every solver here: the objective strictly decreases in n (-beta n R)
+and n appears only in the throughput constraint (10c), so the optimal
+replica count for a chosen (m, b) is n*(m, b) = ceil(lambda / h_m(b)).
+Substituting n* collapses the IP to "pick one (m, b) option per stage under
+a total-latency budget" — which we solve three ways:
+
+  * ``solve_enum``  -- exact enumeration of the option cross-product,
+    vectorized with JAX (vmap over combo indices, feasibility-masked argmax).
+    Exact for the true multiplicative PAS.  Chunked, so pipelines up to
+    ~10^7 combos are fine.
+  * ``solve_milp``  -- scipy HiGHS MILP (the Gurobi stand-in, §4.4) over
+    binary x_{s,j}.  Exact for the *linear* accuracy metrics: PAS'
+    (Appendix C) or log-PAS (a monotone surrogate of Eq. 8; exact tradeoff
+    weighting differs from alpha*PAS — documented).  Scales to the paper's
+    Fig.-13 regime (10 stages x 10 models in < 2 s).
+  * ``solve_brute`` -- plain-python oracle for the property tests.
+"""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import math
+import time
+from typing import List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core import accuracy as ACC
+from repro.core.pipeline import (PipelineConfig, PipelineModel, StageConfig,
+                                 StageModel)
+from repro.core.queueing import queue_delay
+
+DEFAULT_MAX_REPLICAS = 64
+
+
+@dataclasses.dataclass(frozen=True)
+class Objective:
+    alpha: float = 1.0          # accuracy weight
+    beta: float = 0.1           # resource weight
+    delta: float = 1e-6         # batch penalty (paper: 1e-6)
+    metric: str = "pas"         # pas | pas_prime | log_pas
+
+
+@dataclasses.dataclass
+class StageOptions:
+    """Per-stage flattened (variant, batch) options with n* substituted."""
+    names: List[str]
+    batches: np.ndarray          # (J,)
+    lat: np.ndarray              # (J,) model latency + queue delay
+    cost: np.ndarray             # (J,) n* x R_m
+    acc: np.ndarray              # (J,) raw accuracy (0-100 scale)
+    acc_norm: np.ndarray         # (J,) rank-normalized (PAS')
+    replicas: np.ndarray         # (J,) n*
+    feasible: np.ndarray         # (J,) bool
+
+
+def stage_options(stage: StageModel, arrival: float,
+                  max_replicas: int = DEFAULT_MAX_REPLICAS) -> StageOptions:
+    names, batches, lat, cost, acc, accn, reps, feas = ([] for _ in range(8))
+    norm = dict(zip((v.name for v in stage.variants),
+                    ACC.rank_normalized([v.accuracy for v in stage.variants])))
+    for v in stage.variants:
+        for b in stage.batch_choices:
+            h = float(v.throughput(b))
+            n = max(1, math.ceil(max(arrival, 1e-9) / h)) if h > 0 else max_replicas + 1
+            ok = n <= max_replicas and n * h >= arrival - 1e-9
+            names.append(v.name)
+            batches.append(b)
+            lat.append(float(v.latency(b)) + float(queue_delay(b, arrival)))
+            cost.append(n * v.base_alloc)
+            acc.append(v.accuracy)
+            accn.append(norm[v.name])
+            reps.append(n)
+            feas.append(ok)
+    return StageOptions(names, np.array(batches), np.array(lat),
+                        np.array(cost, np.float64), np.array(acc),
+                        np.array(accn), np.array(reps), np.array(feas))
+
+
+def _apply_restrictions(pipe: PipelineModel, opts: List[StageOptions],
+                        restrict_variants: Optional[Sequence[str]],
+                        fixed_replicas: Optional[int], arrival: float):
+    if restrict_variants is not None:
+        for o, vname in zip(opts, restrict_variants):
+            keep = np.array([n == vname for n in o.names])
+            o.feasible = o.feasible & keep
+    if fixed_replicas is not None:
+        for o, stage in zip(opts, pipe.stages):
+            o.replicas = np.full_like(o.replicas, fixed_replicas)
+            o.cost = np.array([fixed_replicas * stage.variant(n).base_alloc
+                               for n in o.names], np.float64)
+            # throughput must still clear arrival at the pinned replication
+            thr = np.array([fixed_replicas * float(stage.variant(n).throughput(b))
+                            for n, b in zip(o.names, o.batches)])
+            o.feasible = o.feasible & (thr >= arrival - 1e-9)
+    return opts
+
+
+def _acc_term(o: StageOptions, metric: str) -> np.ndarray:
+    if metric == "pas":
+        # log-space; combined multiplicatively then exponentiated exactly
+        return np.log(np.maximum(o.acc, 1e-9) / 100.0)
+    if metric == "pas_prime":
+        return o.acc_norm
+    if metric == "log_pas":
+        return np.log(np.maximum(o.acc, 1e-9) / 100.0)
+    raise ValueError(metric)
+
+
+def _combine_acc(total_log_or_sum: np.ndarray, metric: str) -> np.ndarray:
+    if metric == "pas":
+        return 100.0 * np.exp(total_log_or_sum)
+    return total_log_or_sum
+
+
+@dataclasses.dataclass
+class Solution:
+    config: Optional[PipelineConfig]
+    objective: float
+    pas: float
+    cost: float
+    latency: float
+    solve_time: float
+    feasible: bool
+    solver: str
+
+
+def _mk_solution(pipe, opts, picks, obj: Objective, arrival, t0, solver):
+    stages = []
+    accs = []
+    lat = cost = bat = 0.0
+    for o, j, st in zip(opts, picks, pipe.stages):
+        stages.append(StageConfig(o.names[j], int(o.batches[j]),
+                                  int(o.replicas[j])))
+        accs.append(o.acc[j])
+        lat += o.lat[j]
+        cost += o.cost[j]
+        bat += o.batches[j]
+    acc_val = (ACC.pas(accs) if obj.metric == "pas"
+               else sum(_acc_term(o, obj.metric)[j] for o, j in zip(opts, picks)))
+    objective = obj.alpha * acc_val - obj.beta * cost - obj.delta * bat
+    return Solution(PipelineConfig(tuple(stages)), float(objective),
+                    ACC.pas(accs), float(cost), float(lat),
+                    time.perf_counter() - t0, True, solver)
+
+
+def _infeasible(t0, solver):
+    return Solution(None, -np.inf, 0.0, 0.0, np.inf,
+                    time.perf_counter() - t0, False, solver)
+
+
+# ---------------------------------------------------------------------------
+# exact enumeration (JAX)
+# ---------------------------------------------------------------------------
+def solve_enum(pipe: PipelineModel, arrival: float, obj: Objective = Objective(),
+               max_replicas: int = DEFAULT_MAX_REPLICAS,
+               restrict_variants=None, fixed_replicas=None,
+               chunk: int = 1 << 20) -> Solution:
+    import jax
+    import jax.numpy as jnp
+
+    t0 = time.perf_counter()
+    opts = [stage_options(s, arrival, max_replicas) for s in pipe.stages]
+    opts = _apply_restrictions(pipe, opts, restrict_variants, fixed_replicas,
+                               arrival)
+    S = len(opts)
+    J = max(len(o.names) for o in opts)
+
+    def pad(x, fill):
+        return np.stack([np.pad(np.asarray(x(o), np.float64),
+                                (0, J - len(o.names)),
+                                constant_values=fill) for o in opts])
+
+    acc_t = pad(lambda o: _acc_term(o, obj.metric), 0.0)
+    lat = pad(lambda o: o.lat, 1e18)
+    cost = pad(lambda o: o.cost, 1e18)
+    bat = pad(lambda o: o.batches.astype(np.float64), 1e18)
+    valid = pad(lambda o: o.feasible.astype(np.float64), 0.0) > 0.5
+
+    acc_t, lat, cost, bat, valid = map(jnp.asarray,
+                                       (acc_t, lat, cost, bat, valid))
+    sla = pipe.sla
+    K = J ** S
+    radix = jnp.array([J ** s for s in range(S)])
+
+    def eval_combo(k):
+        js = (k // radix) % J
+        idx = (jnp.arange(S), js)
+        ok = jnp.all(valid[idx]) & (jnp.sum(lat[idx]) <= sla)
+        a = jnp.sum(acc_t[idx])
+        if obj.metric == "pas":
+            a = 100.0 * jnp.exp(a)
+        score = obj.alpha * a - obj.beta * jnp.sum(cost[idx]) \
+            - obj.delta * jnp.sum(bat[idx])
+        return jnp.where(ok, score, -jnp.inf)
+
+    eval_v = jax.jit(jax.vmap(eval_combo))
+    best_k, best_v = -1, -np.inf
+    for start in range(0, K, chunk):
+        ks = jnp.arange(start, min(start + chunk, K))
+        vals = eval_v(ks)
+        i = int(jnp.argmax(vals))
+        if float(vals[i]) > best_v:
+            best_v, best_k = float(vals[i]), start + i
+    if not np.isfinite(best_v):
+        return _infeasible(t0, "enum")
+    picks = [(best_k // (J ** s)) % J for s in range(S)]
+    return _mk_solution(pipe, opts, picks, obj, arrival, t0, "enum")
+
+
+# ---------------------------------------------------------------------------
+# plain-python oracle
+# ---------------------------------------------------------------------------
+def solve_brute(pipe: PipelineModel, arrival: float,
+                obj: Objective = Objective(),
+                max_replicas: int = DEFAULT_MAX_REPLICAS,
+                restrict_variants=None, fixed_replicas=None) -> Solution:
+    t0 = time.perf_counter()
+    opts = [stage_options(s, arrival, max_replicas) for s in pipe.stages]
+    opts = _apply_restrictions(pipe, opts, restrict_variants, fixed_replicas,
+                               arrival)
+    best, best_v = None, -np.inf
+    ranges = [range(len(o.names)) for o in opts]
+    for picks in itertools.product(*ranges):
+        if not all(o.feasible[j] for o, j in zip(opts, picks)):
+            continue
+        if sum(o.lat[j] for o, j in zip(opts, picks)) > pipe.sla:
+            continue
+        a = sum(_acc_term(o, obj.metric)[j] for o, j in zip(opts, picks))
+        if obj.metric == "pas":
+            a = 100.0 * np.exp(a)
+        v = obj.alpha * a - obj.beta * sum(o.cost[j] for o, j in zip(opts, picks)) \
+            - obj.delta * sum(o.batches[j] for o, j in zip(opts, picks))
+        if v > best_v:
+            best_v, best = v, picks
+    if best is None:
+        return _infeasible(t0, "brute")
+    return _mk_solution(pipe, opts, best, obj, arrival, t0, "brute")
+
+
+# ---------------------------------------------------------------------------
+# MILP (HiGHS — the Gurobi stand-in)
+# ---------------------------------------------------------------------------
+def solve_milp(pipe: PipelineModel, arrival: float,
+               obj: Objective = Objective(metric="pas_prime"),
+               max_replicas: int = DEFAULT_MAX_REPLICAS,
+               restrict_variants=None, fixed_replicas=None) -> Solution:
+    from scipy import optimize as sopt
+    from scipy import sparse
+
+    t0 = time.perf_counter()
+    opts = [stage_options(s, arrival, max_replicas) for s in pipe.stages]
+    opts = _apply_restrictions(pipe, opts, restrict_variants, fixed_replicas,
+                               arrival)
+    metric = obj.metric if obj.metric != "pas" else "log_pas"
+    sizes = [len(o.names) for o in opts]
+    n = sum(sizes)
+    offs = np.cumsum([0] + sizes[:-1])
+
+    c = np.concatenate([
+        -(obj.alpha * _acc_term(o, metric)
+          - obj.beta * o.cost - obj.delta * o.batches) for o in opts])
+    # infeasible options: forbid via upper bound 0
+    ub = np.concatenate([o.feasible.astype(np.float64) for o in opts])
+
+    rows, cols, vals = [], [], []
+    for s, (o, off) in enumerate(zip(opts, offs)):
+        for j in range(sizes[s]):
+            rows.append(s); cols.append(off + j); vals.append(1.0)
+    a_eq = sparse.coo_matrix((vals, (rows, cols)), shape=(len(opts), n))
+    lat_row = np.concatenate([o.lat for o in opts])[None, :]
+
+    constraints = [
+        sopt.LinearConstraint(a_eq, lb=1.0, ub=1.0),
+        sopt.LinearConstraint(lat_row, ub=pipe.sla),
+    ]
+    res = sopt.milp(c=c, constraints=constraints,
+                    integrality=np.ones(n),
+                    bounds=sopt.Bounds(lb=np.zeros(n), ub=ub))
+    if not res.success or res.x is None:
+        return _infeasible(t0, "milp")
+    x = np.round(res.x).astype(int)
+    picks = []
+    for s, (o, off) in enumerate(zip(opts, offs)):
+        sel = np.nonzero(x[off:off + sizes[s]])[0]
+        if len(sel) != 1:
+            return _infeasible(t0, "milp")
+        picks.append(int(sel[0]))
+    return _mk_solution(pipe, opts, picks, obj, arrival, t0, "milp")
+
+
+def solve(pipe: PipelineModel, arrival: float, obj: Objective = Objective(),
+          solver: str = "auto", **kw) -> Solution:
+    if solver == "auto":
+        combos = math.prod(len(s.variants) * len(s.batch_choices)
+                           for s in pipe.stages)
+        solver = "enum" if combos <= (1 << 23) else "milp"
+    fn = {"enum": solve_enum, "brute": solve_brute, "milp": solve_milp}[solver]
+    return fn(pipe, arrival, obj, **kw)

@@ -1,0 +1,104 @@
+"""Control-plane data model: model variants, stages, pipelines (paper §2-4).
+
+A ``ModelVariant`` is what the offline profiler produces: an accuracy scalar,
+a base resource allocation R_m (Eq. 1) and a quadratic latency model
+l(b) = alpha b^2 + beta b + gamma fitted on power-of-two batch profiles
+(§4.2).  A ``StageModel`` is a task with its variant family and per-stage
+SLA; a ``PipelineModel`` chains stages (linear pipelines, one input/output,
+per §4.1).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+BATCH_CHOICES = (1, 2, 4, 8, 16, 32, 64)     # power-of-two profiling grid §4.2
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelVariant:
+    name: str
+    accuracy: float                      # task measure, higher-is-better §4.1
+    base_alloc: int                      # R_m: cores/chips per replica (Eq. 1)
+    latency_coeffs: Tuple[float, float, float]   # (a, b, c): l = a b^2 + b x + c
+    params_m: float = 0.0                # millions of parameters (metadata)
+
+    def latency(self, batch) -> np.ndarray:
+        a, b, c = self.latency_coeffs
+        batch = np.asarray(batch, dtype=np.float64)
+        return a * batch ** 2 + b * batch + c
+
+    def throughput(self, batch) -> np.ndarray:
+        """Per-replica RPS at batch size b (requests, not batches)."""
+        batch = np.asarray(batch, dtype=np.float64)
+        return batch / self.latency(batch)
+
+
+@dataclasses.dataclass(frozen=True)
+class StageModel:
+    name: str
+    variants: Tuple[ModelVariant, ...]
+    sla: float                           # per-stage SLA_s (§4.2, Swayam x5)
+    batch_choices: Tuple[int, ...] = BATCH_CHOICES
+
+    def variant(self, name: str) -> ModelVariant:
+        for v in self.variants:
+            if v.name == name:
+                return v
+        raise KeyError(name)
+
+    @property
+    def lightest(self) -> ModelVariant:
+        return min(self.variants, key=lambda v: (v.base_alloc, v.accuracy))
+
+    @property
+    def heaviest(self) -> ModelVariant:
+        return max(self.variants, key=lambda v: (v.accuracy, v.base_alloc))
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineModel:
+    name: str
+    stages: Tuple[StageModel, ...]
+
+    @property
+    def sla(self) -> float:
+        """SLA_P = sum of per-stage SLAs (§4.2)."""
+        return float(sum(s.sla for s in self.stages))
+
+
+@dataclasses.dataclass(frozen=True)
+class StageConfig:
+    variant: str
+    batch: int
+    replicas: int
+
+
+@dataclasses.dataclass(frozen=True)
+class PipelineConfig:
+    stages: Tuple[StageConfig, ...]
+
+    def cost(self, pipe: PipelineModel) -> float:
+        """Sum_s n_s * R_s (paper's cost: replicas x cores-per-replica)."""
+        return float(sum(
+            sc.replicas * st.variant(sc.variant).base_alloc
+            for sc, st in zip(self.stages, pipe.stages)))
+
+    def latency(self, pipe: PipelineModel, arrival: float) -> float:
+        """End-to-end model latency + worst-case queueing (Eq. 7 + 10b)."""
+        from repro.core.queueing import queue_delay
+        tot = 0.0
+        for sc, st in zip(self.stages, pipe.stages):
+            v = st.variant(sc.variant)
+            tot += float(v.latency(sc.batch)) + queue_delay(sc.batch, arrival)
+        return tot
+
+    def supports(self, pipe: PipelineModel, arrival: float) -> bool:
+        """Throughput constraint 10c for every stage."""
+        for sc, st in zip(self.stages, pipe.stages):
+            v = st.variant(sc.variant)
+            if sc.replicas * float(v.throughput(sc.batch)) < arrival - 1e-9:
+                return False
+        return True

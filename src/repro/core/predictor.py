@@ -1,0 +1,138 @@
+"""Load predictor (paper §3 "Predictor" + §5.5).
+
+A 25-unit LSTM + 1-unit dense head, implemented with lax.scan in pure JAX:
+input = the past 120 s of per-second load, output = the *max* load of the
+next 20 s.  Trained on the first 14 days of the (synthesized) Twitter trace
+with our AdamW.  Also provides the reactive (last-window) and oracle
+(ground-truth future) predictors used in the Fig.-16 ablation, and SMAPE.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.training import optim
+
+HISTORY = 120          # seconds of history fed to the LSTM
+HORIZON = 20           # predict max load over the next 20 s
+HIDDEN = 25            # paper: 25-unit LSTM layer
+
+
+def init_lstm(rng, hidden: int = HIDDEN):
+    ks = jax.random.split(rng, 4)
+    s_in = 1.0
+    s_h = 1.0 / jnp.sqrt(jnp.asarray(hidden, jnp.float32))
+    return {
+        "w_x": jax.random.normal(ks[0], (1, 4 * hidden)) * s_in * 0.1,
+        "w_h": jax.random.normal(ks[1], (hidden, 4 * hidden)) * s_h,
+        "b": jnp.zeros((4 * hidden,)),
+        "w_out": jax.random.normal(ks[2], (hidden, 1)) * s_h,
+        "b_out": jnp.zeros((1,)),
+    }
+
+
+def lstm_apply(params, x):
+    """x: (B, T) normalized loads -> (B,) prediction (normalized)."""
+    b, t = x.shape
+    h = params["w_h"].shape[0]
+
+    def cell(carry, xt):
+        hs, cs = carry
+        gates = xt[:, None] @ params["w_x"] + hs @ params["w_h"] + params["b"]
+        i, f, g, o = jnp.split(gates, 4, axis=-1)
+        cs = jax.nn.sigmoid(f + 1.0) * cs + jax.nn.sigmoid(i) * jnp.tanh(g)
+        hs = jax.nn.sigmoid(o) * jnp.tanh(cs)
+        return (hs, cs), None
+
+    (hs, _), _ = jax.lax.scan(cell, (jnp.zeros((b, h)), jnp.zeros((b, h))),
+                              x.T)
+    return (hs @ params["w_out"] + params["b_out"])[:, 0]
+
+
+def make_windows(trace: np.ndarray, stride: int = 10
+                 ) -> Tuple[np.ndarray, np.ndarray]:
+    """(X: (N, HISTORY), y: (N,) = max of next HORIZON seconds)."""
+    xs, ys = [], []
+    for s in range(0, len(trace) - HISTORY - HORIZON, stride):
+        xs.append(trace[s:s + HISTORY])
+        ys.append(trace[s + HISTORY:s + HISTORY + HORIZON].max())
+    return np.asarray(xs, np.float32), np.asarray(ys, np.float32)
+
+
+def smape(pred: np.ndarray, true: np.ndarray) -> float:
+    pred, true = np.asarray(pred), np.asarray(true)
+    return float(100.0 * np.mean(
+        np.abs(pred - true) / ((np.abs(pred) + np.abs(true)) / 2 + 1e-9)))
+
+
+@dataclasses.dataclass
+class LSTMPredictor:
+    params: dict
+    mean: float
+    std: float
+
+    @classmethod
+    def train(cls, trace: np.ndarray, *, steps: int = 400, batch: int = 128,
+              lr: float = 3e-3, seed: int = 0, stride: int = 10,
+              verbose: bool = False) -> "LSTMPredictor":
+        X, y = make_windows(trace, stride=stride)
+        mean, std = float(X.mean()), float(X.std() + 1e-9)
+        Xn, yn = (X - mean) / std, (y - mean) / std
+        params = init_lstm(jax.random.PRNGKey(seed))
+        ocfg = optim.AdamWConfig(lr=lr, warmup_steps=20, total_steps=steps,
+                                 weight_decay=0.0, grad_clip=1.0)
+        state = optim.init_state(params)
+
+        @jax.jit
+        def step(params, state, xb, yb):
+            def loss(p):
+                return jnp.mean((lstm_apply(p, xb) - yb) ** 2)
+            l, g = jax.value_and_grad(loss)(params)
+            params, state, _ = optim.apply_updates(params, g, state, ocfg)
+            return params, state, l
+
+        rng = np.random.default_rng(seed)
+        for i in range(steps):
+            idx = rng.integers(len(Xn), size=batch)
+            params, state, l = step(params, state, jnp.asarray(Xn[idx]),
+                                    jnp.asarray(yn[idx]))
+            if verbose and i % 100 == 0:
+                print(f"lstm step {i} mse={float(l):.4f}")
+        return cls(params=params, mean=mean, std=std)
+
+    def predict(self, history: np.ndarray) -> float:
+        """history: most recent >= HISTORY per-second loads."""
+        h = np.asarray(history, np.float32)[-HISTORY:]
+        if len(h) < HISTORY:
+            h = np.pad(h, (HISTORY - len(h), 0), mode="edge")
+        x = (h[None] - self.mean) / self.std
+        out = float(lstm_apply(self.params, jnp.asarray(x))[0])
+        return max(out * self.std + self.mean, 0.1)
+
+    def predict_batch(self, X: np.ndarray) -> np.ndarray:
+        xn = (np.asarray(X, np.float32) - self.mean) / self.std
+        out = np.asarray(lstm_apply(self.params, jnp.asarray(xn)))
+        return np.maximum(out * self.std + self.mean, 0.1)
+
+
+class ReactivePredictor:
+    """No look-ahead: uses the recent max as the next-interval estimate."""
+
+    def predict(self, history: np.ndarray) -> float:
+        h = np.asarray(history, np.float64)
+        return float(h[-HORIZON:].max()) if len(h) else 1.0
+
+
+class OraclePredictor:
+    """Ground-truth future max (the Fig.-16 'baseline predictor')."""
+
+    def __init__(self, trace: np.ndarray):
+        self.trace = np.asarray(trace, np.float64)
+
+    def predict_at(self, now_s: int) -> float:
+        fut = self.trace[now_s:now_s + HORIZON]
+        return float(fut.max()) if len(fut) else float(self.trace[-1])

@@ -1,0 +1,14 @@
+"""Queueing model (paper Eq. 7, from FA2): worst-case batch-formation delay.
+
+The first request of a batch waits for the remaining (b - 1) requests; at
+arrival rate lambda the worst case is q(b) = (b - 1) / lambda.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def queue_delay(batch, arrival_rps) -> np.ndarray:
+    batch = np.asarray(batch, dtype=np.float64)
+    lam = max(float(arrival_rps), 1e-9)
+    return (batch - 1.0) / lam

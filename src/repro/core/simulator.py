@@ -1,0 +1,171 @@
+"""Discrete-event simulator of a multi-stage inference pipeline (paper §3:
+"a discrete event simulator uses these profiling data to estimate the
+end-to-end latency and throughput of the pipeline based on the number of
+replicas, model variants, and batch sizes at each stage").
+
+Per stage: one central queue (batch formation) feeding `n_s` replicas
+round-robin; service time of a batch of size k under variant m is the
+profiled quadratic l_m(k).  Implements the §4.5 dropping policy: requests
+whose age exceeds drop_factor x SLA_P are dropped at batch formation.
+Reconfiguration (variant/batch/replicas) takes effect immediately at the
+adaptation boundary; in-flight batches finish under the old service time.
+"""
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import itertools
+from typing import Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.pipeline import PipelineConfig, PipelineModel, StageConfig
+from repro.serving.request import Request
+
+
+@dataclasses.dataclass
+class SimMetrics:
+    latencies: List[float] = dataclasses.field(default_factory=list)
+    completed: int = 0
+    dropped: int = 0
+    arrived: int = 0
+
+    def sla_violations(self, sla: float) -> float:
+        """Fraction of arrived requests violating the SLA (drops count)."""
+        if self.arrived == 0:
+            return 0.0
+        late = sum(1 for l in self.latencies if l > sla)
+        return (late + self.dropped) / self.arrived
+
+
+class PipelineSimulator:
+    def __init__(self, pipe: PipelineModel, config: PipelineConfig,
+                 drop_factor: float = 2.0, max_wait: float = 0.5,
+                 seed: int = 0, variant_switch_delay: float = 0.0,
+                 scale_up_delay: float = 0.0):
+        """``variant_switch_delay``: cold-start of a stage whose model
+        variant changed (container pull + model load; the paper reports an
+        ~8 s adaptation process and mitigates pull time with MinIO).
+        ``scale_up_delay``: startup of additionally provisioned replicas."""
+        self.pipe = pipe
+        self.n_stages = len(pipe.stages)
+        self.configs: List[StageConfig] = list(config.stages)
+        self.drop_factor = drop_factor
+        self.max_wait = max_wait
+        self.variant_switch_delay = variant_switch_delay
+        self.scale_up_delay = scale_up_delay
+        self.queues: List[List[Request]] = [[] for _ in range(self.n_stages)]
+        self.free_at: List[List[float]] = [
+            [0.0] * sc.replicas for sc in self.configs]
+        self.rr: List[int] = [0] * self.n_stages
+        self.now = 0.0
+        self.metrics = SimMetrics()
+        self._events: List[Tuple[float, int, str, object]] = []
+        self._seq = itertools.count()
+        self.lam_est = 10.0
+
+    # -- control plane --------------------------------------------------
+    def reconfigure(self, config: PipelineConfig) -> None:
+        for s, sc in enumerate(config.stages):
+            old = self.free_at[s]
+            n = sc.replicas
+            switched = sc.variant != self.configs[s].variant
+            if switched and self.variant_switch_delay > 0:
+                # cold start: every replica of the stage reloads the model
+                ready = self.now + self.variant_switch_delay
+                old[:] = [max(t, ready) for t in old]
+            if n >= len(old):
+                start = self.now + (self.variant_switch_delay if switched
+                                    else self.scale_up_delay)
+                old.extend([start] * (n - len(old)))
+            else:
+                # keep the soonest-free replicas
+                old.sort()
+                del old[n:]
+            self.configs[s] = sc
+
+    # -- event machinery --------------------------------------------------
+    def _push(self, t: float, kind: str, payload) -> None:
+        heapq.heappush(self._events, (t, next(self._seq), kind, payload))
+
+    def inject(self, req: Request) -> None:
+        self.metrics.arrived += 1
+        self._push(req.arrival, "arrive", (0, req))
+
+    def _stage_latency(self, s: int, k: int) -> float:
+        sc = self.configs[s]
+        v = self.pipe.stages[s].variant(sc.variant)
+        return float(v.latency(max(k, 1)))
+
+    def _try_dispatch(self, s: int) -> None:
+        q = self.queues[s]
+        sc = self.configs[s]
+        sla_p = self.pipe.sla
+        # §4.5 drop policy
+        kept = []
+        for r in q:
+            if (self.now - r.arrival) > self.drop_factor * sla_p:
+                r.dropped_at = s
+                r.done = self.now
+                self.metrics.dropped += 1
+            else:
+                kept.append(r)
+        q[:] = kept
+        while q:
+            # a replica must be free
+            free_idx = [i for i, t in enumerate(self.free_at[s])
+                        if t <= self.now + 1e-12]
+            if not free_idx:
+                return
+            full = len(q) >= sc.batch
+            waited = self.now - q[0].stage_enter.get(s, q[0].arrival)
+            timeout = waited >= self._wait_bound(sc.batch)
+            if not (full or timeout):
+                return
+            k = min(sc.batch, len(q))
+            batch, q[:] = q[:k], q[k:]
+            rep = free_idx[self.rr[s] % len(free_idx)]
+            self.rr[s] += 1
+            lat = self._stage_latency(s, k)
+            done_t = self.now + lat
+            self.free_at[s][rep] = done_t
+            self._push(done_t, "done", (s, batch))
+
+    def _wait_bound(self, batch: int) -> float:
+        """Batch-formation timeout ~ worst-case queue delay (Eq. 7)."""
+        return min(self.max_wait, (batch - 1) / max(self.lam_est, 1e-6)) \
+            if batch > 1 else 0.0
+
+    def _handle(self, kind: str, payload) -> None:
+        if kind == "arrive":
+            s, req = payload
+            req.stage_enter[s] = self.now
+            self.queues[s].append(req)
+            self._try_dispatch(s)
+        elif kind == "done":
+            s, batch = payload
+            for r in batch:
+                r.stage_exit[s] = self.now
+                if s + 1 < self.n_stages:
+                    self._push(self.now, "arrive", (s + 1, r))
+                else:
+                    r.done = self.now
+                    self.metrics.completed += 1
+                    self.metrics.latencies.append(r.latency)
+            self._try_dispatch(s)
+        elif kind == "tick":
+            s = payload
+            self._try_dispatch(s)
+
+    def run_until(self, t_end: float, tick: float = 0.05) -> None:
+        # periodic dispatch ticks let partially filled batches time out
+        t = self.now
+        while t < t_end:
+            t += tick
+            for s in range(self.n_stages):
+                self._push(t, "tick", s)
+        while self._events and self._events[0][0] <= t_end:
+            t, _, kind, payload = heapq.heappop(self._events)
+            self.now = max(self.now, t)
+            self._handle(kind, payload)
+        self.now = t_end

@@ -1,0 +1,206 @@
+"""Parameter / batch / cache sharding rules for every architecture family.
+
+Logical layout:
+  * serving + training: attention heads, FFN hidden, experts, SSM heads and
+    the vocabulary shard over the ``model`` axis (Megatron-style TP / expert
+    parallel); the batch shards over ``data`` (x ``pod`` multi-pod).
+  * training additionally FSDP-shards each >=2D weight's largest replicated
+    dim over ``data`` (x ``pod``) — parameters/optimizer state stay sharded,
+    XLA all-gathers per scanned block.
+  * long-context decode (batch 1): the KV cache seq dim context-parallels
+    over ``data``; XLA inserts the partial-softmax combine.
+
+Axes that do not divide a dim are dropped (replicate instead) — e.g.
+starcoder2's kv=2 heads cannot split 16 ways, so K/V stay replicated over
+``model`` while Q (24 heads, pad-free divisors picked per arch) shards.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    data: Tuple[str, ...]            # ("data",) or ("pod", "data")
+    model: Tuple[str, ...]           # ("model",)
+
+    @classmethod
+    def of(cls, mesh: Mesh) -> "MeshAxes":
+        names = mesh.axis_names
+        data = tuple(a for a in ("pod", "data") if a in names)
+        return cls(data=data, model=("model",) if "model" in names else ())
+
+
+def _axis_size(mesh: Mesh, axes: Tuple[str, ...]) -> int:
+    s = 1
+    for a in axes:
+        s *= mesh.shape[a]
+    return s
+
+
+def _fit(mesh: Mesh, dim: int, axes: Tuple[str, ...]):
+    """axes if they evenly divide dim, else None (replicate)."""
+    if not axes or dim % _axis_size(mesh, axes) != 0:
+        return None
+    return axes if len(axes) > 1 else axes[0]
+
+
+def _leaf_spec(path: str, shape: Tuple[int, ...], mesh: Mesh, ax: MeshAxes,
+               fsdp: bool, expert_mode: str = "none") -> P:
+    """Spec for one parameter leaf, identified by its tree path string.
+
+    ``expert_mode`` (§Perf hillclimbs):
+      * "hidden_data": additionally shard expert FFN hidden over ``data``
+        (2D-resident expert weights — no per-step weight all-gather),
+      * "hidden_model": shard expert FFN hidden over ``model`` (for expert
+        counts that don't divide the model axis, e.g. qwen2's 60)."""
+    nd = len(shape)
+    spec: list = [None] * nd
+
+    def put(dim: int, axes: Tuple[str, ...]) -> bool:
+        if 0 <= dim < nd and spec[dim] is None:
+            got = _fit(mesh, shape[dim], axes)
+            if got is not None:
+                spec[dim] = got
+                return True
+        return False
+
+    model = ax.model
+    # dims are right-aligned (stacked scan params add leading dims)
+    if path.endswith("embed"):
+        put(nd - 2, model)                       # vocab
+    elif "wq" in path or ("wk" in path) or ("wv" in path):
+        put(nd - 2, model)                       # heads
+    elif "wo" in path:
+        put(nd - 3, model)                       # heads
+    elif "w_in" in path or "w_gate" in path:
+        if "moe" in path and nd >= 3:
+            put(nd - 3, model)                   # experts
+            if expert_mode == "hidden_data":
+                put(nd - 1, ax.data)             # expert hidden over data
+                return P(*spec)
+            if expert_mode == "hidden_model":
+                put(nd - 1, model)
+                return P(*spec)
+        else:
+            put(nd - 1, model)                   # ffn hidden
+    elif "w_out" in path:
+        if "moe" in path and nd >= 3:
+            put(nd - 3, model)                   # experts
+            if expert_mode == "hidden_data":
+                put(nd - 2, ax.data)
+                return P(*spec)
+            if expert_mode == "hidden_model":
+                put(nd - 2, model)
+                return P(*spec)
+        else:
+            put(nd - 2, model)                   # ffn hidden
+    elif "router" in path:
+        put(nd - 1, model)                       # experts
+    elif "in_proj" in path:
+        put(nd - 1, model)                       # ssm inner
+    elif "out_proj" in path:
+        put(nd - 2, model)                       # ssm inner
+    elif "conv_w" in path:
+        put(nd - 2, model)
+    elif path.endswith(("conv_b", "A_log", "D", "dt_bias")) or path.endswith("norm"):
+        put(nd - 1, model)
+
+    if fsdp and nd >= 2:
+        # shard the largest still-replicated dim over data(+pod)
+        order = sorted(range(nd), key=lambda d: -shape[d])
+        for d in order:
+            if spec[d] is None and put(d, ax.data):
+                break
+    return P(*spec)
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if hasattr(k, "key"):
+            parts.append(str(k.key))
+        elif hasattr(k, "idx"):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_specs(params_shape, mesh: Mesh, *, fsdp: bool = False,
+                expert_mode: str = "none"):
+    """PartitionSpec pytree matching a params (or ShapeDtypeStruct) pytree."""
+    ax = MeshAxes.of(mesh)
+
+    def one(path, leaf):
+        return _leaf_spec(_path_str(path), leaf.shape, mesh, ax, fsdp,
+                          expert_mode)
+
+    return jax.tree_util.tree_map_with_path(one, params_shape)
+
+
+def batch_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh):
+    """Specs for the input batch dict."""
+    ax = MeshAxes.of(mesh)
+    bdim = _fit(mesh, shape.global_batch, ax.data)
+
+    def spec_for(name: str, arr_shape):
+        return P(bdim, *([None] * (len(arr_shape) - 1)))
+
+    return spec_for
+
+
+def cache_specs(cfg: ModelConfig, shape: InputShape, mesh: Mesh, caches_shape):
+    """Decode cache specs: batch over data when divisible, else context-
+    parallel (KV seq over data) + heads/experts over model."""
+    ax = MeshAxes.of(mesh)
+    batch_ok = shape.global_batch % max(_axis_size(mesh, ax.data), 1) == 0 \
+        and shape.global_batch >= _axis_size(mesh, ax.data)
+
+    def one(path, leaf):
+        p = _path_str(path)
+        nd = len(leaf.shape)
+        spec: list = [None] * nd
+        if p.endswith("k") or p.endswith("v") or "xk" in p or "xv" in p:
+            # (..., B, L, kv, hd)
+            b_dim, l_dim, h_dim = nd - 4, nd - 3, nd - 2
+            if batch_ok:
+                spec[b_dim] = _fit(mesh, leaf.shape[b_dim], ax.data)
+            else:
+                spec[l_dim] = _fit(mesh, leaf.shape[l_dim], ax.data)
+            # kv heads over model when they divide; otherwise context-
+            # parallel the cache seq dim over model (GQA kv < mesh model)
+            spec[h_dim] = _fit(mesh, leaf.shape[h_dim], ax.model)
+            if spec[h_dim] is None and spec[l_dim] is None:
+                spec[l_dim] = _fit(mesh, leaf.shape[l_dim], ax.model)
+        elif p.endswith("conv"):
+            b_dim, c_dim = nd - 3, nd - 1
+            if batch_ok:
+                spec[b_dim] = _fit(mesh, leaf.shape[b_dim], ax.data)
+            spec[c_dim] = _fit(mesh, leaf.shape[c_dim], ax.model)
+        elif p.endswith("state"):
+            b_dim, h_dim = nd - 4, nd - 3
+            if batch_ok:
+                spec[b_dim] = _fit(mesh, leaf.shape[b_dim], ax.data)
+            spec[h_dim] = _fit(mesh, leaf.shape[h_dim], ax.model)
+        return P(*spec)
+
+    return jax.tree_util.tree_map_with_path(one, caches_shape)
+
+
+def axis_rules(mesh: Mesh) -> dict:
+    ax = MeshAxes.of(mesh)
+    return {"data": ax.data, "model": ax.model}
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,4 @@
+from repro.kernels import ops, ref  # noqa: F401
+from repro.kernels.decode_attention import decode_attention  # noqa: F401
+from repro.kernels.flash_attention import flash_attention  # noqa: F401
+from repro.kernels.ssd_scan import ssd_scan  # noqa: F401

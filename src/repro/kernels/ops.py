@@ -1,0 +1,54 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on a real TPU
+set ``REPRO_PALLAS_INTERPRET=0`` (or rely on the default backend detection)
+to lower them to Mosaic.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import decode_attention as _dec
+from repro.kernels import flash_attention as _fa
+from repro.kernels import ssd_scan as _ssd
+
+
+def _interpret_default() -> bool:
+    env = os.environ.get("REPRO_PALLAS_INTERPRET")
+    if env is not None:
+        return env not in ("0", "false", "False")
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal: bool = True,
+                    window: Optional[int] = None, block_q: int = 128,
+                    block_k: int = 128, interpret: Optional[bool] = None):
+    """Signature-compatible with repro.models.layers.attention."""
+    if interpret is None:
+        interpret = _interpret_default()
+    bq = min(block_q, q.shape[1])
+    bk = min(block_k, k.shape[1])
+    return _fa.flash_attention(q, k, v, causal=causal, window=window,
+                               block_q=bq, block_k=bk, interpret=interpret)
+
+
+def decode_attention(q, k_cache, v_cache, lengths, *, block_k: int = 128,
+                     interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    bk = min(block_k, k_cache.shape[1])
+    return _dec.decode_attention(q, k_cache, v_cache, lengths,
+                                 block_k=bk, interpret=interpret)
+
+
+def ssd_scan(x, dt, a_neg, b_mat, c_mat, *, chunk: int = 256,
+             init_state=None, interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = _interpret_default()
+    chunk = min(chunk, x.shape[1])
+    return _ssd.ssd_scan(x, dt, a_neg, b_mat, c_mat, chunk=chunk,
+                         init_state=init_state, interpret=interpret)

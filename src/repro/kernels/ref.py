@@ -1,0 +1,49 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose targets)."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True,
+                        window: Optional[int] = None):
+    """q: (B, Sq, H, hd); k, v: (B, Sk, KV, hd)."""
+    b, sq, h, hd = q.shape
+    kv = k.shape[2]
+    k = jnp.repeat(k, h // kv, axis=2)
+    v = jnp.repeat(v, h // kv, axis=2)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        qp = jnp.arange(sq)[:, None]
+        kp = jnp.arange(k.shape[1])[None, :]
+        ok = kp <= qp
+        if window is not None:
+            ok &= kp > qp - window
+        s = jnp.where(ok[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bkhd->bqhd", p.astype(v.dtype), v)
+
+
+def decode_attention_ref(q, k_cache, v_cache, lengths):
+    """q: (B, H, hd); caches: (B, L, KV, hd); lengths: (B,)."""
+    b, h, hd = q.shape
+    L, kv = k_cache.shape[1], k_cache.shape[2]
+    k = jnp.repeat(k_cache, h // kv, axis=2)
+    v = jnp.repeat(v_cache, h // kv, axis=2)
+    scale = 1.0 / (hd ** 0.5)
+    s = jnp.einsum("bhd,bkhd->bhk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    valid = jnp.arange(L)[None, :] < lengths[:, None]
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhk,bkhd->bhd", p.astype(v.dtype), v)
+
+
+def ssd_scan_ref(x, dt, a_neg, b_mat, c_mat, init_state=None):
+    """Naive O(S) recurrence; see repro.models.ssm.ssd_reference."""
+    from repro.models.ssm import ssd_reference
+    return ssd_reference(x, dt, a_neg, b_mat, c_mat, init_state=init_state)

@@ -1,0 +1,81 @@
+"""Distributed training launcher.
+
+Real execution on whatever devices exist (CPU smoke: reduced configs); the
+production meshes are exercised by ``dryrun.py``.  Uses the same sharding
+rules as the dry-run so a run on real hardware only changes the mesh.
+
+  PYTHONPATH=src python -m repro.launch.train --arch yi-34b --reduced \
+      --steps 100 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import configs
+from repro.distributed import api as dapi
+from repro.distributed import sharding as shd
+from repro.launch.mesh import make_local_mesh
+from repro.models import model as M
+from repro.training import checkpoint, data, optim
+from repro.training.train import make_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list(configs.ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true",
+                    help="reduced config (full configs need a real cluster)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--data-par", type=int, default=1)
+    ap.add_argument("--model-par", type=int, default=1)
+    ap.add_argument("--save", default=None, help="npz checkpoint path")
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args()
+
+    cfg = configs.get_config(args.arch, reduced=args.reduced)
+    if not args.reduced:
+        print("WARNING: full config on local devices — expect OOM; "
+              "use the dry-run for production shapes.")
+    mesh = make_local_mesh(args.data_par, args.model_par)
+    dapi.set_axis_rules(shd.axis_rules(mesh))
+
+    ocfg = optim.AdamWConfig(lr=args.lr, warmup_steps=min(20, args.steps // 5),
+                             total_steps=args.steps)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    opt_state = optim.init_state(params)
+    pspec = shd.param_specs(jax.eval_shape(lambda: params), mesh, fsdp=True)
+    ospec = {"mu": pspec, "nu": pspec, "step": jax.sharding.PartitionSpec()}
+    step_fn = make_train_step(cfg, ocfg, impl="naive")
+
+    stream = data.SyntheticStream(
+        cfg, data.DataConfig(seq_len=args.seq, batch_size=args.batch))
+    with jax.set_mesh(mesh):
+        jitted = jax.jit(step_fn, in_shardings=(pspec, ospec, None),
+                         out_shardings=(pspec, ospec, None),
+                         donate_argnums=(0, 1))
+        it = iter(stream)
+        t0 = time.time()
+        for i in range(args.steps):
+            batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+            params, opt_state, m = jitted(params, opt_state, batch)
+            if i % args.log_every == 0 or i == args.steps - 1:
+                print(f"step {i:5d} loss={float(m['loss']):.4f} "
+                      f"gnorm={float(m['grad_norm']):.3f} "
+                      f"({(time.time()-t0)/(i+1):.2f}s/step)", flush=True)
+    if args.save:
+        checkpoint.save(args.save, params)
+        print("saved", args.save)
+    dapi.set_axis_rules(None)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Top-level model API shared by all 10 architectures.
+
+  init(rng, cfg)                          -> params
+  forward(params, cfg, batch, ...)        -> (hidden (B,S,d), aux)
+  logits(params, cfg, hidden)             -> (B, S, V)
+  prefill(params, cfg, batch, ...)        -> (hidden_last (B,d), caches)
+  decode_step(params, cfg, caches, t, tok)-> (logits (B,V), caches)
+
+``batch`` keys: "tokens" (B,S) int32 always; "frames" (B,F,d) for encdec
+(whisper frame-embedding stub); "patches" (B,P,d) for vlm (projected patch
+stub).  Multimodal prefixes are prepended to the token embeddings; the
+decode path operates past the prefix.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import constrain
+from repro.models import layers as L
+from repro.models import stack as ST
+
+
+def _plans(cfg: ModelConfig):
+    dec = ST.plan(cfg, cross=(cfg.family == "encdec"))
+    enc = ST.plan(cfg, cross=False, n_layers=cfg.n_encoder_layers) \
+        if cfg.family == "encdec" else None
+    return dec, enc
+
+
+def init(rng, cfg: ModelConfig):
+    dec_plan, enc_plan = _plans(cfg)
+    ks = jax.random.split(rng, 4)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(cfg.d_model, jnp.float32))
+    params = {
+        "embed": (jax.random.normal(ks[0], (cfg.vocab, cfg.d_model), jnp.float32)
+                  * scale).astype(cfg.dtype),
+        "stack": ST.init_stack(ks[1], cfg, dec_plan),
+        "final_norm": jnp.zeros((cfg.d_model,), cfg.dtype),
+    }
+    if enc_plan is not None:
+        # whisper encoder: non-causal self-attn layers over frame embeddings
+        params["enc_stack"] = ST.init_stack(ks[2], cfg, enc_plan)
+        params["enc_norm"] = jnp.zeros((cfg.d_model,), cfg.dtype)
+    return params
+
+
+def _embed(params, cfg, tokens):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return constrain(x, "data", None, None)
+
+
+def _prefix(cfg, batch):
+    if cfg.family == "vlm" and "patches" in batch:
+        return batch["patches"]
+    return None
+
+
+def _encode(params, cfg: ModelConfig, frames, impl, unroll=False):
+    """Whisper encoder over precomputed frame embeddings (stub frontend)."""
+    _, enc_plan = _plans(cfg)
+    pos = jnp.broadcast_to(jnp.arange(frames.shape[1])[None], frames.shape[:2])
+    # encoder attention is bidirectional: use causal=False via a dedicated path
+    x = frames.astype(cfg.dtype)
+    pl = enc_plan
+
+    def block_fn(x, block_params):
+        for j, spec in enumerate(pl.pattern):
+            p = block_params[j]
+            h = L.rms_norm(x, p["ln1"], cfg.norm_eps)
+            a, _ = L.attn_block(p["attn"], h, pos, cfg.rope_theta,
+                                causal=False, impl="naive")
+            x = x + a
+            h = L.rms_norm(x, p["ln2"], cfg.norm_eps)
+            x = x + L.mlp(p["mlp"], h)
+        return x
+
+    if unroll:
+        for r in range(pl.n_rep):
+            x = block_fn(x, jax.tree.map(lambda t: t[r],
+                                         params["enc_stack"]["blocks"]))
+    else:
+        def body(x, bp):
+            return block_fn(x, bp), None
+        x, _ = jax.lax.scan(body, x, params["enc_stack"]["blocks"])
+    for p in params["enc_stack"]["rem"]:
+        x = block_fn(x, (p,))
+    return L.rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+
+def forward(params, cfg: ModelConfig, batch, *, impl="chunked",
+            moe_impl="einsum", remat=False, unroll=False):
+    """Full-sequence forward (training / eval). Returns (hidden, aux)."""
+    dec_plan, _ = _plans(cfg)
+    x = _embed(params, cfg, batch["tokens"])
+    prefix = _prefix(cfg, batch)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"], impl, unroll=unroll)
+    x, _, aux = ST.apply_stack(params["stack"], cfg, dec_plan, x, positions,
+                               impl=impl, moe_impl=moe_impl, enc_out=enc_out,
+                               mode="train", remat=remat, unroll=unroll)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    if prefix is not None:
+        x = x[:, prefix.shape[1]:]
+    return x, aux
+
+
+def logits(params, cfg: ModelConfig, hidden):
+    out = jnp.einsum("bsd,vd->bsv", hidden, params["embed"])
+    return constrain(out, "data", None, "model")
+
+
+def prefill(params, cfg: ModelConfig, batch, *, impl="chunked",
+            moe_impl="einsum", capacity: Optional[int] = None, unroll=False):
+    """Process the prompt; returns (hidden_last (B, d), caches, prompt_len)."""
+    dec_plan, _ = _plans(cfg)
+    x = _embed(params, cfg, batch["tokens"])
+    prefix = _prefix(cfg, batch)
+    if prefix is not None:
+        x = jnp.concatenate([prefix.astype(x.dtype), x], axis=1)
+    b, s = x.shape[:2]
+    cap = capacity if capacity else s
+    positions = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    enc_out = None
+    if cfg.family == "encdec":
+        enc_out = _encode(params, cfg, batch["frames"], impl, unroll=unroll)
+    x, caches, _ = ST.apply_stack(params["stack"], cfg, dec_plan, x, positions,
+                                  impl=impl, moe_impl=moe_impl, enc_out=enc_out,
+                                  mode="prefill", capacity=cap, unroll=unroll)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x[:, -1], caches, s
+
+
+def decode_step(params, cfg: ModelConfig, caches, cache_len, tokens, *,
+                moe_impl="einsum", unroll=False):
+    """tokens: (B, 1) int32; cache_len: scalar int32 (current context length).
+
+    Returns (logits (B, V), new_caches).
+    """
+    dec_plan, _ = _plans(cfg)
+    x = _embed(params, cfg, tokens)
+    b = x.shape[0]
+    positions = jnp.full((b, 1), cache_len, jnp.int32)
+    x, caches, _ = ST.apply_stack(params["stack"], cfg, dec_plan, x, positions,
+                                  moe_impl=moe_impl, caches=caches,
+                                  cache_len=cache_len, mode="decode",
+                                  unroll=unroll)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    lg = jnp.einsum("bsd,vd->bsv", x, params["embed"])[:, 0]
+    return constrain(lg, "data", "model"), caches
+
+
+def init_cache(cfg: ModelConfig, batch: int, capacity: int):
+    dec_plan, _ = _plans(cfg)
+    enc_len = cfg.encoder_seq if cfg.family == "encdec" else 0
+    return ST.init_cache(cfg, dec_plan, batch, capacity, enc_len=enc_len)

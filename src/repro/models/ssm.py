@@ -1,0 +1,224 @@
+"""Mamba2 mixer (SSD — state-space duality, arXiv:2405.21060).
+
+The chunked SSD algorithm maps naturally onto the TPU MXU: intra-chunk terms
+are (L x L) / (L x N) matmuls, the inter-chunk recurrence is a cheap
+`lax.scan` over chunk states.  `repro.kernels.ssd_scan` is the Pallas version
+of the same math; `ssd_reference` below is the naive O(S) recurrence oracle.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMConfig
+from repro.models import layers as L
+
+
+# ---------------------------------------------------------------------------
+# parameters
+# ---------------------------------------------------------------------------
+def init_mamba(rng, d_model: int, scfg: SSMConfig, dtype):
+    din = scfg.d_inner(d_model)
+    nh = scfg.n_heads(d_model)
+    conv_dim = din + 2 * scfg.n_groups * scfg.d_state
+    ks = jax.random.split(rng, 4)
+    return {
+        "in_proj": L.init_dense(ks[0], d_model, 2 * din + 2 * scfg.n_groups * scfg.d_state + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (conv_dim, scfg.d_conv), jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh, dtype=jnp.float32)),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm": jnp.zeros((din,), dtype),
+        "out_proj": L.init_dense(ks[3], din, d_model, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+def _segsum(a):
+    """a: (..., l) -> (..., l, l) with out[i, j] = sum_{k in (j, i]} a_k (i>=j)."""
+    cs = jnp.cumsum(a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    li = a.shape[-1]
+    mask = jnp.tril(jnp.ones((li, li), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, a_neg, b_mat, c_mat, chunk: int, init_state=None):
+    """Chunked SSD (Mamba2 Listing 1, jnp).
+
+    x: (B, S, H, P); dt: (B, S, H) (already softplus'ed);
+    a_neg: (H,) negative decay; b_mat, c_mat: (B, S, G, N) with H = G*hpg.
+    Returns (y: (B, S, H, P), final_state: (B, H, P, N)).
+    """
+    b, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        b_mat = jnp.pad(b_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        c_mat = jnp.pad(c_mat, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    sp = s + pad
+    nc, li = sp // chunk, chunk
+    hpg = h // g
+    bm = jnp.repeat(b_mat, hpg, axis=2).astype(jnp.float32)       # (B,S,H,N)
+    cm = jnp.repeat(c_mat, hpg, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32) * dt[..., None]                    # fold dt in
+    da = dt * a_neg[None, None, :]                                # (B,S,H) log decay
+
+    def ch(t):  # (B, S, ...) -> (B, nc, l, ...)
+        return t.reshape((b, nc, li) + t.shape[2:])
+    xc, bc, cc, dac = ch(xf), ch(bm), ch(cm), ch(da)
+
+    # intra-chunk (diagonal blocks)
+    dach = jnp.moveaxis(dac, -1, 2)                               # (B,nc,H,l)
+    lmat = jnp.exp(_segsum(dach))                                 # (B,nc,H,l,l)
+    scores = jnp.einsum("bclhn,bcshn->bchls", cc, bc)
+    y_diag = jnp.einsum("bchls,bchls,bcshp->bclhp",
+                        scores, lmat, xc, optimize=True)
+
+    # per-chunk end states
+    cum = jnp.cumsum(dach, axis=-1)                               # (B,nc,H,l)
+    decay_to_end = jnp.exp(cum[..., -1:] - cum)                   # (B,nc,H,l)
+    states = jnp.einsum("bcshn,bchs,bcshp->bchpn", bc, decay_to_end, xc)
+
+    # inter-chunk recurrence
+    chunk_decay = jnp.exp(cum[..., -1])                           # (B,nc,H)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        st, dec = inp
+        prev = carry
+        new = prev * dec[:, :, None, None] + st
+        return new, prev                                          # emit exclusive prefix
+
+    final, prev_states = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(states, 1, 0), jnp.moveaxis(chunk_decay, 1, 0)))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                 # (B,nc,H,P,N)
+
+    out_decay = jnp.exp(cum)                                      # (B,nc,H,l)
+    y_off = jnp.einsum("bclhn,bchpn,bchl->bclhp", cc, prev_states, out_decay)
+
+    y = (y_diag + y_off).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssd_reference(x, dt, a_neg, b_mat, c_mat, init_state=None):
+    """Naive O(S) recurrence oracle (float32)."""
+    b, s, h, p = x.shape
+    g, n = b_mat.shape[2], b_mat.shape[3]
+    hpg = h // g
+    bm = jnp.repeat(b_mat, hpg, axis=2).astype(jnp.float32)
+    cm = jnp.repeat(c_mat, hpg, axis=2).astype(jnp.float32)
+    xf = x.astype(jnp.float32)
+    dtf = dt.astype(jnp.float32)
+    s0 = (jnp.zeros((b, h, p, n), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp                                     # (B,H,P),(B,H),(B,H,N),(B,H,N)
+        da = jnp.exp(dtt * a_neg[None])                           # (B,H)
+        state = state * da[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", xt * dtt[..., None], bt)
+        y = jnp.einsum("bhpn,bhn->bhp", state, ct)
+        return state, y
+
+    final, ys = jax.lax.scan(
+        step, s0,
+        (jnp.moveaxis(xf, 1, 0), jnp.moveaxis(dtf, 1, 0),
+         jnp.moveaxis(bm, 1, 0), jnp.moveaxis(cm, 1, 0)))
+    return jnp.moveaxis(ys, 0, 1), final
+
+
+# ---------------------------------------------------------------------------
+# full mixer
+# ---------------------------------------------------------------------------
+def _split_proj(params, x, d_model, scfg):
+    din = scfg.d_inner(d_model)
+    gn = scfg.n_groups * scfg.d_state
+    zxbcdt = x @ params["in_proj"]
+    z = zxbcdt[..., :din]
+    xbc = zxbcdt[..., din:2 * din + 2 * gn]
+    dt_raw = zxbcdt[..., 2 * din + 2 * gn:]
+    return z, xbc, dt_raw
+
+
+def _causal_conv(xbc, w, bias):
+    """Depthwise causal conv. xbc: (B, S, C); w: (C, K)."""
+    k = w.shape[-1]
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(k):
+        out = out + pad[:, i:i + xbc.shape[1], :].astype(jnp.float32) * w[:, i].astype(jnp.float32)
+    return jax.nn.silu(out + bias.astype(jnp.float32)).astype(xbc.dtype)
+
+
+def mamba_forward(params, x, d_model: int, scfg: SSMConfig, init_state=None,
+                  use_pallas: bool = False):
+    """x: (B, S, d). Returns (y (B,S,d), cache dict)."""
+    b, s, _ = x.shape
+    din = scfg.d_inner(d_model)
+    gn = scfg.n_groups * scfg.d_state
+    nh = scfg.n_heads(d_model)
+    z, xbc, dt_raw = _split_proj(params, x, d_model, scfg)
+    conv_in = xbc
+    xbc = _causal_conv(xbc, params["conv_w"], params["conv_b"])
+    xh = xbc[..., :din].reshape(b, s, nh, scfg.head_dim)
+    bmat = xbc[..., din:din + gn].reshape(b, s, scfg.n_groups, scfg.d_state)
+    cmat = xbc[..., din + gn:].reshape(b, s, scfg.n_groups, scfg.d_state)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])
+    a_neg = -jnp.exp(params["A_log"])
+    if use_pallas:
+        from repro.kernels import ops as kops
+        y, final = kops.ssd_scan(xh, dt, a_neg, bmat, cmat, chunk=scfg.chunk_size,
+                                 init_state=init_state)
+    else:
+        y, final = ssd_chunked(xh, dt, a_neg, bmat, cmat, scfg.chunk_size,
+                               init_state=init_state)
+    y = y + (params["D"][None, None, :, None] * xh.astype(jnp.float32)).astype(y.dtype)
+    y = y.reshape(b, s, din)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
+    out = y @ params["out_proj"]
+    # decode cache: last (d_conv - 1) conv inputs + final SSM state
+    k = scfg.d_conv
+    conv_cache = conv_in[:, -(k - 1):, :] if s >= k - 1 else jnp.pad(
+        conv_in, ((0, 0), (k - 1 - s, 0), (0, 0)))
+    return out, {"conv": conv_cache, "state": final}
+
+
+def mamba_decode(params, x, cache, d_model: int, scfg: SSMConfig):
+    """x: (B, 1, d); cache: {"conv": (B, K-1, C), "state": (B, H, P, N)}."""
+    b = x.shape[0]
+    din = scfg.d_inner(d_model)
+    gn = scfg.n_groups * scfg.d_state
+    nh = scfg.n_heads(d_model)
+    z, xbc, dt_raw = _split_proj(params, x, d_model, scfg)
+    window = jnp.concatenate([cache["conv"], xbc], axis=1)        # (B, K, C)
+    new_conv = window[:, 1:, :]
+    w = params["conv_w"].astype(jnp.float32)                      # (C, K)
+    conv_out = jnp.einsum("bkc,ck->bc", window.astype(jnp.float32), w)
+    xbc1 = jax.nn.silu(conv_out + params["conv_b"].astype(jnp.float32))
+    xbc1 = xbc1.astype(x.dtype)[:, None, :]                       # (B,1,C)
+    xh = xbc1[..., :din].reshape(b, nh, scfg.head_dim)
+    bmat = xbc1[..., din:din + gn].reshape(b, scfg.n_groups, scfg.d_state)
+    cmat = xbc1[..., din + gn:].reshape(b, scfg.n_groups, scfg.d_state)
+    hpg = nh // scfg.n_groups
+    bmat = jnp.repeat(bmat, hpg, axis=1)                          # (B,H,N)
+    cmat = jnp.repeat(cmat, hpg, axis=1)
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,H)
+    a_neg = -jnp.exp(params["A_log"])
+    da = jnp.exp(dt * a_neg[None])
+    state = cache["state"].astype(jnp.float32)
+    state = state * da[..., None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh.astype(jnp.float32) * dt[..., None], bmat.astype(jnp.float32))
+    y = jnp.einsum("bhpn,bhn->bhp", state, cmat.astype(jnp.float32))
+    y = y + params["D"][None, :, None] * xh.astype(jnp.float32)
+    y = y.astype(x.dtype).reshape(b, 1, din)
+    y = L.rms_norm(y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype), params["norm"])
+    out = y @ params["out_proj"]
+    return out, {"conv": new_conv, "state": state}

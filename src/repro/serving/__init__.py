@@ -1,0 +1,1 @@
+from repro.serving import batching, engine, request  # noqa: F401

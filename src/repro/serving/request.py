@@ -1,0 +1,40 @@
+"""Request/response records flowing through an inference pipeline."""
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Any, Dict, List, Optional
+
+_ids = itertools.count()
+
+
+@dataclasses.dataclass
+class Request:
+    arrival: float                       # seconds, pipeline ingress
+    payload: Any = None                  # tokens (np.ndarray) or None (synthetic)
+    req_id: int = dataclasses.field(default_factory=lambda: next(_ids))
+    sla: Optional[float] = None          # end-to-end latency SLA (s)
+    # bookkeeping filled in as the request flows
+    stage_enter: Dict[int, float] = dataclasses.field(default_factory=dict)
+    stage_exit: Dict[int, float] = dataclasses.field(default_factory=dict)
+    dropped_at: Optional[int] = None
+    done: float = float("nan")
+
+    @property
+    def latency(self) -> float:
+        return self.done - self.arrival
+
+    @property
+    def dropped(self) -> bool:
+        return self.dropped_at is not None
+
+
+@dataclasses.dataclass
+class BatchRecord:
+    stage: int
+    size: int
+    formed_at: float
+    started: float
+    finished: float
+    replica: int
+    variant: str

@@ -1,0 +1,1 @@
+from repro.training import checkpoint, data, optim, train  # noqa: F401

@@ -1,0 +1,46 @@
+"""Flat-npz pytree checkpointing (no orbax dependency)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+_SEP = "::"
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_key_str(k) for k in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _key_str(k) -> str:
+    if hasattr(k, "key"):
+        return f"d{k.key}"
+    if hasattr(k, "idx"):
+        return f"i{k.idx}"
+    return str(k)
+
+
+def save(path: str, tree: Any) -> None:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **_flatten(tree))
+
+
+def load(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    leaves_like, treedef = jax.tree_util.tree_flatten_with_path(like)
+    out = []
+    for path_keys, leaf in leaves_like:
+        key = _SEP.join(_key_str(k) for k in path_keys)
+        arr = data[key]
+        assert arr.shape == leaf.shape, (key, arr.shape, leaf.shape)
+        out.append(jnp.asarray(arr, dtype=leaf.dtype))
+    return jax.tree_util.tree_unflatten(
+        jax.tree_util.tree_structure(like), out)

@@ -1,0 +1,102 @@
+"""Loss + train step (chunked cross-entropy, AdamW, remat-aware)."""
+from __future__ import annotations
+
+import functools
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.distributed.api import constrain
+from repro.models import model as M
+from repro.training import optim
+
+LOSS_CHUNK = 2048
+
+
+def cross_entropy(hidden, embed, labels, chunk: int = LOSS_CHUNK):
+    """hidden: (B, S, d); embed: (V, d); labels: (B, S) with -1 = masked.
+
+    Computed in sequence chunks so the (B, C, V) logits block — not the full
+    (B, S, V) tensor — is the peak memory.
+    """
+    b, s, d = hidden.shape
+
+    def chunk_loss(h, y):
+        lg = jnp.einsum("bcd,vd->bcv", h, embed,
+                        preferred_element_type=jnp.float32)
+        lg = constrain(lg, "data", None, "model")
+        logz = jax.nn.logsumexp(lg, axis=-1)
+        gold = jnp.take_along_axis(
+            lg, jnp.maximum(y, 0)[..., None], axis=-1)[..., 0]
+        mask = (y >= 0).astype(jnp.float32)
+        return jnp.sum((logz - gold) * mask), jnp.sum(mask)
+
+    if s % chunk == 0 and s > chunk:
+        nc = s // chunk
+        hc = hidden.reshape(b, nc, chunk, d).swapaxes(0, 1)
+        yc = labels.reshape(b, nc, chunk).swapaxes(0, 1)
+
+        def body(carry, xs):
+            tot, cnt = carry
+            l, c = chunk_loss(*xs)
+            return (tot + l, cnt + c), None
+
+        (tot, cnt), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), jnp.zeros((), jnp.float32)),
+            (hc, yc))
+    else:
+        tot, cnt = chunk_loss(hidden, labels)
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, impl="chunked",
+            moe_impl="einsum", remat=False):
+    hidden, aux = M.forward(params, cfg, batch, impl=impl,
+                            moe_impl=moe_impl, remat=remat)
+    ce = cross_entropy(hidden, params["embed"], batch["labels"])
+    return ce + aux, {"ce": ce, "aux": aux}
+
+
+def make_train_step(cfg: ModelConfig, ocfg: optim.AdamWConfig, *,
+                    impl="chunked", moe_impl="einsum", remat=False):
+    """Returns train_step(params, opt_state, batch) -> (params, state, metrics).
+
+    The returned function is NOT jitted — callers jit it with their own
+    in/out shardings (launch/train.py) or plainly (smoke tests).
+    """
+
+    def train_step(params, opt_state, batch):
+        (loss, parts), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, cfg, batch, impl=impl,
+                              moe_impl=moe_impl, remat=remat),
+            has_aux=True)(params)
+        params, opt_state, om = optim.apply_updates(params, grads, opt_state, ocfg)
+        metrics = {"loss": loss, **parts, **om}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def train_loop(cfg: ModelConfig, stream, steps: int, *, seed: int = 0,
+               ocfg: Optional[optim.AdamWConfig] = None, log_every: int = 10,
+               impl="naive", verbose: bool = True):
+    """Single-host training driver (examples + tests)."""
+    ocfg = ocfg or optim.AdamWConfig(total_steps=steps)
+    params = M.init(jax.random.PRNGKey(seed), cfg)
+    opt_state = optim.init_state(params)
+    step_fn = jax.jit(make_train_step(cfg, ocfg, impl=impl))
+    history = []
+    it = iter(stream)
+    for i in range(steps):
+        batch = {k: jnp.asarray(v) for k, v in next(it).items()}
+        params, opt_state, m = step_fn(params, opt_state, batch)
+        if i % log_every == 0 or i == steps - 1:
+            rec = {k: float(v) for k, v in m.items()}
+            rec["step"] = i
+            history.append(rec)
+            if verbose:
+                print(f"step {i:5d} loss={rec['loss']:.4f} "
+                      f"ce={rec['ce']:.4f} gnorm={rec['grad_norm']:.3f}")
+    return params, opt_state, history

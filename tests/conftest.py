@@ -1,0 +1,23 @@
+import os
+
+# keep unit tests on the single real CPU device; the 512-device trick is
+# exclusively for launch/dryrun.py subprocesses.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(autouse=True, scope="module")
+def _clear_jax_caches_between_modules():
+    """Bound in-process XLA-CPU JIT dylib accumulation: a full-suite run in
+    one process can otherwise exhaust the JIT object cache and fail with
+    'Failed to materialize symbols' on this 1-CPU/35GB container."""
+    yield
+    import jax
+    jax.clear_caches()

@@ -1,0 +1,101 @@
+"""Long-context decode correctness: ring-buffer wraparound, SSM state over
+long horizons, and reconfiguration cold-start accounting."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
+                                 StageConfig, StageModel)
+from repro.core.simulator import PipelineSimulator
+from repro.models import model as M
+from repro.serving.request import Request
+
+
+@pytest.mark.parametrize("arch", ["gemma3-27b", "starcoder2-3b"])
+def test_sliding_window_ring_wraparound(arch):
+    """Decode FAR past the sliding window: the ring buffer must overwrite
+    old entries and logits must keep matching the full forward pass."""
+    cfg = configs.get_config(arch, reduced=True)
+    W = cfg.sliding_window
+    assert W is not None and W <= 64
+    S = 3 * W            # cross the window boundary twice
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (1, S), 0, cfg.vocab)
+    h, _ = M.forward(params, cfg, {"tokens": toks}, impl="naive")
+    full_lg = M.logits(params, cfg, h)
+
+    npre = W // 2        # prefill shorter than the window
+    _, caches, plen = M.prefill(params, cfg, {"tokens": toks[:, :npre]},
+                                impl="naive", capacity=S)
+    errs = []
+    clen = plen
+    for t in range(npre, S):
+        lg, caches = M.decode_step(params, cfg, caches, jnp.int32(clen),
+                                   toks[:, t:t + 1])
+        # check every W//4 steps to keep runtime sane
+        if t % (W // 4) == 0 or t == S - 1:
+            errs.append(float(jnp.max(jnp.abs(lg - full_lg[:, t]))))
+        clen += 1
+    assert max(errs) < 2e-4, errs
+
+
+def test_mamba_state_long_horizon():
+    """SSM decode over a horizon >> chunk size stays consistent."""
+    cfg = configs.get_config("mamba2-2.7b", reduced=True)
+    S = 4 * cfg.ssm.chunk_size
+    params = M.init(jax.random.PRNGKey(2), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (1, S), 0, cfg.vocab)
+    h, _ = M.forward(params, cfg, {"tokens": toks}, impl="naive")
+    full_lg = M.logits(params, cfg, h)
+    npre = S // 2
+    _, caches, plen = M.prefill(params, cfg, {"tokens": toks[:, :npre]},
+                                impl="naive", capacity=S)
+    clen = plen
+    errs = []
+    for t in range(npre, S):
+        lg, caches = M.decode_step(params, cfg, caches, jnp.int32(clen),
+                                   toks[:, t:t + 1])
+        if t % 16 == 0 or t == S - 1:
+            errs.append(float(jnp.max(jnp.abs(lg - full_lg[:, t]))))
+        clen += 1
+    assert max(errs) < 5e-4, errs
+
+
+# ---------------------------------------------------------------------------
+# reconfiguration cold-start (paper §5.3: ~8 s adaptation process)
+# ---------------------------------------------------------------------------
+def _pipe():
+    v1 = ModelVariant("light", 50.0, 1, (0.0, 0.02, 0.02))
+    v2 = ModelVariant("heavy", 80.0, 2, (0.0, 0.05, 0.05))
+    return PipelineModel("p", (StageModel("s", (v1, v2), sla=0.5,
+                                          batch_choices=(1, 2)),))
+
+
+def test_variant_switch_cold_start_delays_service():
+    pipe = _pipe()
+    lam = 10.0
+    arr = np.linspace(0.0, 4.0, 40)
+    results = {}
+    for delay in (0.0, 2.0):
+        sim = PipelineSimulator(pipe, PipelineConfig(
+            (StageConfig("light", 1, 2),)), variant_switch_delay=delay)
+        for t in arr:
+            sim.inject(Request(arrival=float(t), sla=pipe.sla))
+        sim.run_until(1.0)
+        sim.reconfigure(PipelineConfig((StageConfig("heavy", 1, 2),)))
+        sim.run_until(20.0)
+        results[delay] = np.mean(sim.metrics.latencies)
+    assert results[2.0] > results[0.0]       # cold start visibly hurts
+
+
+def test_scale_up_delay_only_affects_new_replicas():
+    pipe = _pipe()
+    sim = PipelineSimulator(pipe, PipelineConfig(
+        (StageConfig("light", 1, 1),)), scale_up_delay=5.0)
+    sim.now = 1.0
+    sim.reconfigure(PipelineConfig((StageConfig("light", 1, 3),)))
+    free = sorted(sim.free_at[0])
+    assert free[0] <= 1.0            # existing replica unaffected
+    assert free[1] == free[2] == 6.0  # new ones start after the delay

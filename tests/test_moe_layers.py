@@ -1,0 +1,125 @@
+"""MoE routing properties + layer-level invariants (hypothesis)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.base import MoEConfig
+from repro.models import layers as L
+from repro.models import moe as MO
+
+
+def _mcfg(e=4, k=2, cf=2.0):
+    return MoEConfig(n_experts=e, top_k=k, d_ff_expert=32, capacity_factor=cf)
+
+
+@given(seed=st.integers(0, 1000), e=st.integers(2, 8), k=st.integers(1, 3),
+       t=st.integers(1, 64))
+@settings(max_examples=40, deadline=None)
+def test_positions_in_expert_unique_slots(seed, e, k, t):
+    """No two (token, k) pairs may claim the same (expert, slot)."""
+    k = min(k, e)
+    rng = np.random.default_rng(seed)
+    top_i = jnp.asarray(rng.integers(0, e, size=(t, k)))
+    mcfg = MoEConfig(n_experts=e, top_k=k, d_ff_expert=8)
+    pos = np.asarray(MO._positions_in_expert(top_i, mcfg, cap=t))
+    seen = set()
+    for ti in range(t):
+        for kj in range(k):
+            key = (int(top_i[ti, kj]), int(pos[ti, kj]))
+            assert key not in seen, key
+            seen.add(key)
+
+
+@given(seed=st.integers(0, 500))
+@settings(max_examples=20, deadline=None)
+def test_einsum_and_gather_dispatch_agree(seed):
+    rng = jax.random.PRNGKey(seed)
+    ks = jax.random.split(rng, 2)
+    mcfg = _mcfg(cf=4.0)          # ample capacity -> no drops -> exact match
+    p = MO.init_moe(ks[0], 16, mcfg, True, jnp.float32)
+    x = jax.random.normal(ks[1], (2, 8, 16))
+    y1, a1 = MO.moe_apply(p, x, mcfg, impl="einsum")
+    y2, a2 = MO.moe_apply(p, x, mcfg, impl="gather")
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-5)
+    assert float(a1) == pytest.approx(float(a2), rel=1e-5)
+
+
+def test_capacity_drops_are_graceful():
+    """With capacity factor ~0, outputs fall back to the shared path/zero
+    without NaNs."""
+    mcfg = MoEConfig(n_experts=4, top_k=2, d_ff_expert=16,
+                     capacity_factor=0.01, n_shared_experts=1, d_ff_shared=16)
+    p = MO.init_moe(jax.random.PRNGKey(0), 8, mcfg, True, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(1), (1, 16, 8))
+    for impl in ("einsum", "gather"):
+        y, aux = MO.moe_apply(p, x, mcfg, impl=impl)
+        assert not jnp.isnan(y).any(), impl
+        assert jnp.isfinite(aux)
+
+
+def test_group_routing_matches_single_group_when_equal():
+    mcfg = _mcfg(cf=4.0)
+    p = MO.init_moe(jax.random.PRNGKey(2), 16, mcfg, True, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 8, 16))
+    y1, _ = MO.moe_apply(p, x, mcfg, group_size=16)    # one group
+    y2, _ = MO.moe_apply(p, x, mcfg, group_size=8)     # two groups
+    # different capacity boundaries -> not identical, but same scale & finite
+    assert jnp.isfinite(y2).all()
+    assert float(jnp.std(y2)) == pytest.approx(float(jnp.std(y1)), rel=0.5)
+
+
+def test_aux_loss_penalizes_imbalance():
+    """A router that sends everything to expert 0 must cost more than a
+    uniform router."""
+    mcfg = MoEConfig(n_experts=4, top_k=1, d_ff_expert=8,
+                     router_aux_weight=1.0)
+    d = 8
+    p = MO.init_moe(jax.random.PRNGKey(4), d, mcfg, True, jnp.float32)
+    x = jax.random.normal(jax.random.PRNGKey(5), (1, 32, d))
+    biased = dict(p, router=jnp.zeros((d, 4)).at[:, 0].set(10.0))
+    uniform = dict(p, router=jnp.zeros((d, 4)))
+    _, aux_b = MO.moe_apply(biased, x, mcfg)
+    _, aux_u = MO.moe_apply(uniform, x, mcfg)
+    assert float(aux_b) > float(aux_u)
+
+
+# ---------------------------------------------------------------------------
+# shared layers
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 500), s=st.sampled_from([32, 64, 128]),
+       chunk=st.sampled_from([16, 32]))
+@settings(max_examples=20, deadline=None)
+def test_chunked_attention_equals_naive(seed, s, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    b, h, kv, hd = 2, 4, 2, 16
+    q = jax.random.normal(ks[0], (b, s, h, hd))
+    k = jax.random.normal(ks[1], (b, s, kv, hd))
+    v = jax.random.normal(ks[2], (b, s, kv, hd))
+    pos = jnp.broadcast_to(jnp.arange(s)[None], (b, s))
+    a = L.attention_naive(q, k, v, pos, pos)
+    c = L.attention_chunked(q, k, v, pos, pos, query_chunk=chunk)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(c), atol=2e-5)
+
+
+def test_rope_relative_position_property():
+    """RoPE: q.k depends only on relative distance."""
+    hd = 32
+    q = jax.random.normal(jax.random.PRNGKey(0), (1, 1, 1, hd))
+    k = jax.random.normal(jax.random.PRNGKey(1), (1, 1, 1, hd))
+    def dot_at(pq, pk):
+        qr = L.apply_rope(q, jnp.array([[pq]]), 10_000.0)
+        kr = L.apply_rope(k, jnp.array([[pk]]), 10_000.0)
+        return float(jnp.sum(qr * kr))
+    assert dot_at(5, 3) == pytest.approx(dot_at(105, 103), abs=1e-4)
+    assert dot_at(5, 3) != pytest.approx(dot_at(5, 4), abs=1e-4)
+
+
+def test_rms_norm_scale_invariance():
+    x = jax.random.normal(jax.random.PRNGKey(0), (2, 8, 16))
+    g = jnp.zeros((16,))
+    y1 = L.rms_norm(x, g)
+    y2 = L.rms_norm(x * 100.0, g)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2), atol=1e-4)

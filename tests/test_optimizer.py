@@ -1,0 +1,145 @@
+"""Optimizer correctness: Eq. 10 solvers vs oracle + invariants (property)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import accuracy as ACC
+from repro.core import baselines as BL
+from repro.core import optimizer as OPT
+from repro.core import paper_profiles as PP
+from repro.core.pipeline import ModelVariant, PipelineModel, StageModel
+from repro.core.queueing import queue_delay
+
+
+def random_pipeline(rng: np.random.Generator, n_stages=None, n_variants=None):
+    n_stages = n_stages or int(rng.integers(1, 4))
+    stages = []
+    for s in range(n_stages):
+        nv = n_variants or int(rng.integers(1, 4))
+        variants = []
+        for v in range(nv):
+            l1 = float(rng.uniform(0.01, 0.4))
+            variants.append(ModelVariant(
+                name=f"s{s}v{v}",
+                accuracy=float(rng.uniform(30, 95)),
+                base_alloc=int(rng.choice([1, 2, 4, 8])),
+                latency_coeffs=(l1 * 0.001, l1 * 0.6, l1 * 0.4)))
+        sla = float(5.0 * np.mean([v.latency(1) for v in variants]))
+        stages.append(StageModel(f"stage{s}", tuple(variants), sla,
+                                 batch_choices=(1, 2, 4, 8)))
+    return PipelineModel("rand", tuple(stages))
+
+
+@given(seed=st.integers(0, 10_000), lam=st.floats(0.5, 60.0))
+@settings(max_examples=40, deadline=None)
+def test_enum_matches_brute_oracle(seed, lam):
+    pipe = random_pipeline(np.random.default_rng(seed))
+    obj = OPT.Objective(alpha=2.0, beta=0.7, delta=1e-5, metric="pas")
+    se = OPT.solve_enum(pipe, lam, obj)
+    sb = OPT.solve_brute(pipe, lam, obj)
+    assert se.feasible == sb.feasible
+    if se.feasible:
+        assert se.objective == pytest.approx(sb.objective, rel=1e-9)
+
+
+@given(seed=st.integers(0, 10_000), lam=st.floats(0.5, 50.0))
+@settings(max_examples=40, deadline=None)
+def test_solution_satisfies_constraints(seed, lam):
+    """Property: every returned config meets Eq. 10b/10c/10d."""
+    pipe = random_pipeline(np.random.default_rng(seed))
+    sol = OPT.solve_enum(pipe, lam, OPT.Objective())
+    if not sol.feasible:
+        return
+    cfg = sol.config
+    assert len(cfg.stages) == len(pipe.stages)             # 10d (one variant)
+    total_lat = 0.0
+    for sc, st_ in zip(cfg.stages, pipe.stages):
+        v = st_.variant(sc.variant)                        # valid variant
+        assert sc.batch in st_.batch_choices
+        assert sc.replicas >= 1
+        # 10c: n_s * h_s(b_s) >= lambda
+        assert sc.replicas * v.throughput(sc.batch) >= lam - 1e-6
+        total_lat += float(v.latency(sc.batch)) + queue_delay(sc.batch, lam)
+    assert total_lat <= pipe.sla + 1e-9                    # 10b
+
+
+@given(seed=st.integers(0, 10_000))
+@settings(max_examples=25, deadline=None)
+def test_milp_matches_brute_on_linear_metric(seed):
+    """MILP (HiGHS) is exact for the linear PAS' objective."""
+    rng = np.random.default_rng(seed)
+    pipe = random_pipeline(rng)
+    lam = float(rng.uniform(1, 40))
+    obj = OPT.Objective(alpha=3.0, beta=0.5, delta=1e-5, metric="pas_prime")
+    sm = OPT.solve_milp(pipe, lam, obj)
+    sb = OPT.solve_brute(pipe, lam, obj)
+    assert sm.feasible == sb.feasible
+    if sm.feasible:
+        assert sm.objective == pytest.approx(sb.objective, rel=1e-6)
+
+
+def test_replicas_are_minimal():
+    """n*(m, b) = ceil(lambda / h) — the substitution the solvers rely on."""
+    pipe = PP.video()
+    lam = 20.0
+    sol = OPT.solve_enum(pipe, lam, OPT.Objective())
+    for sc, st_ in zip(sol.config.stages, pipe.stages):
+        v = st_.variant(sc.variant)
+        assert sc.replicas == math.ceil(lam / float(v.throughput(sc.batch)))
+
+
+def test_alpha_beta_tradeoff_monotone():
+    """Fig. 14: raising alpha (accuracy weight) never lowers PAS; raising
+    beta (cost weight) never raises cost."""
+    pipe = PP.video()
+    lam = 15.0
+    pas_vals, cost_vals = [], []
+    for alpha in (0.1, 1.0, 10.0, 100.0):
+        s = OPT.solve_enum(pipe, lam, OPT.Objective(alpha=alpha, beta=1.0))
+        pas_vals.append(s.pas)
+    assert all(b >= a - 1e-9 for a, b in zip(pas_vals, pas_vals[1:]))
+    for beta in (0.01, 0.1, 1.0, 10.0):
+        s = OPT.solve_enum(pipe, lam, OPT.Objective(alpha=1.0, beta=beta))
+        cost_vals.append(s.cost)
+    assert all(b <= a + 1e-9 for a, b in zip(cost_vals, cost_vals[1:]))
+
+
+def test_ipa_between_fa2_low_and_high():
+    """Table-1 premise: IPA's accuracy/cost sit between the FA2 pins."""
+    pipe = PP.video()
+    lam = 10.0
+    obj = OPT.Objective(alpha=2.0, beta=1.0)
+    ipa = BL.ipa(pipe, lam, obj=obj)
+    low = BL.fa2(pipe, lam, "low")
+    high = BL.fa2(pipe, lam, "high")
+    assert low.pas - 1e-9 <= ipa.pas <= high.pas + 1e-9
+    assert low.cost - 1e-9 <= ipa.cost
+
+
+def test_rim_is_accuracy_greedy_and_expensive():
+    pipe = PP.video()
+    r = BL.rim(pipe, 10.0)
+    h = BL.fa2(pipe, 10.0, "high")
+    assert r.pas >= h.pas - 1e-9
+    assert r.cost >= h.cost
+
+
+def test_infeasible_when_sla_impossible():
+    rng = np.random.default_rng(1)
+    pipe = random_pipeline(rng)
+    # shrink SLA below the fastest batch-1 latency
+    tight = PipelineModel(pipe.name, tuple(
+        StageModel(s.name, s.variants, sla=1e-6, batch_choices=s.batch_choices)
+        for s in pipe.stages))
+    sol = OPT.solve_enum(tight, 5.0, OPT.Objective())
+    assert not sol.feasible
+
+
+def test_pas_metrics():
+    assert ACC.pas([100.0, 100.0]) == pytest.approx(100.0)
+    assert ACC.pas([50.0, 50.0]) == pytest.approx(25.0)
+    rn = ACC.rank_normalized([70.0, 90.0, 80.0])
+    assert list(rn) == [0.0, 1.0, 0.5]

@@ -1,0 +1,152 @@
+"""Discrete-event simulator invariants + adapter end-to-end behaviour."""
+import numpy as np
+import pytest
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import adapter as AD
+from repro.core import optimizer as OPT
+from repro.core import paper_profiles as PP
+from repro.core import trace as TR
+from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
+                                 StageConfig, StageModel)
+from repro.core.simulator import PipelineSimulator
+from repro.serving.request import Request
+
+
+def tiny_pipeline(lat1=0.05, lat2=0.03):
+    def var(name, l1, acc):
+        return ModelVariant(name, acc, 1, (0.0, l1 * 0.7, l1 * 0.3))
+    s1 = StageModel("a", (var("a0", lat1, 60.0),), sla=5 * lat1,
+                    batch_choices=(1, 2, 4))
+    s2 = StageModel("b", (var("b0", lat2, 70.0),), sla=5 * lat2,
+                    batch_choices=(1, 2, 4))
+    return PipelineModel("tiny", (s1, s2))
+
+
+def run_sim(pipe, config, arrivals, horizon):
+    sim = PipelineSimulator(pipe, config)
+    for t in arrivals:
+        sim.inject(Request(arrival=float(t), sla=pipe.sla))
+    sim.run_until(horizon)
+    return sim
+
+
+@given(seed=st.integers(0, 5000), lam=st.floats(1.0, 30.0))
+@settings(max_examples=25, deadline=None)
+def test_request_conservation(seed, lam):
+    """arrived == completed + dropped once drained (no request lost)."""
+    pipe = tiny_pipeline()
+    rates = np.full(20, lam)
+    arr = TR.arrivals_from_rates(rates, seed=seed)
+    cfg = PipelineConfig((StageConfig("a0", 1, max(1, int(lam * 0.06) + 1)),
+                          StageConfig("b0", 1, max(1, int(lam * 0.04) + 1))))
+    sim = run_sim(pipe, cfg, arr, horizon=20 + 100 * pipe.sla)
+    m = sim.metrics
+    assert m.arrived == len(arr)
+    assert m.completed + m.dropped == m.arrived
+    assert len(m.latencies) == m.completed
+    assert all(l >= 0 for l in m.latencies)
+
+
+def test_latency_floor_is_service_time():
+    """No request can finish faster than the sum of stage latencies."""
+    pipe = tiny_pipeline()
+    cfg = PipelineConfig((StageConfig("a0", 1, 4), StageConfig("b0", 1, 4)))
+    arr = np.linspace(0, 5, 40)
+    sim = run_sim(pipe, cfg, arr, horizon=50)
+    v1 = pipe.stages[0].variants[0].latency(1)
+    v2 = pipe.stages[1].variants[0].latency(1)
+    floor = float(v1 + v2)
+    assert min(sim.metrics.latencies) >= floor - 1e-9
+
+
+def test_underprovision_queues_or_drops():
+    """1 replica at 4x its capacity must violate SLAs / drop."""
+    pipe = tiny_pipeline(lat1=0.1)
+    cfg = PipelineConfig((StageConfig("a0", 1, 1), StageConfig("b0", 1, 1)))
+    lam = 40.0
+    arr = TR.arrivals_from_rates(np.full(10, lam), seed=0)
+    sim = run_sim(pipe, cfg, arr, horizon=10 + 20 * pipe.sla)
+    m = sim.metrics
+    assert m.dropped > 0 or m.sla_violations(pipe.sla) > 0.3
+
+
+def test_drop_policy_bounds_latency():
+    """§4.5: completed requests' latency is bounded by ~drop_factor x SLA +
+    residual service time (expired ones are dropped, not served)."""
+    pipe = tiny_pipeline(lat1=0.1)
+    cfg = PipelineConfig((StageConfig("a0", 1, 1), StageConfig("b0", 1, 1)))
+    arr = TR.arrivals_from_rates(np.full(10, 50.0), seed=1)
+    sim = run_sim(pipe, cfg, arr, horizon=10 + 20 * pipe.sla)
+    bound = 2.0 * pipe.sla + pipe.sla  # drop threshold + tail service slack
+    assert max(sim.metrics.latencies, default=0.0) <= bound
+
+
+def test_batch_formation_respects_batch_size():
+    pipe = tiny_pipeline()
+    cfg = PipelineConfig((StageConfig("a0", 4, 2), StageConfig("b0", 2, 2)))
+    arr = np.linspace(0, 2, 64)
+    sim = run_sim(pipe, cfg, arr, horizon=40)
+    assert sim.metrics.completed == 64
+
+
+def test_reconfigure_changes_capacity():
+    pipe = tiny_pipeline(lat1=0.1)
+    lam = 30.0
+    arr = TR.arrivals_from_rates(np.full(20, lam), seed=2)
+    # under-provisioned whole time
+    sim1 = run_sim(pipe, PipelineConfig((StageConfig("a0", 1, 1),
+                                         StageConfig("b0", 1, 1))),
+                   arr, horizon=20 + 20 * pipe.sla)
+    # reconfigure to enough replicas after 2 s
+    sim2 = PipelineSimulator(pipe, PipelineConfig(
+        (StageConfig("a0", 1, 1), StageConfig("b0", 1, 1))))
+    for t in arr:
+        sim2.inject(Request(arrival=float(t), sla=pipe.sla))
+    sim2.run_until(2.0)
+    sim2.reconfigure(PipelineConfig((StageConfig("a0", 1, 8),
+                                     StageConfig("b0", 1, 8))))
+    sim2.run_until(20 + 20 * pipe.sla)
+    assert sim2.metrics.dropped < sim1.metrics.dropped or \
+        sim2.metrics.sla_violations(pipe.sla) < sim1.metrics.sla_violations(pipe.sla)
+
+
+# ---------------------------------------------------------------------------
+# adapter end-to-end (paper §5.2 behaviours, scaled down for CI)
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def video_results():
+    pipe = PP.video()
+    rates = TR.excerpt("fluctuating", seconds=120)
+    obj = OPT.Objective(**PP.PAPER_WEIGHTS["video"], metric="pas")
+    return {pol: AD.run_trace(pipe, rates, policy=pol, obj=obj, seed=3)
+            for pol in ("ipa", "fa2_low", "fa2_high", "rim")}
+
+
+def test_fa2_pins_bracket_ipa_accuracy(video_results):
+    r = video_results
+    assert r["fa2_low"].mean_pas - 1e-6 <= r["ipa"].mean_pas \
+        <= r["fa2_high"].mean_pas + 1e-6
+
+
+def test_ipa_cheaper_than_fa2_high(video_results):
+    assert video_results["ipa"].mean_cost <= video_results["fa2_high"].mean_cost
+
+
+def test_rim_most_expensive(video_results):
+    r = video_results
+    assert r["rim"].mean_cost >= max(r["ipa"].mean_cost,
+                                     r["fa2_high"].mean_cost)
+
+
+def test_ipa_improves_accuracy_over_fa2_low_meaningfully(video_results):
+    """Paper headline: up to 21% end-to-end accuracy gain vs cost-optimal."""
+    r = video_results
+    gain = (r["ipa"].mean_pas - r["fa2_low"].mean_pas) / r["fa2_low"].mean_pas
+    assert gain > 0.10
+
+
+def test_all_requests_accounted(video_results):
+    for res in video_results.values():
+        assert res.completed + res.dropped == res.arrived

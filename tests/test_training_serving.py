@@ -1,0 +1,149 @@
+"""Training substrate + real serving engine tests."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core import profiler as PF
+from repro.models import model as M
+from repro.serving.batching import CentralQueue
+from repro.serving.engine import PipelineEngine, StageServer
+from repro.serving.request import Request
+from repro.training import checkpoint, data, optim
+from repro.training.train import cross_entropy, train_loop
+
+
+def test_loss_decreases_in_short_training():
+    cfg = configs.get_config("starcoder2-3b", reduced=True)
+    stream = data.SyntheticStream(cfg, data.DataConfig(seq_len=64,
+                                                       batch_size=8))
+    ocfg = optim.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=120)
+    _, _, hist = train_loop(cfg, stream, steps=120, log_every=20, ocfg=ocfg,
+                            verbose=False)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.2
+
+
+def test_chunked_ce_matches_direct():
+    rng = jax.random.PRNGKey(0)
+    b, s, d, v = 2, 64, 32, 128
+    hidden = jax.random.normal(rng, (b, s, d))
+    embed = jax.random.normal(rng, (v, d))
+    labels = jax.random.randint(rng, (b, s), 0, v)
+    a = cross_entropy(hidden, embed, labels, chunk=16)
+    bfull = cross_entropy(hidden, embed, labels, chunk=10**9)
+    assert float(jnp.abs(a - bfull)) < 1e-4
+
+
+def test_ce_label_masking():
+    rng = jax.random.PRNGKey(1)
+    hidden = jax.random.normal(rng, (1, 8, 16))
+    embed = jax.random.normal(rng, (32, 16))
+    labels = jnp.full((1, 8), -1)
+    labels = labels.at[0, 0].set(3)
+    one = cross_entropy(hidden, embed, labels)
+    assert jnp.isfinite(one)
+
+
+def test_adamw_schedule():
+    cfg = optim.AdamWConfig(lr=1e-3, warmup_steps=10, total_steps=100)
+    lrs = [float(optim.schedule(cfg, jnp.int32(s))) for s in (0, 5, 10, 100)]
+    assert lrs[0] == 0.0 and lrs[1] == pytest.approx(5e-4)
+    assert lrs[2] == pytest.approx(1e-3)
+    assert lrs[3] == pytest.approx(1e-4, rel=0.01)   # min_lr_ratio * lr
+
+
+def test_checkpoint_roundtrip(tmp_path):
+    cfg = configs.get_config("yi-34b", reduced=True)
+    params = M.init(jax.random.PRNGKey(0), cfg)
+    path = str(tmp_path / "ckpt.npz")
+    checkpoint.save(path, params)
+    like = jax.eval_shape(lambda: params)
+    restored = checkpoint.load(path, like)
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_synthetic_stream_deterministic_and_learnable():
+    cfg = configs.get_config("yi-34b", reduced=True)
+    st = data.SyntheticStream(cfg, data.DataConfig(seq_len=32, batch_size=2))
+    b0a, b0b = st.batch(0), st.batch(0)
+    np.testing.assert_array_equal(b0a["tokens"], b0b["tokens"])
+    # labels are next-token shifted
+    np.testing.assert_array_equal(b0a["labels"][:, :-1], b0a["tokens"][:, 1:])
+
+
+# ---------------------------------------------------------------------------
+# serving engine
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def small_server():
+    fam = configs.get_variant_family("yi-34b")[:2]
+    return StageServer("clf", fam, gen_tokens=2)
+
+
+def test_stage_server_switching(small_server):
+    srv = small_server
+    toks = np.zeros((2, 8), np.int32)
+    out1, _ = srv.process(toks)
+    assert out1.shape == (2, 2)
+    acc1 = srv.accuracy
+    srv.set_variant(list(srv.variants)[1])
+    out2, _ = srv.process(toks)
+    assert out2.shape == (2, 2)
+    assert srv.accuracy != acc1
+
+
+def test_variant_switch_changes_outputs(small_server):
+    srv = small_server
+    toks = np.arange(16, dtype=np.int32).reshape(2, 8)
+    names = list(srv.variants)
+    srv.set_variant(names[0]); o1, _ = srv.process(toks)
+    srv.set_variant(names[1]); o2, _ = srv.process(toks)
+    assert not np.array_equal(o1, o2)
+
+
+def test_pipeline_engine_chains(small_server):
+    fam2 = configs.get_variant_family("starcoder2-3b")[:2]
+    eng = PipelineEngine([small_server,
+                          StageServer("qa", fam2, gen_tokens=2)])
+    out, lats = eng.serve(np.zeros((1, 8), np.int32))
+    assert out.shape == (1, 2) and len(lats) == 2
+    assert 0 < eng.pas <= 100
+
+
+def test_profile_real_stage_server(small_server):
+    profs = PF.profile_stage_server(small_server, batches=(1, 2), repeats=1)
+    assert len(profs) == 2
+    for p in profs:
+        assert all(l > 0 for l in p.latencies)
+
+
+# ---------------------------------------------------------------------------
+# central queue
+# ---------------------------------------------------------------------------
+def test_central_queue_batching():
+    q = CentralQueue(batch_size=4, max_wait=10.0)
+    for i in range(6):
+        q.push(Request(arrival=float(i) * 0.01))
+    assert q.ready(0.06)
+    batch = q.pop_batch(0.06)
+    assert len(batch) == 4 and len(q) == 2
+
+
+def test_central_queue_timeout():
+    q = CentralQueue(batch_size=8, max_wait=0.5)
+    q.push(Request(arrival=0.0))
+    assert not q.ready(0.1)
+    assert q.ready(0.6)                 # oldest waited past max_wait
+
+
+def test_central_queue_drop_expired():
+    q = CentralQueue(batch_size=4)
+    q.push(Request(arrival=0.0, sla=1.0))
+    q.push(Request(arrival=2.9, sla=1.0))
+    dropped = q.drain_expired(3.0, stage=0, drop_factor=2.0)
+    assert len(dropped) == 1 and dropped[0].dropped
+    assert len(q) == 1
