@@ -340,7 +340,7 @@ def bench_drop_ablation(fast: bool) -> None:
         sim.run_until(float(len(rates)) + 20 * pipe.sla)
         m = sim.metrics
         viol = m.sla_violations(pipe.sla)
-        p99 = float(_np.percentile(m.latencies, 99)) if m.latencies else 0.0
+        p99 = float(_np.percentile(m.latencies, 99)) if len(m.latencies) else 0.0
         out[str(df)] = {"dropped": m.dropped, "violations": viol, "p99": p99}
         emit(f"drop.factor_{df:g}", 0.0,
              f"dropped={m.dropped}_viol={viol:.3f}_p99={p99:.1f}s")

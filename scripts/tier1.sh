@@ -1,0 +1,10 @@
+#!/usr/bin/env bash
+# Tier-1 gate: fast test loop + simulator perf smoke.
+# Fails loudly on test regressions AND on event-driven-core perf regressions.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q
+python benchmarks/bench_simulator.py --smoke

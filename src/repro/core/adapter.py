@@ -43,6 +43,10 @@ class TraceResult:
     completed: int
     dropped: int
     sla: float
+    # simulator observability (filled by run_trace; defaults keep older
+    # constructors working)
+    sim_events: int = 0
+    peak_queue_depth: int = 0
 
     @property
     def sla_violation_rate(self) -> float:
@@ -130,18 +134,19 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
     sim.run_until(horizon + 4 * pipe.sla)
     m = sim.metrics
     return TraceResult(policy=policy, intervals=records,
-                       latencies=np.asarray(m.latencies),
+                       latencies=np.array(m.latencies, dtype=np.float64),
                        arrived=m.arrived, completed=m.completed,
-                       dropped=m.dropped, sla=pipe.sla)
+                       dropped=m.dropped, sla=pipe.sla,
+                       sim_events=sim.events_processed,
+                       peak_queue_depth=sim.peak_queue_depth)
 
 
 def _decide(pipe, lam, policy, obj, max_replicas):
+    try:
+        fn = BL.POLICIES[policy]
+    except KeyError:
+        raise ValueError(policy) from None
+    kw = {"max_replicas": max_replicas}
     if policy == "ipa":
-        return BL.ipa(pipe, lam, obj=obj, max_replicas=max_replicas)
-    if policy == "fa2_low":
-        return BL.fa2(pipe, lam, "low", max_replicas=max_replicas)
-    if policy == "fa2_high":
-        return BL.fa2(pipe, lam, "high", max_replicas=max_replicas)
-    if policy == "rim":
-        return BL.rim(pipe, lam, max_replicas=max_replicas)
-    raise ValueError(policy)
+        kw["obj"] = obj
+    return fn(pipe, lam, **kw)

@@ -8,6 +8,13 @@
 * RIM (Hu et al., IoTDI'21): model switching only; replication is pinned to a
   static high value, batching added for fairness (as the paper does).  RIM
   maximizes accuracy subject to latency/throughput feasibility.
+
+All baselines plan against the same queueing model the simulator enforces:
+``core.queueing`` provides both the analytical Eq. 7 delay (used by the
+enumeration solver via ``PipelineConfig.latency``) and the batch-formation
+``wait_bound`` the simulator arms as its dispatch timeout, so a config a
+baseline deems feasible is judged by identical queueing assumptions at
+simulation time.
 """
 from __future__ import annotations
 
@@ -45,7 +52,7 @@ def ipa(pipe: PipelineModel, arrival: float,
 
 POLICIES = {
     "ipa": lambda pipe, lam, **kw: ipa(pipe, lam, **kw),
-    "fa2_low": lambda pipe, lam, **kw: fa2(pipe, lam, "low"),
-    "fa2_high": lambda pipe, lam, **kw: fa2(pipe, lam, "high"),
-    "rim": lambda pipe, lam, **kw: rim(pipe, lam),
+    "fa2_low": lambda pipe, lam, **kw: fa2(pipe, lam, "low", **kw),
+    "fa2_high": lambda pipe, lam, **kw: fa2(pipe, lam, "high", **kw),
+    "rim": lambda pipe, lam, **kw: rim(pipe, lam, **kw),
 }

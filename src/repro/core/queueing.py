@@ -2,13 +2,39 @@
 
 The first request of a batch waits for the remaining (b - 1) requests; at
 arrival rate lambda the worst case is q(b) = (b - 1) / lambda.
+
+Both the analytical planner (``PipelineConfig.latency`` -> ``queue_delay``)
+and the discrete-event simulator (batch-formation timeout ->
+``wait_bound``) derive from this single implementation so the optimizer's
+latency estimate and the simulator's dispatch behaviour can never drift
+apart.
 """
 from __future__ import annotations
+
+from typing import Optional
 
 import numpy as np
 
 
 def queue_delay(batch, arrival_rps) -> np.ndarray:
+    """Worst-case batch-formation delay q(b) = (b - 1) / lambda (Eq. 7)."""
     batch = np.asarray(batch, dtype=np.float64)
     lam = max(float(arrival_rps), 1e-9)
     return (batch - 1.0) / lam
+
+
+def wait_bound(batch: int, arrival_rps: float,
+               max_wait: Optional[float] = None) -> float:
+    """Batch-formation timeout: Eq. 7's q(b) capped at ``max_wait``.
+
+    This is the deadline the simulator arms for a partially filled batch:
+    the head request never waits longer than the worst-case queue delay the
+    planner budgeted for, nor longer than the hard cap ``max_wait``.  A
+    batch of one never waits.
+    """
+    if batch <= 1:
+        return 0.0
+    q = float(queue_delay(batch, arrival_rps))
+    if max_wait is not None:
+        q = min(float(max_wait), q)
+    return q

@@ -1,4 +1,4 @@
-"""Discrete-event simulator of a multi-stage inference pipeline (paper §3:
+"""Event-driven simulator of a multi-stage inference pipeline (paper §3:
 "a discrete event simulator uses these profiling data to estimate the
 end-to-end latency and throughput of the pipeline based on the number of
 replicas, model variants, and batch sizes at each stage").
@@ -9,44 +9,195 @@ profiled quadratic l_m(k).  Implements the §4.5 dropping policy: requests
 whose age exceeds drop_factor x SLA_P are dropped at batch formation.
 Reconfiguration (variant/batch/replicas) takes effect immediately at the
 adaptation boundary; in-flight batches finish under the old service time.
+
+The core is purely event-driven — there is no periodic "tick".  A
+partially filled batch arms exactly one ``timeout`` event at
+``head_enter + wait_bound`` (Eq. 7 via ``core.queueing.wait_bound``); the
+event carries a per-stage generation counter so that when the batch
+dispatches early (filled up, or flushed by an upstream completion) the
+stale timeout is ignored on pop instead of being searched for and removed
+from the heap.  A dispatch blocked on busy/cold-starting replicas arms a
+``wake`` event at the soonest replica-free time.  Per-dispatch drop scans
+and latency accumulation run vectorized over numpy buffers that parallel
+the per-stage queues.
 """
 from __future__ import annotations
 
-import dataclasses
 import heapq
 import itertools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from repro.core.pipeline import PipelineConfig, PipelineModel, StageConfig
+from repro.core.queueing import wait_bound
 from repro.serving.request import Request
 
+_EPS = 1e-12
+_INF = float("inf")
 
-@dataclasses.dataclass
+
+class _FloatBuf:
+    """Growable float64 buffer (amortized O(1) append, vectorized extend)."""
+
+    __slots__ = ("_data", "_n")
+
+    def __init__(self, cap: int = 256):
+        self._data = np.empty(cap, dtype=np.float64)
+        self._n = 0
+
+    def __len__(self) -> int:
+        return self._n
+
+    def _grow_to(self, need: int) -> None:
+        cap = len(self._data)
+        if need > cap:
+            new = np.empty(max(need, 2 * cap), dtype=np.float64)
+            new[:self._n] = self._data[:self._n]
+            self._data = new
+
+    def append(self, x: float) -> None:
+        self._grow_to(self._n + 1)
+        self._data[self._n] = x
+        self._n += 1
+
+    def extend(self, xs: np.ndarray) -> None:
+        k = len(xs)
+        self._grow_to(self._n + k)
+        self._data[self._n:self._n + k] = xs
+        self._n += k
+
+    def view(self) -> np.ndarray:
+        return self._data[:self._n]
+
+
 class SimMetrics:
-    latencies: List[float] = dataclasses.field(default_factory=list)
-    completed: int = 0
-    dropped: int = 0
-    arrived: int = 0
+    """Aggregate counters; latencies live in a growable float64 buffer so
+    per-batch completion extends an array instead of appending Python
+    floats one by one."""
+
+    __slots__ = ("_lat", "completed", "dropped", "arrived")
+
+    def __init__(self):
+        self._lat = _FloatBuf()
+        self.completed = 0
+        self.dropped = 0
+        self.arrived = 0
+
+    @property
+    def latencies(self) -> np.ndarray:
+        """Completed-request latencies as a float64 array view."""
+        return self._lat.view()
 
     def sla_violations(self, sla: float) -> float:
         """Fraction of arrived requests violating the SLA (drops count)."""
         if self.arrived == 0:
             return 0.0
-        late = sum(1 for l in self.latencies if l > sla)
+        late = int(np.count_nonzero(self._lat.view() > sla))
         return (late + self.dropped) / self.arrived
+
+
+class _StageQueue:
+    """FIFO of requests with parallel columns (absolute arrival time,
+    stage-enter time).  Columns are plain lists — batches are small, so
+    per-event python appends/slices beat numpy's per-op overhead — and are
+    lifted into an ndarray only when a drop scan actually runs, which the
+    ``min_arr`` guard makes rare.  ``head`` is a logical front pointer;
+    storage compacts lazily."""
+
+    __slots__ = ("reqs", "_arr", "_enter", "head", "min_arr")
+
+    def __init__(self):
+        self.reqs: List[Request] = []
+        self._arr: List[float] = []
+        self._enter: List[float] = []
+        self.head = 0
+        # conservative lower bound on the oldest live arrival: lets the
+        # caller skip the drop scan entirely while nothing can be expired
+        self.min_arr = _INF
+
+    def __len__(self) -> int:
+        return len(self.reqs) - self.head
+
+    def push(self, req: Request, now: float) -> None:
+        self._arr.append(req.arrival)
+        self._enter.append(now)
+        if req.arrival < self.min_arr:
+            self.min_arr = req.arrival
+        self.reqs.append(req)
+
+    def push_many(self, reqs: Sequence[Request], arrs: Sequence[float],
+                  now: float) -> None:
+        """Append a whole upstream batch with its arrival column."""
+        self._arr.extend(arrs)
+        self._enter.extend([now] * len(reqs))
+        m = min(arrs)
+        if m < self.min_arr:
+            self.min_arr = m
+        self.reqs.extend(reqs)
+
+    def head_enter(self) -> float:
+        return self._enter[self.head]
+
+    def head_arrival(self) -> float:
+        return self._arr[self.head]
+
+    def pop_batch(self, k: int) -> Tuple[List[Request], List[float]]:
+        h = self.head
+        e = h + k
+        batch = self.reqs[h:e]
+        arrs = self._arr[h:e]
+        self.head = e
+        t = len(self.reqs)
+        if e == t:
+            self.min_arr = _INF
+        if e >= 512 and 2 * e >= t:
+            del self.reqs[:e]
+            del self._arr[:e]
+            del self._enter[:e]
+            self.head = 0
+        return batch, arrs
+
+    def drop_expired(self, now: float, threshold: float) -> List[Request]:
+        """Remove (and return) every queued request older than ``threshold``.
+
+        The age test runs vectorized over the arrival column; callers only
+        reach this when ``min_arr`` says something may actually be old."""
+        h, t = self.head, len(self.reqs)
+        if h == t:
+            self.min_arr = _INF
+            return []
+        live_arr = np.array(self._arr[h:t], dtype=np.float64)
+        oldest = float(live_arr.min())
+        if now - oldest <= threshold:
+            self.min_arr = oldest        # tightened bound, nothing expired
+            return []
+        expired = (now - live_arr) > threshold
+        keep = ~expired
+        dropped = list(itertools.compress(self.reqs[h:t], expired))
+        kept = list(itertools.compress(self.reqs[h:t], keep))
+        self.reqs = kept
+        self._arr = list(itertools.compress(self._arr[h:t], keep))
+        self._enter = list(itertools.compress(self._enter[h:t], keep))
+        self.head = 0
+        self.min_arr = min(self._arr) if kept else _INF
+        return dropped
 
 
 class PipelineSimulator:
     def __init__(self, pipe: PipelineModel, config: PipelineConfig,
                  drop_factor: float = 2.0, max_wait: float = 0.5,
                  seed: int = 0, variant_switch_delay: float = 0.0,
-                 scale_up_delay: float = 0.0):
+                 scale_up_delay: float = 0.0,
+                 record_timeline: bool = False):
         """``variant_switch_delay``: cold-start of a stage whose model
         variant changed (container pull + model load; the paper reports an
         ~8 s adaptation process and mitigates pull time with MinIO).
-        ``scale_up_delay``: startup of additionally provisioned replicas."""
+        ``scale_up_delay``: startup of additionally provisioned replicas.
+        ``record_timeline``: also fill each request's per-stage
+        ``stage_enter``/``stage_exit`` dicts (debug/inspection; the hot
+        path skips these dict writes — aggregate metrics, drop marks and
+        ``done`` stamps are always recorded)."""
         self.pipe = pipe
         self.n_stages = len(pipe.stages)
         self.configs: List[StageConfig] = list(config.stages)
@@ -54,7 +205,9 @@ class PipelineSimulator:
         self.max_wait = max_wait
         self.variant_switch_delay = variant_switch_delay
         self.scale_up_delay = scale_up_delay
-        self.queues: List[List[Request]] = [[] for _ in range(self.n_stages)]
+        self.record_timeline = record_timeline
+        self.queues: List[_StageQueue] = [
+            _StageQueue() for _ in range(self.n_stages)]
         self.free_at: List[List[float]] = [
             [0.0] * sc.replicas for sc in self.configs]
         self.rr: List[int] = [0] * self.n_stages
@@ -62,7 +215,29 @@ class PipelineSimulator:
         self.metrics = SimMetrics()
         self._events: List[Tuple[float, int, str, object]] = []
         self._seq = itertools.count()
-        self.lam_est = 10.0
+        # injections bypass the heap: adapter/benchmark workloads inject in
+        # (near-)sorted time order, so arrivals live in a sorted list
+        # consumed by a front pointer and merged with the heap in run_until
+        self._inj: List[Tuple[float, Request]] = []
+        self._inj_i = 0
+        self._inj_sorted = True
+        # hot-path caches: SLA_P and drop threshold are config constants;
+        # per-batch service latency and wait bounds change only on
+        # reconfigure / lam_est updates
+        self.sla_p = pipe.sla
+        self._drop_thr = drop_factor * self.sla_p
+        self._lam_est = 10.0
+        self._lat_tab: List[List[float]] = []
+        self._wb: Optional[List[float]] = None
+        self._refresh_lat_tab()
+        # lazy-cancellation state: one pending timeout/wake marker per stage
+        self._gen: List[int] = [0] * self.n_stages
+        self._timeout_at: List[float] = [_INF] * self.n_stages
+        self._wake_at: List[float] = [_INF] * self.n_stages
+        # observability (benchmarks / invariants)
+        self.events_processed = 0
+        self.peak_queue_depth = 0
+        self.in_service = 0
 
     # -- control plane --------------------------------------------------
     def reconfigure(self, config: PipelineConfig) -> None:
@@ -83,89 +258,234 @@ class PipelineSimulator:
                 old.sort()
                 del old[n:]
             self.configs[s] = sc
+            # batch size / replica availability changed: pending deadlines
+            # are stale, re-arm from current state
+            self._bump(s)
+            self._wake_at[s] = _INF
+        self._refresh_lat_tab()
+        self._wb = None
+        for s in range(self.n_stages):
+            self._try_dispatch(s)
+
+    # -- invariants ------------------------------------------------------
+    @property
+    def queued(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    # -- hot-path caches --------------------------------------------------
+    @property
+    def lam_est(self) -> float:
+        return self._lam_est
+
+    @lam_est.setter
+    def lam_est(self, v: float) -> None:
+        v = float(v)
+        if v == self._lam_est:
+            return
+        self._lam_est = v
+        self._wb = None                  # wait bounds depend on lambda
+        # pending batch-formation timeouts were armed under the old lambda;
+        # supersede and re-arm them so the deadline tracks the new Eq. 7
+        # bound (the legacy core re-evaluated the bound on every tick)
+        for s, t in enumerate(self._timeout_at):
+            if t != _INF:
+                self._bump(s)
+                self._try_dispatch(s)
+
+    def _refresh_lat_tab(self) -> None:
+        """Per-stage service-latency table l_m(k) for k = 0..batch under the
+        current variant (one vectorized evaluation per reconfigure)."""
+        self._lat_tab = []
+        self._batch_of = []
+        for st, sc in zip(self.pipe.stages, self.configs):
+            ks = np.arange(sc.batch + 1, dtype=np.float64)
+            ks[0] = 1.0                  # k=0 never dispatched; keep finite
+            self._lat_tab.append(
+                st.variant(sc.variant).latency(ks).tolist())
+            self._batch_of.append(sc.batch)
+
+    def _wait_bounds(self) -> List[float]:
+        if self._wb is None:
+            self._wb = [wait_bound(sc.batch, self._lam_est, self.max_wait)
+                        for sc in self.configs]
+        return self._wb
 
     # -- event machinery --------------------------------------------------
     def _push(self, t: float, kind: str, payload) -> None:
         heapq.heappush(self._events, (t, next(self._seq), kind, payload))
 
+    def _bump(self, s: int) -> None:
+        """Supersede any pending timeout for stage ``s`` (lazy cancel)."""
+        self._gen[s] += 1
+        self._timeout_at[s] = _INF
+
+    def _schedule_timeout(self, s: int, t: float) -> None:
+        if t < self._timeout_at[s] - _EPS:
+            self._timeout_at[s] = t
+            self._push(t, "timeout", (s, self._gen[s]))
+
+    def _schedule_wake(self, s: int, t: float) -> None:
+        if t <= self.now + _EPS:
+            t = self.now + 1e-9
+        if t < self._wake_at[s] - _EPS:
+            self._wake_at[s] = t
+            self._push(t, "wake", s)
+
     def inject(self, req: Request) -> None:
         self.metrics.arrived += 1
-        self._push(req.arrival, "arrive", (0, req))
+        inj = self._inj
+        if inj and req.arrival < inj[-1][0]:
+            self._inj_sorted = False
+        inj.append((req.arrival, req))
 
     def _stage_latency(self, s: int, k: int) -> float:
+        tab = self._lat_tab[s]
+        if k < len(tab):
+            return tab[k]
         sc = self.configs[s]
         v = self.pipe.stages[s].variant(sc.variant)
         return float(v.latency(max(k, 1)))
 
     def _try_dispatch(self, s: int) -> None:
         q = self.queues[s]
+        now = self.now
+        # §4.5 drop policy — the min-arrival bound lets the common
+        # nothing-to-expire case skip the vectorized scan entirely
+        if now - q.min_arr > self._drop_thr:
+            dropped = q.drop_expired(now, self._drop_thr)
+            if dropped:
+                for r in dropped:
+                    r.dropped_at = s
+                    r.done = now
+                self.metrics.dropped += len(dropped)
+                self._bump(s)
         sc = self.configs[s]
-        sla_p = self.pipe.sla
-        # §4.5 drop policy
-        kept = []
-        for r in q:
-            if (self.now - r.arrival) > self.drop_factor * sla_p:
-                r.dropped_at = s
-                r.done = self.now
-                self.metrics.dropped += 1
-            else:
-                kept.append(r)
-        q[:] = kept
-        while q:
-            # a replica must be free
-            free_idx = [i for i, t in enumerate(self.free_at[s])
-                        if t <= self.now + 1e-12]
+        free = self.free_at[s]
+        nq = len(q.reqs) - q.head
+        while nq:
+            if not free:
+                # zero replicas configured: requests can only age out
+                self._schedule_wake(s, q.head_arrival() + self._drop_thr)
+                return
+            free_idx = [i for i, t in enumerate(free) if t <= now + _EPS]
             if not free_idx:
+                self._schedule_wake(s, min(free))
                 return
-            full = len(q) >= sc.batch
-            waited = self.now - q[0].stage_enter.get(s, q[0].arrival)
-            timeout = waited >= self._wait_bound(sc.batch)
-            if not (full or timeout):
-                return
-            k = min(sc.batch, len(q))
-            batch, q[:] = q[:k], q[k:]
+            if nq < sc.batch:
+                deadline = q.head_enter() + self._wait_bounds()[s]
+                if now < deadline - _EPS:
+                    self._schedule_timeout(s, deadline)
+                    return
+                k = nq
+            else:
+                k = sc.batch
+            batch, arrs = q.pop_batch(k)
+            nq -= k
             rep = free_idx[self.rr[s] % len(free_idx)]
             self.rr[s] += 1
-            lat = self._stage_latency(s, k)
-            done_t = self.now + lat
-            self.free_at[s][rep] = done_t
-            self._push(done_t, "done", (s, batch))
-
-    def _wait_bound(self, batch: int) -> float:
-        """Batch-formation timeout ~ worst-case queue delay (Eq. 7)."""
-        return min(self.max_wait, (batch - 1) / max(self.lam_est, 1e-6)) \
-            if batch > 1 else 0.0
+            done_t = now + self._stage_latency(s, k)
+            free[rep] = done_t
+            self.in_service += k
+            self._push(done_t, "done", (s, batch, arrs))
+            self._bump(s)
 
     def _handle(self, kind: str, payload) -> None:
         if kind == "arrive":
-            s, req = payload
-            req.stage_enter[s] = self.now
-            self.queues[s].append(req)
-            self._try_dispatch(s)
+            s, reqs, arrs = payload
+            q = self.queues[s]
+            if arrs is None:
+                for r in reqs:
+                    q.push(r, self.now)
+            else:
+                q.push_many(reqs, arrs, self.now)
+            if self.record_timeline:
+                for r in reqs:
+                    r.stage_enter[s] = self.now
+            d = len(q.reqs) - q.head
+            if d > self.peak_queue_depth:
+                self.peak_queue_depth = d
+            # fast path: the batch is still forming (not full), its head is
+            # unchanged and already has a live timeout armed, and nothing
+            # can have expired — this arrival cannot trigger a dispatch
+            if (d >= self._batch_of[s]
+                    or self._timeout_at[s] == _INF
+                    or self.now - q.min_arr > self._drop_thr):
+                self._try_dispatch(s)
         elif kind == "done":
-            s, batch = payload
-            for r in batch:
-                r.stage_exit[s] = self.now
-                if s + 1 < self.n_stages:
-                    self._push(self.now, "arrive", (s + 1, r))
-                else:
-                    r.done = self.now
-                    self.metrics.completed += 1
-                    self.metrics.latencies.append(r.latency)
-            self._try_dispatch(s)
-        elif kind == "tick":
+            s, batch, arrs = payload
+            self.in_service -= len(batch)
+            if self.record_timeline:
+                for r in batch:
+                    r.stage_exit[s] = self.now
+            if s + 1 < self.n_stages:
+                # synchronous handoff: the next-stage arrival is at this
+                # same instant, so deliver it directly instead of taking a
+                # round-trip through the heap
+                self._handle("arrive", (s + 1, batch, arrs))
+            else:
+                now = self.now
+                for r in batch:
+                    r.done = now
+                self.metrics.completed += len(batch)
+                self.metrics._lat.extend([now - a for a in arrs])
+            q = self.queues[s]
+            if len(q.reqs) > q.head:         # freed replica, waiting work
+                self._try_dispatch(s)
+        elif kind == "timeout":
+            s, gen = payload
+            if self._timeout_at[s] <= self.now + _EPS:
+                self._timeout_at[s] = _INF
+            if gen == self._gen[s]:          # else: superseded, ignore
+                q = self.queues[s]
+                if len(q.reqs) > q.head:
+                    self._try_dispatch(s)
+        elif kind == "wake":
             s = payload
-            self._try_dispatch(s)
+            if self._wake_at[s] <= self.now + _EPS:
+                self._wake_at[s] = _INF
+            q = self.queues[s]
+            if len(q.reqs) > q.head:
+                self._try_dispatch(s)
 
-    def run_until(self, t_end: float, tick: float = 0.05) -> None:
-        # periodic dispatch ticks let partially filled batches time out
-        t = self.now
-        while t < t_end:
-            t += tick
-            for s in range(self.n_stages):
-                self._push(t, "tick", s)
-        while self._events and self._events[0][0] <= t_end:
-            t, _, kind, payload = heapq.heappop(self._events)
-            self.now = max(self.now, t)
-            self._handle(kind, payload)
-        self.now = t_end
+    def run_until(self, t_end: float) -> None:
+        ev = self._events
+        inj = self._inj
+        if not self._inj_sorted:
+            # compact the consumed prefix BEFORE sorting, or processed
+            # arrivals would be shuffled back past the front pointer
+            if self._inj_i:
+                del inj[:self._inj_i]
+                self._inj_i = 0
+            inj.sort(key=lambda x: x[0])
+            self._inj_sorted = True
+        i = self._inj_i
+        n_inj = len(inj)
+        pop = heapq.heappop
+        while True:
+            t_inj = inj[i][0] if i < n_inj else _INF
+            if ev and ev[0][0] < t_inj:
+                t = ev[0][0]
+                if t > t_end:
+                    break
+                _, _, kind, payload = pop(ev)
+                self.events_processed += 1
+                if t > self.now:
+                    self.now = t
+                self._handle(kind, payload)
+            elif t_inj <= t_end:
+                # injection stream wins ties: matches the legacy ordering
+                # where arrivals were heap-pushed before any derived event
+                t, req = inj[i]
+                i += 1
+                self.events_processed += 1
+                if t > self.now:
+                    self.now = t
+                self._handle("arrive", (0, (req,), None))
+            else:
+                break
+        if i > 4096 and 2 * i >= n_inj:
+            del inj[:i]
+            i = 0
+        self._inj_i = i
+        if t_end > self.now:             # never rewind the event clock
+            self.now = t_end

@@ -27,6 +27,27 @@ def get_axis_rules() -> Optional[dict]:
     return _ACTIVE_RULES
 
 
+def _active_mesh_axes() -> Optional[Tuple[Tuple[str, ...], Tuple[int, ...]]]:
+    """(axis_names, axis_sizes) of the ambient mesh, or None when no mesh
+    is active.  Newer jax exposes ``jax.sharding.get_abstract_mesh``; older
+    releases track the ``with mesh:`` context in thread resources."""
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is not None:
+        mesh = get()
+        if mesh is None or mesh.empty:
+            return None
+        return tuple(mesh.axis_names), tuple(mesh.axis_sizes)
+    try:
+        from jax._src import mesh as _mesh_lib
+        mesh = _mesh_lib.thread_resources.env.physical_mesh
+    except Exception:
+        return None
+    if mesh is None or mesh.empty:
+        return None
+    return tuple(mesh.axis_names), tuple(mesh.shape[n]
+                                         for n in mesh.axis_names)
+
+
 def resolve(spec_names: Tuple[Optional[str], ...]) -> P:
     rules = _ACTIVE_RULES or {}
     out = []
@@ -48,10 +69,10 @@ def mesh_axis_size(logical: str) -> int:
     """Active-mesh size of a logical axis ("data"/"model"); 1 if no mesh."""
     if _ACTIVE_RULES is None:
         return 1
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    axes = _active_mesh_axes()
+    if axes is None:
         return 1
-    sizes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    sizes = dict(zip(*axes))
     out = 1
     for phys in _ACTIVE_RULES.get(logical, ()):
         out *= sizes.get(phys, 1)
@@ -65,14 +86,14 @@ def constrain(x: jax.Array, *names: Optional[str]) -> jax.Array:
     rank mismatch (helpers are reused at several ranks)."""
     if _ACTIVE_RULES is None:
         return x
-    mesh = jax.sharding.get_abstract_mesh()
-    if mesh is None or mesh.empty:
+    mesh_axes = _active_mesh_axes()
+    if mesh_axes is None:
         return x
     if getattr(x, "ndim", None) != len(names):
         return x
     spec = resolve(names)
     # drop axis names the current mesh lacks or whose size doesn't divide
-    axes = dict(zip(mesh.axis_names, mesh.axis_sizes))
+    axes = dict(zip(*mesh_axes))
 
     def keep(entry, dim):
         if entry is None:

@@ -1,0 +1,9 @@
+"""Version shims for jax API renames shared by all pallas kernels."""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+# jax renamed TPUCompilerParams -> CompilerParams; support both so the
+# kernels run on this container's jax and on newer releases unchanged
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or pltpu.TPUCompilerParams

@@ -283,8 +283,12 @@ def make_custom_mesh(spec: str):
     d, m = (int(x) for x in spec.split("x"))
     devs = np.array(jax.devices()[:d * m]).reshape(d, m)
     from jax.sharding import Mesh
-    return Mesh(devs, ("data", "model"),
-                axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+    from repro.launch.mesh import mesh_axis_types
+    at = mesh_axis_types(2)
+    if at is None:
+        return Mesh(devs, ("data", "model"))
+    return Mesh(devs, ("data", "model"), axis_types=at)
 
 
 def run_case(arch: str, shape_name: str, *, multi_pod: bool = False,

@@ -5,18 +5,30 @@ from __future__ import annotations
 import jax
 
 
+def mesh_axis_types(n: int):
+    """``jax.sharding.AxisType`` appeared with explicit sharding in newer
+    jax; on older releases meshes are implicitly Auto. Returns the
+    ``axis_types`` kwarg value, or None when the installed jax predates it."""
+    at = getattr(jax.sharding, "AxisType", None)
+    return (at.Auto,) * n if at is not None else None
+
+
+def make_mesh_compat(shape, axes):
+    """jax.make_mesh across jax versions with/without axis_types."""
+    at = mesh_axis_types(len(axes))
+    if at is None:
+        return jax.make_mesh(shape, axes)
+    return jax.make_mesh(shape, axes, axis_types=at)
+
+
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16x16 = 256 chips (data, model).
     Multi-pod: 2 pods x 256 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return make_mesh_compat(shape, axes)
 
 
 def make_local_mesh(data: int = 1, model: int = 1):
     """Small mesh over whatever devices exist (tests)."""
-    return jax.make_mesh(
-        (data, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return make_mesh_compat((data, model), ("data", "model"))

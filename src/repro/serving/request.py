@@ -8,7 +8,7 @@ from typing import Any, Dict, List, Optional
 _ids = itertools.count()
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class Request:
     arrival: float                       # seconds, pipeline ingress
     payload: Any = None                  # tokens (np.ndarray) or None (synthetic)

@@ -9,6 +9,9 @@ from repro.models import model as M
 from repro.training import data, optim
 from repro.training.train import make_train_step
 
+pytestmark = pytest.mark.slow  # jax model hot loops: run via `pytest -m slow`
+
+
 
 def _batch(cfg, b=2, s=32, rng=None):
     if rng is None:

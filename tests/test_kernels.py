@@ -6,6 +6,9 @@ import pytest
 
 from repro.kernels import ops, ref
 
+pytestmark = pytest.mark.slow  # jax model hot loops: run via `pytest -m slow`
+
+
 
 def _tol(dtype):
     return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \

@@ -13,6 +13,7 @@ from repro.models import model as M
 from repro.serving.request import Request
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("arch", ["gemma3-27b", "starcoder2-3b"])
 def test_sliding_window_ring_wraparound(arch):
     """Decode FAR past the sliding window: the ring buffer must overwrite
@@ -41,6 +42,7 @@ def test_sliding_window_ring_wraparound(arch):
     assert max(errs) < 2e-4, errs
 
 
+@pytest.mark.slow
 def test_mamba_state_long_horizon():
     """SSM decode over a horizon >> chunk size stays consistent."""
     cfg = configs.get_config("mamba2-2.7b", reduced=True)

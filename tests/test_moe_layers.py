@@ -3,12 +3,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.configs.base import MoEConfig
 from repro.models import layers as L
 from repro.models import moe as MO
+
+pytestmark = pytest.mark.slow  # jax model hot loops: run via `pytest -m slow`
+
 
 
 def _mcfg(e=4, k=2, cf=2.0):

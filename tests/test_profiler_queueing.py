@@ -1,8 +1,7 @@
 """Profiler (§4.2) + queueing (Eq. 7) + paper-profile fidelity tests."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import paper_profiles as PP
 from repro.core import profiler as PF

@@ -1,8 +1,7 @@
 """Discrete-event simulator invariants + adapter end-to-end behaviour."""
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+from _hypothesis_compat import given, settings, st
 
 from repro.core import adapter as AD
 from repro.core import optimizer as OPT

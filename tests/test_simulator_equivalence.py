@@ -1,0 +1,269 @@
+"""Event-driven simulator: old-vs-new equivalence, exact timeout
+scheduling, and structural invariants.
+
+The equivalence harness replays deterministic traces through both the
+event-driven core (``core.simulator``) and the frozen tick-based seed
+implementation (``core.simulator_legacy``) and requires *identical*
+completed/dropped counts — the contract that let the tick flood be deleted
+from the hot path.
+"""
+import numpy as np
+import pytest
+
+from repro.core import trace as TR
+from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
+                                 StageConfig, StageModel)
+from repro.core.queueing import wait_bound
+from repro.core.simulator import PipelineSimulator
+from repro.core.simulator_legacy import LegacyTickSimulator
+from repro.serving.request import Request
+
+
+def two_stage(lat1=0.05, lat2=0.03, extra_variant=False):
+    def var(name, l1, acc, alloc=1):
+        return ModelVariant(name, acc, alloc, (0.0, l1 * 0.7, l1 * 0.3))
+    v1 = (var("a0", lat1, 60.0),)
+    if extra_variant:
+        v1 = v1 + (var("a1", 2 * lat1, 75.0, alloc=2),)
+    s1 = StageModel("a", v1, sla=5 * lat1, batch_choices=(1, 2, 4))
+    s2 = StageModel("b", (var("b0", lat2, 70.0),), sla=5 * lat2,
+                    batch_choices=(1, 2, 4))
+    return PipelineModel("tiny", (s1, s2))
+
+
+def replay(cls, pipe, config, arrivals, horizon):
+    sim = cls(pipe, config)
+    for t in arrivals:
+        sim.inject(Request(arrival=float(t), sla=pipe.sla))
+    sim.run_until(horizon)
+    return sim
+
+
+# ---------------------------------------------------------------------------
+# old-vs-new equivalence (acceptance: >= 3 deterministic traces)
+# ---------------------------------------------------------------------------
+PIPE = two_stage()
+EQUIV_TRACES = {
+    # full batches, no pressure
+    "linspace_full": (PipelineConfig((StageConfig("a0", 4, 2),
+                                      StageConfig("b0", 2, 2))),
+                      np.linspace(0, 2, 64), 40.0),
+    # lone requests that must time out of a sub-filled batch
+    "sparse_timeout": (PipelineConfig((StageConfig("a0", 4, 1),
+                                       StageConfig("b0", 4, 1))),
+                       np.array([0.0, 3.0, 6.0, 9.0]), 30.0),
+    # heavy overload: the §4.5 drop policy does the work
+    "overload_drops": (PipelineConfig((StageConfig("a0", 1, 1),
+                                       StageConfig("b0", 1, 1))),
+                       TR.arrivals_from_rates(np.full(10, 50.0), seed=1),
+                       10 + 20 * PIPE.sla),
+    # moderate Poisson load with batching
+    "poisson_mid": (PipelineConfig((StageConfig("a0", 2, 3),
+                                    StageConfig("b0", 2, 2))),
+                    TR.arrivals_from_rates(np.full(20, 12.0), seed=4),
+                    20 + 100 * PIPE.sla),
+}
+
+
+@pytest.mark.parametrize("name", sorted(EQUIV_TRACES))
+def test_equivalent_counts_old_vs_new(name):
+    config, arrivals, horizon = EQUIV_TRACES[name]
+    new = replay(PipelineSimulator, PIPE, config, arrivals, horizon)
+    old = replay(LegacyTickSimulator, PIPE, config, arrivals, horizon)
+    assert new.metrics.completed == old.metrics.completed
+    assert new.metrics.dropped == old.metrics.dropped
+    assert new.metrics.arrived == old.metrics.arrived == len(arrivals)
+
+
+def test_new_core_schedules_far_fewer_events():
+    """The whole point: no tick flood.  On the sparse trace the legacy core
+    burns >1000 tick events; the event-driven one needs a few dozen."""
+    config, arrivals, horizon = EQUIV_TRACES["sparse_timeout"]
+    new = replay(PipelineSimulator, PIPE, config, arrivals, horizon)
+    old = replay(LegacyTickSimulator, PIPE, config, arrivals, horizon)
+    assert new.events_processed * 10 < old.events_processed
+
+
+# ---------------------------------------------------------------------------
+# exact timeout scheduling
+# ---------------------------------------------------------------------------
+def test_lone_request_dispatches_at_exact_wait_bound():
+    """A single queued request in a batch-4 stage leaves at precisely
+    stage_enter + wait_bound (Eq. 7 capped), not at the next 50 ms tick."""
+    pipe = two_stage()
+    cfg = PipelineConfig((StageConfig("a0", 4, 1), StageConfig("b0", 1, 1)))
+    sim = PipelineSimulator(pipe, cfg, record_timeline=True)
+    bound = wait_bound(4, sim.lam_est, sim.max_wait)
+    assert bound > 0.0
+    r = Request(arrival=1.0, sla=pipe.sla)
+    sim.inject(r)
+    sim.run_until(20.0)
+    l_a = float(pipe.stages[0].variants[0].latency(1))
+    l_b = float(pipe.stages[1].variants[0].latency(1))
+    assert r.stage_exit[0] == pytest.approx(1.0 + bound + l_a, abs=1e-9)
+    assert r.done == pytest.approx(1.0 + bound + l_a + l_b, abs=1e-9)
+    assert sim.metrics.completed == 1
+
+
+def test_full_batch_dispatches_immediately_stale_timeout_ignored():
+    """A batch that fills early leaves the moment the last request lands;
+    the timeout armed for the first request is superseded (generation
+    counter) and must not trigger a second, phantom dispatch."""
+    pipe = two_stage()
+    cfg = PipelineConfig((StageConfig("a0", 4, 1), StageConfig("b0", 1, 4)))
+    sim = PipelineSimulator(pipe, cfg, record_timeline=True)
+    arrivals = [0.0, 0.01, 0.02, 0.03]
+    reqs = [Request(arrival=t, sla=pipe.sla) for t in arrivals]
+    for r in reqs:
+        sim.inject(r)
+    sim.run_until(20.0)
+    l_a4 = float(pipe.stages[0].variants[0].latency(4))
+    # all four left stage 0 together, at the fill instant — well before the
+    # wait_bound deadline armed at t=0
+    exits = sorted(r.stage_exit[0] for r in reqs)
+    assert exits[0] == exits[-1]                      # one batch, one exit
+    assert exits[0] == pytest.approx(0.03 + l_a4, abs=1e-9)
+    assert 0.03 + l_a4 < wait_bound(4, sim.lam_est, sim.max_wait)
+    assert sim.metrics.completed == 4
+    assert sim.metrics.dropped == 0
+
+
+def test_second_wave_gets_fresh_timeout_after_early_dispatch():
+    """After an early full-batch dispatch, a later lone request must arm a
+    *new* timeout for itself (the stale one is gone, not inherited)."""
+    pipe = two_stage()
+    cfg = PipelineConfig((StageConfig("a0", 4, 2), StageConfig("b0", 1, 4)))
+    sim = PipelineSimulator(pipe, cfg, record_timeline=True)
+    wave1 = [Request(arrival=t, sla=pipe.sla) for t in
+             (0.0, 0.005, 0.01, 0.015)]
+    straggler = Request(arrival=0.1, sla=pipe.sla)
+    for r in wave1 + [straggler]:
+        sim.inject(r)
+    sim.run_until(20.0)
+    bound = wait_bound(4, sim.lam_est, sim.max_wait)
+    l_a = float(pipe.stages[0].variants[0].latency(1))
+    assert straggler.stage_exit[0] == pytest.approx(0.1 + bound + l_a,
+                                                    abs=1e-9)
+    assert sim.metrics.completed == 5
+
+
+# ---------------------------------------------------------------------------
+# structural invariants
+# ---------------------------------------------------------------------------
+def test_request_conservation_at_every_boundary():
+    """arrived-so-far == completed + dropped + queued + in-service at any
+    run_until boundary, and everything drains by the end."""
+    pipe = two_stage()
+    cfg = PipelineConfig((StageConfig("a0", 2, 2), StageConfig("b0", 2, 1)))
+    arrivals = TR.arrivals_from_rates(np.full(12, 18.0), seed=7)
+    sim = PipelineSimulator(pipe, cfg)
+    for t in arrivals:
+        sim.inject(Request(arrival=float(t), sla=pipe.sla))
+    for boundary in np.arange(0.5, 12.5, 0.5):
+        sim.run_until(float(boundary))
+        landed = int(np.sum(arrivals <= boundary))
+        m = sim.metrics
+        assert m.completed + m.dropped + sim.queued + sim.in_service \
+            == landed, boundary
+    sim.run_until(12 + 100 * pipe.sla)
+    m = sim.metrics
+    assert m.arrived == len(arrivals)
+    assert m.completed + m.dropped == m.arrived
+    assert sim.queued == 0 and sim.in_service == 0
+    assert len(m.latencies) == m.completed
+
+
+def test_event_clock_never_goes_backwards():
+    times = []
+
+    class Probe(PipelineSimulator):
+        def _handle(self, kind, payload):
+            times.append(self.now)
+            super()._handle(kind, payload)
+
+    pipe = two_stage()
+    cfg = PipelineConfig((StageConfig("a0", 4, 1), StageConfig("b0", 2, 1)))
+    arrivals = TR.arrivals_from_rates(np.full(8, 25.0), seed=2)
+    sim = Probe(pipe, cfg)
+    for t in arrivals:
+        sim.inject(Request(arrival=float(t), sla=pipe.sla))
+    # split across several run_until calls to cover boundary resumption
+    for b in (2.0, 4.0, 8.0, 8 + 50 * pipe.sla):
+        sim.run_until(b)
+    assert len(times) > 0
+    assert all(a <= b + 1e-12 for a, b in zip(times, times[1:]))
+    assert sim.metrics.completed + sim.metrics.dropped == len(arrivals)
+
+
+def test_out_of_order_inject_after_partial_run():
+    """A late, past-time injection between run_until calls must not
+    re-deliver already-processed arrivals or lose the new one (regression:
+    sorting the stream without compacting the consumed prefix)."""
+    pipe = two_stage()
+    cfg = PipelineConfig((StageConfig("a0", 1, 2), StageConfig("b0", 1, 2)))
+    sim = PipelineSimulator(pipe, cfg)
+    r1 = Request(arrival=5.0, sla=pipe.sla)
+    sim.inject(r1)
+    sim.run_until(10.0)
+    assert sim.metrics.completed == 1
+    r1_done = r1.done
+    r2 = Request(arrival=3.0, sla=pipe.sla)     # in the past, out of order
+    sim.inject(r2)
+    sim.run_until(20.0)
+    m = sim.metrics
+    assert m.arrived == 2
+    # r2 is 7 s stale when delivered -> the §4.5 drop policy takes it; what
+    # must NOT happen is r1 being re-delivered (and re-counted) or r2
+    # vanishing without a trace
+    assert m.completed + m.dropped == 2
+    assert r2.dropped or np.isfinite(r2.done)    # r2 accounted for
+    assert r1.done == r1_done                    # r1 untouched
+
+
+def test_lam_est_update_rearms_pending_timeout():
+    """Raising lam_est mid-wait must shorten an already-armed timeout (the
+    legacy core re-evaluated Eq. 7 every tick; the event core must re-arm)."""
+    pipe = two_stage()
+    cfg = PipelineConfig((StageConfig("a0", 4, 1), StageConfig("b0", 1, 1)))
+    sim = PipelineSimulator(pipe, cfg)          # lam_est=10 -> bound 0.3
+    r = Request(arrival=0.0, sla=pipe.sla)
+    sim.inject(r)
+    sim.run_until(0.05)                          # timeout armed at 0.3
+    sim.lam_est = 100.0                          # new bound: 3/100 = 0.03
+    sim.run_until(10.0)
+    l_a = float(pipe.stages[0].variants[0].latency(1))
+    l_b = float(pipe.stages[1].variants[0].latency(1))
+    # past-due under the new bound -> dispatches at the update instant
+    assert r.done == pytest.approx(0.05 + l_a + l_b, abs=1e-9)
+    # and the legacy core agrees (bound re-read at the next tick)
+    leg = LegacyTickSimulator(pipe, cfg)
+    r2 = Request(arrival=0.0, sla=pipe.sla)
+    leg.inject(r2)
+    leg.run_until(0.05)
+    leg.lam_est = 100.0
+    leg.run_until(10.0)
+    assert abs(r.done - r2.done) < 0.05 + 1e-9   # within one tick
+
+
+def test_reconfigure_shrink_keeps_soonest_free_replicas():
+    pipe = two_stage()
+    sim = PipelineSimulator(pipe, PipelineConfig(
+        (StageConfig("a0", 1, 3), StageConfig("b0", 1, 1))))
+    sim.free_at[0] = [5.0, 1.0, 3.0]
+    sim.reconfigure(PipelineConfig((StageConfig("a0", 1, 2),
+                                    StageConfig("b0", 1, 1))))
+    assert sorted(sim.free_at[0]) == [1.0, 3.0]
+
+
+def test_reconfigure_variant_switch_applies_cold_start():
+    pipe = two_stage(extra_variant=True)
+    sim = PipelineSimulator(pipe, PipelineConfig(
+        (StageConfig("a0", 1, 2), StageConfig("b0", 1, 1))),
+        variant_switch_delay=2.0)
+    sim.now = 1.0
+    sim.reconfigure(PipelineConfig((StageConfig("a1", 1, 3),
+                                    StageConfig("b0", 1, 1))))
+    # old replicas reload the model; the added one starts after the same delay
+    assert all(t == pytest.approx(3.0) for t in sim.free_at[0])
+    # unchanged stage untouched
+    assert sim.free_at[1] == [0.0]

@@ -15,6 +15,9 @@ from repro.serving.request import Request
 from repro.training import checkpoint, data, optim
 from repro.training.train import cross_entropy, train_loop
 
+pytestmark = pytest.mark.slow  # jax model hot loops: run via `pytest -m slow`
+
+
 
 def test_loss_decreases_in_short_training():
     cfg = configs.get_config("starcoder2-3b", reduced=True)
