@@ -179,7 +179,10 @@ def main() -> int:
           f"{core['legacy']['wall_s']}s ({core['legacy']['events']} events) "
           f"-> {core['speedup']}x, counts_match={core['counts_match']}")
 
-    floor = 1.5 if args.smoke else 5.0
+    # ratcheted in the cluster-co-scheduling PR: the reordered dispatch path
+    # (deadline check before replica scan) + hot-loop locals sustain ~6x
+    # full / ~9.5x smoke on this container; floors keep headroom
+    floor = 4.0 if args.smoke else 5.5
     if core["speedup"] < floor:
         print(f"FAIL: event-driven core speedup {core['speedup']}x "
               f"below the {floor}x floor")

@@ -1,0 +1,51 @@
+"""Cluster co-scheduling demo: three pipelines share one core pool, one
+event loop, one joint solver.
+
+Builds a 3-pipeline cluster with anti-correlated bursty traces (each
+pipeline spikes while the others idle) and replays it under the joint
+knapsack arbitration (``ipa``) and the proportional static split
+(``split_ipa``) at the same total core budget — the joint policy moves
+cores to whichever pipeline's burst buys the most accuracy per core.
+
+  PYTHONPATH=src python examples/cluster.py
+"""
+import sys
+import os
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+from bench_cluster import OBJ, anti_correlated_traces, make_cluster, \
+    pick_budget  # noqa: E402
+from repro.core import adapter as AD  # noqa: E402
+from repro.core.cluster import ClusterModel  # noqa: E402
+
+
+def main() -> None:
+    seconds, n_pipes = 180, 3
+    cluster0 = make_cluster(n_pipes)
+    rates = anti_correlated_traces(seconds, n_pipes)
+    budget = pick_budget(cluster0, rates)
+    cluster = ClusterModel(cluster0.name, cluster0.pipelines, float(budget))
+    names = [p.name for p in cluster.pipelines]
+    print(f"cluster of {n_pipes} pipelines ({', '.join(names)}), "
+          f"C={budget} shared cores, {seconds}s anti-correlated traces\n")
+
+    header = f"{'policy':12s} {'mean PAS':>9s} {'cost':>7s} {'dropped':>8s}  per-pipeline PAS"
+    print(header)
+    for pol in ("ipa", "split_ipa"):
+        res = AD.run_cluster_trace(cluster, rates, policy=pol, obj=OBJ,
+                                   seed=7)
+        per = " ".join(f"{name}={r.mean_pas:.1f}"
+                       for name, r in zip(names, res.per_pipeline))
+        print(f"{pol:12s} {res.mean_pas:9.2f} {res.mean_cost:7.1f} "
+              f"{res.dropped:8d}  {per}")
+    print("\n'ipa' arbitrates one Pareto frontier point per pipeline under"
+          "\nsum(cost) <= C; 'split_ipa' locks each pipeline into its"
+          "\ndemand-proportional share of C and plans alone inside it.")
+
+
+if __name__ == "__main__":
+    main()

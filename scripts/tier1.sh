@@ -1,6 +1,9 @@
 #!/usr/bin/env bash
-# Tier-1 gate: fast test loop + simulator perf smoke.
-# Fails loudly on test regressions AND on event-driven-core perf regressions.
+# Tier-1 gate: fast test loop + simulator perf smoke + cluster-arbitration
+# smoke.  Fails loudly on test regressions, on event-driven-core perf
+# regressions, and on the joint knapsack losing to the proportional
+# static split (which its feasible-set superset makes impossible unless
+# the arbitration layer is broken).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -8,3 +11,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
 python -m pytest -x -q
 python benchmarks/bench_simulator.py --smoke
+python benchmarks/bench_cluster.py --smoke

@@ -4,21 +4,29 @@
 discrete-event simulator at a fixed adaptation interval (paper: 8 s
 adaptation + <2 s decision = 10 s monitoring interval), recording
 per-interval PAS / cost and global latency / drop / SLA metrics.
+
+``run_cluster_trace`` is the cluster-level analogue: N per-pipeline rate
+traces drive one ``ClusterSimulator`` (one event heap, one shared core
+pool); at each boundary a cluster policy (joint knapsack, or proportional
+static split) proposes a joint configuration, infeasible pipelines hold
+the config the simulator is actually running, and the whole joint config
+is applied only if it fits the core budget.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
 
 from repro.core import baselines as BL
 from repro.core import optimizer as OPT
 from repro.core.accuracy import pas_of
+from repro.core.cluster import ClusterConfig, ClusterModel
 from repro.core.pipeline import PipelineConfig, PipelineModel
-from repro.core.simulator import PipelineSimulator
+from repro.core.simulator import ClusterSimulator, PipelineSimulator
 from repro.core.trace import arrivals_from_rates
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestPool
 
 ADAPT_INTERVAL = 10.0       # paper §5.3: 8 s adaptation + 2 s decision
 
@@ -95,7 +103,10 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
         sol = BL.fa2(pipe, lam0, "low", max_replicas=max_replicas)
     if not sol.feasible:
         raise RuntimeError(f"no feasible initial config for {policy}")
-    sim = PipelineSimulator(pipe, sol.config)
+    # requests never outlive their completion event here, so the simulator
+    # can recycle them through a pool instead of churning the allocator
+    pool = RequestPool()
+    sim = PipelineSimulator(pipe, sol.config, request_pool=pool)
     sim.lam_est = lam0
     records: List[IntervalRecord] = []
 
@@ -118,8 +129,8 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
             sim.reconfigure(sol.config)
             sim.lam_est = lam_hat
             cfg = sol.config
-        else:  # hold previous config
-            cfg = PipelineConfig(tuple(sim.configs))
+        else:  # hold the config the simulator is actually running
+            cfg = sim.current_config
         records.append(IntervalRecord(
             t=t0, lam_true=float(rates[int(t0):int(t1)].max()),
             lam_hat=float(lam_hat), pas=pas_of(cfg, pipe),
@@ -127,7 +138,7 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
             solve_time=sol.solve_time))
         # --- serve this interval -----------------------------------------
         while ti < len(times) and times[ti] < t1:
-            sim.inject(Request(arrival=float(times[ti]), sla=pipe.sla))
+            sim.inject(pool.acquire(float(times[ti]), pipe.sla))
             ti += 1
         sim.run_until(t1)
     # flush stragglers
@@ -150,3 +161,181 @@ def _decide(pipe, lam, policy, obj, max_replicas):
     if policy == "ipa":
         kw["obj"] = obj
     return fn(pipe, lam, **kw)
+
+
+# ---------------------------------------------------------------------------
+# cluster level
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class ClusterTraceResult:
+    """One cluster policy over N per-pipeline traces in one shared pool."""
+    policy: str
+    budget: float
+    per_pipeline: List[TraceResult]
+    sim_events: int = 0
+    peak_queue_depth: int = 0
+
+    @property
+    def mean_pas(self) -> float:
+        """Mean over pipelines of per-pipeline interval-mean PAS."""
+        return float(np.mean([r.mean_pas for r in self.per_pipeline]))
+
+    @property
+    def mean_cost(self) -> float:
+        """Interval-mean of the summed (cluster-wide) core allocation."""
+        return float(sum(r.mean_cost for r in self.per_pipeline))
+
+    def mean_objective(self, obj: OPT.Objective) -> float:
+        """Interval-mean summed alpha*PAS - beta*cost (the arbitration
+        objective, minus the negligible delta batch penalty that the
+        interval records do not carry)."""
+        return float(sum(obj.alpha * r.mean_pas - obj.beta * r.mean_cost
+                         for r in self.per_pipeline))
+
+    @property
+    def dropped(self) -> int:
+        return sum(r.dropped for r in self.per_pipeline)
+
+    @property
+    def completed(self) -> int:
+        return sum(r.completed for r in self.per_pipeline)
+
+    @property
+    def arrived(self) -> int:
+        return sum(r.arrived for r in self.per_pipeline)
+
+    def summary(self) -> Dict[str, object]:
+        return {
+            "policy": self.policy,
+            "budget": self.budget,
+            "mean_pas": round(self.mean_pas, 3),
+            "mean_cost": round(self.mean_cost, 2),
+            "dropped": self.dropped,
+            "completed": self.completed,
+            "per_pipeline": [r.summary() for r in self.per_pipeline],
+        }
+
+
+def reactive_demand(trace: np.ndarray, t0: float,
+                    interval: float = ADAPT_INTERVAL) -> float:
+    """Reactive (no-predictor) demand estimate at boundary ``t0``: max of
+    the last 20 s of past rates, bootstrapping from the first interval,
+    and 0 once the trace has ended (a finished pipeline must stop
+    competing for shared cores).  Shared with the cluster bench's
+    pointwise dominance gate so both always probe the same demand points.
+    """
+    i = int(t0)
+    if i >= len(trace):
+        return 0.0
+    if i == 0:
+        return float(trace[:int(interval)].max())
+    return float(trace[max(i - 20, 0):i].max())
+
+
+def _decide_cluster(cluster, lams, policy, obj, max_replicas):
+    try:
+        fn = BL.CLUSTER_POLICIES[policy]
+    except KeyError:
+        raise ValueError(policy) from None
+    return fn(cluster, lams, obj=obj, max_replicas=max_replicas)
+
+
+def run_cluster_trace(cluster: ClusterModel,
+                      rates: Sequence[np.ndarray],
+                      policy: str = "ipa",
+                      obj: Optional[OPT.Objective] = None,
+                      interval: float = ADAPT_INTERVAL, seed: int = 0,
+                      max_replicas: int = OPT.DEFAULT_MAX_REPLICAS
+                      ) -> ClusterTraceResult:
+    """Drive N per-pipeline rate traces through one ``ClusterSimulator``.
+
+    ``policy`` is a key of ``baselines.CLUSTER_POLICIES``: ``ipa`` (joint
+    knapsack arbitration) or ``split_{ipa,fa2_low,fa2_high,rim}``
+    (proportional static split).  At each adaptation boundary the policy
+    proposes per-pipeline configs from the reactive rate estimates; a
+    pipeline whose sub-solution is infeasible holds the config the
+    simulator is actually running (``pipeline_config``), and the mixed
+    joint config is applied only if it fits the shared core budget —
+    otherwise every pipeline holds.
+    """
+    rates = [np.asarray(r, np.float64) for r in rates]
+    if len(rates) != cluster.n_pipelines:
+        raise ValueError("one rate trace per pipeline required")
+    horizon = max(len(r) for r in rates)
+    times = [arrivals_from_rates(r, seed=seed + 1000003 * i)
+             for i, r in enumerate(rates)]
+
+    # bootstrap from the first-interval peaks; fall back to cheapest
+    # feasible (joint fa2-low split would still have to fit C, so use the
+    # joint solver with a pure-cost objective)
+    lam0 = [float(r[:int(interval)].max()) for r in rates]
+    sol = _decide_cluster(cluster, lam0, policy, obj, max_replicas)
+    if not sol.feasible:
+        sol = OPT.solve_cluster(
+            cluster, lam0, OPT.Objective(alpha=0.0, beta=1.0, delta=1e-6),
+            max_replicas=max_replicas)
+    if not sol.feasible:
+        raise RuntimeError(
+            f"no feasible initial cluster config for {policy} "
+            f"within budget {cluster.cores}")
+    pool = RequestPool()
+    sim = ClusterSimulator(cluster, sol.config, request_pool=pool)
+    for p, lam in enumerate(lam0):
+        sim.set_lam_est(p, lam)
+
+    records: List[List[IntervalRecord]] = [[] for _ in rates]
+    ti = [0] * len(rates)
+    n_intervals = int(np.ceil(horizon / interval))
+    for k in range(n_intervals):
+        t0, t1 = k * interval, min((k + 1) * interval, horizon)
+        # --- monitor + predict (reactive, past-only) ---------------------
+        lam_hat = [reactive_demand(r, t0, interval) for r in rates]
+        # --- optimize + arbitrate + reconfigure --------------------------
+        sol = _decide_cluster(cluster, lam_hat, policy, obj, max_replicas)
+        per = sol.per_pipeline if sol.per_pipeline else [
+            OPT._infeasible(0.0, sol.solver)] * cluster.n_pipelines
+        mixed = ClusterConfig(tuple(
+            s.config if s.feasible else sim.pipeline_config(p)
+            for p, s in enumerate(per)))
+        applied_ok = mixed.fits(cluster)
+        if applied_ok:
+            sim.reconfigure(mixed)
+            for p, (s, lh) in enumerate(zip(per, lam_hat)):
+                if s.feasible:
+                    sim.set_lam_est(p, lh)
+            applied = mixed
+        else:  # joint overflow: everyone holds
+            applied = sim.current_config
+        for p, pipe in enumerate(cluster.pipelines):
+            cfg = applied.pipelines[p]
+            seg = rates[p][int(t0):int(t1)]   # empty once a shorter
+            records[p].append(IntervalRecord(  # pipeline's trace has ended
+                t=t0, lam_true=float(seg.max()) if len(seg) else 0.0,
+                lam_hat=lam_hat[p], pas=pas_of(cfg, pipe),
+                cost=cfg.cost(pipe),
+                # feasible means "this interval's proposal was applied for
+                # this pipeline" — a hold-all overflow holds everyone
+                feasible=per[p].feasible and applied_ok,
+                solve_time=sol.solve_time))
+        # --- serve this interval -----------------------------------------
+        for p, (tt, pipe) in enumerate(zip(times, cluster.pipelines)):
+            i = ti[p]
+            while i < len(tt) and tt[i] < t1:
+                sim.inject(pool.acquire(float(tt[i]), pipe.sla), p)
+                i += 1
+            ti[p] = i
+        sim.run_until(t1)
+    # flush stragglers
+    sim.run_until(horizon + 4 * max(sim.sla_of))
+    results = []
+    for p, pipe in enumerate(cluster.pipelines):
+        m = sim.metrics_by_pipe[p]
+        results.append(TraceResult(
+            policy=policy, intervals=records[p],
+            latencies=np.array(m.latencies, dtype=np.float64),
+            arrived=m.arrived, completed=m.completed, dropped=m.dropped,
+            sla=pipe.sla))
+    return ClusterTraceResult(policy=policy, budget=float(cluster.cores),
+                              per_pipeline=results,
+                              sim_events=sim.events_processed,
+                              peak_queue_depth=sim.peak_queue_depth)

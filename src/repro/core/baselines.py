@@ -1,4 +1,5 @@
-"""Baseline policies from the paper's evaluation (§5.1).
+"""Baseline policies from the paper's evaluation (§5.1), plus their
+cluster-level variants (§6 discussion).
 
 * FA2 (Razavi et al., RTAS'22): optimal joint (batch, replicas) per stage for
   cost, but the model variant is FIXED.  FA2-low pins every stage to its
@@ -9,6 +10,13 @@
   static high value, batching added for fairness (as the paper does).  RIM
   maximizes accuracy subject to latency/throughput feasibility.
 
+Cluster level: the joint IPA policy (``cluster_ipa``) arbitrates one
+frontier point per pipeline under the shared core budget via the knapsack
+in ``optimizer.solve_cluster``; the static-split baselines
+(``cluster_split``) first divide the budget proportionally to per-pipeline
+demand and then run a per-pipeline policy inside each share — the
+INFaaS/InferLine-style strawman the joint solver has to beat.
+
 All baselines plan against the same queueing model the simulator enforces:
 ``core.queueing`` provides both the analytical Eq. 7 delay (used by the
 enumeration solver via ``PipelineConfig.latency``) and the batch-formation
@@ -18,9 +26,14 @@ simulation time.
 """
 from __future__ import annotations
 
-from typing import Optional
+import time
+from typing import Optional, Sequence
+
+import numpy as np
 
 from repro.core import optimizer as OPT
+from repro.core.cluster import (ClusterConfig, ClusterModel,
+                                proportional_split)
 from repro.core.pipeline import PipelineModel
 
 
@@ -55,4 +68,94 @@ POLICIES = {
     "fa2_low": lambda pipe, lam, **kw: fa2(pipe, lam, "low", **kw),
     "fa2_high": lambda pipe, lam, **kw: fa2(pipe, lam, "high", **kw),
     "rim": lambda pipe, lam, **kw: rim(pipe, lam, **kw),
+}
+
+
+# ---------------------------------------------------------------------------
+# cluster level
+# ---------------------------------------------------------------------------
+def _objective_of(sol: OPT.Solution, pipe: PipelineModel,
+                  obj: OPT.Objective) -> float:
+    """A feasible solution's objective re-evaluated under ``obj`` (fa2/rim
+    solve under their own internal weights)."""
+    from repro.core import accuracy as ACC
+    if obj.metric == "pas":
+        acc = sol.pas
+    elif obj.metric == "pas_prime":
+        acc = ACC.pas_prime_of(sol.config, pipe)
+    else:                                # log_pas: sum of log(a/100)
+        acc = float(np.log(max(sol.pas, 1e-9) / 100.0))
+    bat = sum(sc.batch for sc in sol.config.stages)
+    return obj.alpha * acc - obj.beta * sol.cost - obj.delta * bat
+
+
+def cluster_ipa(cluster: ClusterModel, lams: Sequence[float],
+                obj: Optional[OPT.Objective] = None,
+                max_replicas: int = OPT.DEFAULT_MAX_REPLICAS
+                ) -> OPT.ClusterSolution:
+    """Joint arbitration: one knapsack over per-pipeline Pareto frontiers
+    under the shared core budget."""
+    return OPT.solve_cluster(cluster, lams, obj or OPT.Objective(),
+                             max_replicas=max_replicas)
+
+
+def cluster_split(cluster: ClusterModel, lams: Sequence[float],
+                  inner: str = "ipa",
+                  obj: Optional[OPT.Objective] = None,
+                  max_replicas: int = OPT.DEFAULT_MAX_REPLICAS
+                  ) -> OPT.ClusterSolution:
+    """Proportional static split: pipeline i plans alone inside its demand
+    share ``C * lam_i / sum(lam)`` of the core budget.
+
+    ``inner`` picks the per-pipeline policy run inside each share: ``ipa``
+    (cost-capped frontier pick), ``fa2_low`` / ``fa2_high`` / ``rim``
+    (their usual solutions, rejected when they overflow the share).  A
+    pipeline whose share is infeasible holds its previous config at the
+    adapter level — its Solution comes back infeasible here.
+
+    All returned objectives (per-pipeline and summed) are re-expressed
+    under the caller's ``obj`` regardless of ``inner`` — fa2/rim solve
+    with their own internal weights, and their raw objectives would be
+    incommensurable with ``cluster_ipa``'s.
+    """
+    t0 = time.perf_counter()
+    o = obj or OPT.Objective()
+    caps = proportional_split(cluster, lams)
+    sols = []
+    for pipe, lam, cap in zip(cluster.pipelines, lams, caps):
+        if inner == "ipa":
+            sol = OPT.solve_capped(pipe, lam, o, cap, max_replicas)
+        elif inner in ("fa2_low", "fa2_high"):
+            sol = fa2(pipe, lam, inner.split("_")[1], max_replicas)
+            if sol.feasible and sol.cost > cap + 1e-9:
+                sol = OPT._infeasible(t0, "split_" + inner)
+            if sol.feasible:
+                sol.objective = _objective_of(sol, pipe, o)
+        elif inner == "rim":
+            sol = rim(pipe, lam, max_replicas=max_replicas)
+            if sol.feasible and sol.cost > cap + 1e-9:
+                sol = OPT._infeasible(t0, "split_rim")
+            if sol.feasible:
+                sol.objective = _objective_of(sol, pipe, o)
+        else:
+            raise ValueError(inner)
+        sols.append(sol)
+    feasible = all(s.feasible for s in sols)
+    cfg = (ClusterConfig(tuple(s.config for s in sols)) if feasible else None)
+    return OPT.ClusterSolution(
+        config=cfg, per_pipeline=sols,
+        objective=float(sum(s.objective for s in sols)) if feasible else -np.inf,
+        cost=float(sum(s.cost for s in sols if s.feasible)),
+        feasible=feasible, solve_time=time.perf_counter() - t0,
+        solver=f"split_{inner}")
+
+
+CLUSTER_POLICIES = {
+    "ipa": lambda cl, lams, **kw: cluster_ipa(cl, lams, **kw),
+    "split_ipa": lambda cl, lams, **kw: cluster_split(cl, lams, "ipa", **kw),
+    "split_fa2_low": lambda cl, lams, **kw: cluster_split(
+        cl, lams, "fa2_low", **kw),
+    "split_fa2_high": lambda cl, lams, **kw: cluster_split(
+        cl, lams, "fa2_high", **kw),
+    "split_rim": lambda cl, lams, **kw: cluster_split(cl, lams, "rim", **kw),
 }

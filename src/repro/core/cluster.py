@@ -1,0 +1,86 @@
+"""Cluster-level data model: multiple pipelines sharing one core pool.
+
+The paper plans each pipeline in isolation; its §6 discussion (and the
+cluster-level arbitration in INFaaS / InferLine) points at the production
+setting this module models: N linear pipelines contending for a single
+budget of ``cores`` (the paper's cost unit — CPU cores), where cost
+arbitration happens *across* pipelines.
+
+``ClusterModel`` is the static description (which pipelines, how many
+cores total); ``ClusterConfig`` is one joint configuration (one
+``PipelineConfig`` per pipeline) with a total-cost accessor and a budget
+check.  The single-pipeline stack is the N=1 special case throughout:
+``ClusterSimulator`` (core.simulator) runs every pipeline's stages in one
+event heap, and ``solve_cluster`` (core.optimizer) arbitrates per-pipeline
+Pareto frontiers under ``sum(cost) <= cores``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Sequence, Tuple
+
+from repro.core.pipeline import PipelineConfig, PipelineModel
+
+_COST_EPS = 1e-9
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterModel:
+    """N pipelines plus the shared core budget C they contend for."""
+    name: str
+    pipelines: Tuple[PipelineModel, ...]
+    cores: float = float("inf")          # shared budget C (inf = unbounded)
+
+    def __post_init__(self):
+        if not self.pipelines:
+            raise ValueError("a cluster needs at least one pipeline")
+
+    @property
+    def n_pipelines(self) -> int:
+        return len(self.pipelines)
+
+    def pipeline(self, name: str) -> PipelineModel:
+        for p in self.pipelines:
+            if p.name == name:
+                return p
+        raise KeyError(name)
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterConfig:
+    """One joint configuration: a PipelineConfig per pipeline, in order."""
+    pipelines: Tuple[PipelineConfig, ...]
+
+    def cost(self, cluster: ClusterModel) -> float:
+        """Total cores allocated across every pipeline's stages."""
+        if len(self.pipelines) != len(cluster.pipelines):
+            raise ValueError("config/cluster pipeline count mismatch")
+        return float(sum(cfg.cost(pipe) for cfg, pipe
+                         in zip(self.pipelines, cluster.pipelines)))
+
+    def fits(self, cluster: ClusterModel) -> bool:
+        """Does the joint allocation fit the shared budget C?"""
+        return self.cost(cluster) <= cluster.cores + _COST_EPS
+
+
+def single(pipe: PipelineModel, cores: float = float("inf")) -> ClusterModel:
+    """Wrap one pipeline as a cluster (the N=1 special case)."""
+    return ClusterModel(pipe.name, (pipe,), cores)
+
+
+def proportional_split(cluster: ClusterModel,
+                       demands: Sequence[float]) -> Tuple[float, ...]:
+    """Split the core budget proportionally to per-pipeline demand (RPS).
+
+    This is the static-split baseline's arbitration rule: pipeline i gets
+    ``C * lam_i / sum(lam)``; the joint solver instead trades cores across
+    pipelines by marginal objective gain.
+    """
+    if len(demands) != cluster.n_pipelines:
+        raise ValueError("one demand per pipeline required")
+    if cluster.cores == float("inf"):
+        return tuple(float("inf") for _ in demands)
+    total = float(sum(max(float(d), 0.0) for d in demands))
+    if total <= 0.0:
+        return tuple(cluster.cores / cluster.n_pipelines for _ in demands)
+    return tuple(cluster.cores * max(float(d), 0.0) / total for d in demands)

@@ -17,6 +17,16 @@ a total-latency budget" — which we solve three ways:
     weighting differs from alpha*PAS — documented).  Scales to the paper's
     Fig.-13 regime (10 stages x 10 models in < 2 s).
   * ``solve_brute`` -- plain-python oracle for the property tests.
+
+Cluster level (paper §6 discussion): ``pareto_frontier`` reduces one
+pipeline at one rate to its cost -> objective Pareto frontier (any
+off-frontier config is dominated and can never appear in an optimal joint
+allocation); ``solve_cluster`` then arbitrates one frontier point per
+pipeline under the shared core budget with an exact multiple-choice
+knapsack DP (costs are integral: replicas x base allocation).
+``solve_capped`` is the per-pipeline sub-problem the proportional
+static-split baselines run inside their budget share, and
+``solve_cluster_brute`` is the cross-product oracle for the tests.
 """
 from __future__ import annotations
 
@@ -31,7 +41,7 @@ import numpy as np
 from repro.core import accuracy as ACC
 from repro.core.pipeline import (PipelineConfig, PipelineModel, StageConfig,
                                  StageModel)
-from repro.core.queueing import queue_delay
+from repro.core.queueing import expected_wait, queue_delay
 
 DEFAULT_MAX_REPLICAS = 64
 
@@ -58,7 +68,17 @@ class StageOptions:
 
 
 def stage_options(stage: StageModel, arrival: float,
-                  max_replicas: int = DEFAULT_MAX_REPLICAS) -> StageOptions:
+                  max_replicas: int = DEFAULT_MAX_REPLICAS,
+                  latency_model: str = "worst_case") -> StageOptions:
+    """Flatten a stage's (variant, batch) grid with n* substituted.
+
+    ``latency_model``: ``"worst_case"`` keeps Eq. 7's bound (the default,
+    bit-identical to the original planner); ``"expected"`` opts into the
+    M/M/c-style mean delay (``core.queueing.expected_wait``) at the
+    substituted replica count n*.
+    """
+    if latency_model not in ("worst_case", "expected"):
+        raise ValueError(latency_model)
     names, batches, lat, cost, acc, accn, reps, feas = ([] for _ in range(8))
     norm = dict(zip((v.name for v in stage.variants),
                     ACC.rank_normalized([v.accuracy for v in stage.variants])))
@@ -69,7 +89,11 @@ def stage_options(stage: StageModel, arrival: float,
             ok = n <= max_replicas and n * h >= arrival - 1e-9
             names.append(v.name)
             batches.append(b)
-            lat.append(float(v.latency(b)) + float(queue_delay(b, arrival)))
+            svc = float(v.latency(b))
+            if latency_model == "expected":
+                lat.append(svc + float(expected_wait(b, arrival, n, svc)))
+            else:
+                lat.append(svc + float(queue_delay(b, arrival)))
             cost.append(n * v.base_alloc)
             acc.append(v.accuracy)
             accn.append(norm[v.name])
@@ -158,12 +182,14 @@ def _infeasible(t0, solver):
 def solve_enum(pipe: PipelineModel, arrival: float, obj: Objective = Objective(),
                max_replicas: int = DEFAULT_MAX_REPLICAS,
                restrict_variants=None, fixed_replicas=None,
-               chunk: int = 1 << 20) -> Solution:
+               chunk: int = 1 << 20,
+               latency_model: str = "worst_case") -> Solution:
     import jax
     import jax.numpy as jnp
 
     t0 = time.perf_counter()
-    opts = [stage_options(s, arrival, max_replicas) for s in pipe.stages]
+    opts = [stage_options(s, arrival, max_replicas, latency_model)
+            for s in pipe.stages]
     opts = _apply_restrictions(pipe, opts, restrict_variants, fixed_replicas,
                                arrival)
     S = len(opts)
@@ -217,9 +243,11 @@ def solve_enum(pipe: PipelineModel, arrival: float, obj: Objective = Objective()
 def solve_brute(pipe: PipelineModel, arrival: float,
                 obj: Objective = Objective(),
                 max_replicas: int = DEFAULT_MAX_REPLICAS,
-                restrict_variants=None, fixed_replicas=None) -> Solution:
+                restrict_variants=None, fixed_replicas=None,
+                latency_model: str = "worst_case") -> Solution:
     t0 = time.perf_counter()
-    opts = [stage_options(s, arrival, max_replicas) for s in pipe.stages]
+    opts = [stage_options(s, arrival, max_replicas, latency_model)
+            for s in pipe.stages]
     opts = _apply_restrictions(pipe, opts, restrict_variants, fixed_replicas,
                                arrival)
     best, best_v = None, -np.inf
@@ -247,12 +275,14 @@ def solve_brute(pipe: PipelineModel, arrival: float,
 def solve_milp(pipe: PipelineModel, arrival: float,
                obj: Objective = Objective(metric="pas_prime"),
                max_replicas: int = DEFAULT_MAX_REPLICAS,
-               restrict_variants=None, fixed_replicas=None) -> Solution:
+               restrict_variants=None, fixed_replicas=None,
+               latency_model: str = "worst_case") -> Solution:
     from scipy import optimize as sopt
     from scipy import sparse
 
     t0 = time.perf_counter()
-    opts = [stage_options(s, arrival, max_replicas) for s in pipe.stages]
+    opts = [stage_options(s, arrival, max_replicas, latency_model)
+            for s in pipe.stages]
     opts = _apply_restrictions(pipe, opts, restrict_variants, fixed_replicas,
                                arrival)
     metric = obj.metric if obj.metric != "pas" else "log_pas"
@@ -300,3 +330,244 @@ def solve(pipe: PipelineModel, arrival: float, obj: Objective = Objective(),
         solver = "enum" if combos <= (1 << 23) else "milp"
     fn = {"enum": solve_enum, "brute": solve_brute, "milp": solve_milp}[solver]
     return fn(pipe, arrival, obj, **kw)
+
+
+# ---------------------------------------------------------------------------
+# cluster level: per-pipeline cost -> objective Pareto frontiers, arbitrated
+# by a multiple-choice knapsack under the shared core budget
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class FrontierPoint:
+    """One Pareto-optimal (cost, objective) operating point of a pipeline."""
+    cost: float                 # integer-valued: sum_s n*_s x R_m
+    objective: float            # alpha*acc - beta*cost - delta*batches
+    pas: float
+    latency: float
+    config: PipelineConfig
+
+
+def _combo_eval(pipe: PipelineModel, arrival: float, obj: Objective,
+                max_replicas: int, latency_model: str,
+                max_combos: int = 1 << 22):
+    """Vectorized evaluation of the full per-pipeline option cross-product.
+
+    Returns (opts, feasible-combo indices as per-stage pick columns, cost,
+    objective, pas) over feasible combos only.  Shared by the frontier
+    builder and the brute cluster oracle.
+    """
+    opts = [stage_options(s, arrival, max_replicas, latency_model)
+            for s in pipe.stages]
+    sizes = [len(o.names) for o in opts]
+    K = math.prod(sizes)
+    if K > max_combos:
+        raise ValueError(f"pipeline {pipe.name}: {K} combos exceed the "
+                         f"frontier cap {max_combos}; use fewer options")
+    idx = np.arange(K)
+    picks = []
+    radix = 1
+    lat_tot = np.zeros(K)
+    cost_tot = np.zeros(K)
+    acc_tot = np.zeros(K)
+    pas_log_tot = np.zeros(K)
+    bat_tot = np.zeros(K)
+    ok = np.ones(K, dtype=bool)
+    for o, j_size in zip(opts, sizes):
+        js = (idx // radix) % j_size
+        picks.append(js)
+        radix *= j_size
+        lat_tot += o.lat[js]
+        cost_tot += o.cost[js]
+        pas_term = _acc_term(o, "pas")[js]
+        pas_log_tot += pas_term
+        acc_tot += (pas_term if obj.metric == "pas"
+                    else _acc_term(o, obj.metric)[js])
+        bat_tot += o.batches[js].astype(np.float64)
+        ok &= o.feasible[js]
+    ok &= lat_tot <= pipe.sla
+    acc_val = _combine_acc(acc_tot, obj.metric)
+    score = obj.alpha * acc_val - obj.beta * cost_tot - obj.delta * bat_tot
+    pas_val = 100.0 * np.exp(pas_log_tot)
+    keep = np.flatnonzero(ok)
+    return (opts, [js[keep] for js in picks], cost_tot[keep], score[keep],
+            pas_val[keep], lat_tot[keep])
+
+
+def _point_config(opts, picks, i) -> PipelineConfig:
+    return PipelineConfig(tuple(
+        StageConfig(o.names[js[i]], int(o.batches[js[i]]),
+                    int(o.replicas[js[i]]))
+        for o, js in zip(opts, picks)))
+
+
+def pareto_frontier(pipe: PipelineModel, arrival: float,
+                    obj: Objective = Objective(),
+                    max_replicas: int = DEFAULT_MAX_REPLICAS,
+                    latency_model: str = "worst_case") -> List[FrontierPoint]:
+    """Cost -> objective Pareto frontier of one pipeline at one rate.
+
+    Points come back sorted by ascending cost with strictly increasing
+    objective — any config off this frontier is dominated (same or less
+    cost, same or better objective exists) and can never appear in an
+    optimal joint allocation, which is what lets the cluster arbitration
+    run a small knapsack per pipeline instead of the full cross-product.
+    """
+    opts, picks, cost, score, pas_v, lat = _combo_eval(
+        pipe, arrival, obj, max_replicas, latency_model)
+    if len(cost) == 0:
+        return []
+    order = np.lexsort((-score, cost))
+    points: List[FrontierPoint] = []
+    best = -np.inf
+    for i in order:
+        if score[i] > best + 1e-12:
+            best = float(score[i])
+            points.append(FrontierPoint(
+                cost=float(cost[i]), objective=best, pas=float(pas_v[i]),
+                latency=float(lat[i]),
+                config=_point_config(opts, picks, int(i))))
+    return points
+
+
+def solve_capped(pipe: PipelineModel, arrival: float,
+                 obj: Objective = Objective(), cost_cap: float = np.inf,
+                 max_replicas: int = DEFAULT_MAX_REPLICAS,
+                 latency_model: str = "worst_case") -> Solution:
+    """Best per-pipeline config whose cost fits ``cost_cap`` (the
+    static-split baselines' per-pipeline sub-problem)."""
+    t0 = time.perf_counter()
+    pts = [p for p in pareto_frontier(pipe, arrival, obj, max_replicas,
+                                      latency_model)
+           if p.cost <= cost_cap + 1e-9]
+    if not pts:
+        return _infeasible(t0, "capped")
+    best = pts[-1]                       # frontier objective is increasing
+    return Solution(best.config, best.objective, best.pas, best.cost,
+                    best.latency, time.perf_counter() - t0, True, "capped")
+
+
+@dataclasses.dataclass
+class ClusterSolution:
+    """Joint allocation: one frontier point per pipeline under sum(cost) <= C."""
+    config: Optional["ClusterConfig"]
+    per_pipeline: List[Solution]
+    objective: float                     # summed alpha*PAS - beta*cost - ...
+    cost: float
+    feasible: bool
+    solve_time: float
+    solver: str
+
+    @property
+    def pas_values(self) -> List[float]:
+        return [s.pas for s in self.per_pipeline]
+
+
+def _cluster_solution(cluster, chosen: List[FrontierPoint], t0, solver):
+    from repro.core.cluster import ClusterConfig
+    sols = [Solution(p.config, p.objective, p.pas, p.cost, p.latency,
+                     0.0, True, solver) for p in chosen]
+    return ClusterSolution(
+        config=ClusterConfig(tuple(p.config for p in chosen)),
+        per_pipeline=sols,
+        objective=float(sum(p.objective for p in chosen)),
+        cost=float(sum(p.cost for p in chosen)),
+        feasible=True, solve_time=time.perf_counter() - t0, solver=solver)
+
+
+def _cluster_infeasible(cluster, t0, solver):
+    return ClusterSolution(None, [], -np.inf, 0.0, False,
+                           time.perf_counter() - t0, solver)
+
+
+def solve_cluster(cluster, arrivals: Sequence[float],
+                  obj: Objective = Objective(),
+                  budget: Optional[float] = None,
+                  max_replicas: int = DEFAULT_MAX_REPLICAS,
+                  latency_model: str = "worst_case") -> ClusterSolution:
+    """Joint arbitration: pick one frontier point per pipeline maximizing
+    the summed objective under ``sum(cost) <= budget`` (default: the
+    cluster's core budget C).
+
+    Costs are integral (replicas x base allocation), so the multiple-choice
+    knapsack runs as an exact DP over budgets 0..C: processing pipelines in
+    order, ``dp[b]`` is the best summed objective of a prefix fitting in
+    ``b`` cores.  ``dp`` stays monotone in ``b`` by induction, which makes
+    the backtrack (walk budgets backwards through each pipeline's pick
+    table) exact.
+    """
+    t0 = time.perf_counter()
+    if budget is None:
+        budget = cluster.cores
+    frontiers = [pareto_frontier(p, lam, obj, max_replicas, latency_model)
+                 for p, lam in zip(cluster.pipelines, arrivals)]
+    if any(not f for f in frontiers):
+        return _cluster_infeasible(cluster, t0, "cluster_knap")
+    if not np.isfinite(budget):
+        # unbounded pool: each pipeline takes its own best point
+        chosen = [f[-1] for f in frontiers]
+        return _cluster_solution(cluster, chosen, t0, "cluster_knap")
+
+    B = int(np.floor(budget + 1e-9))
+    costs = [[int(round(p.cost)) for p in f] for f in frontiers]
+    dp = np.zeros(B + 1)
+    pick_tabs: List[np.ndarray] = []
+    for f, cs in zip(frontiers, costs):
+        cur = np.full(B + 1, -np.inf)
+        pick = np.full(B + 1, -1, dtype=np.int64)
+        for j, (c, p) in enumerate(zip(cs, f)):
+            if c > B:
+                continue
+            cand = dp[:B + 1 - c] + p.objective
+            seg = cur[c:]
+            sel = pick[c:]
+            better = cand > seg
+            seg[better] = cand[better]
+            sel[better] = j
+        pick_tabs.append(pick)
+        dp = cur
+    if not np.isfinite(dp[B]):
+        return _cluster_infeasible(cluster, t0, "cluster_knap")
+    b = B
+    chosen_rev: List[FrontierPoint] = []
+    for f, cs, pick in zip(reversed(frontiers), reversed(costs),
+                           reversed(pick_tabs)):
+        j = int(pick[b])
+        if j < 0:
+            return _cluster_infeasible(cluster, t0, "cluster_knap")
+        chosen_rev.append(f[j])
+        b -= cs[j]
+    return _cluster_solution(cluster, list(reversed(chosen_rev)), t0,
+                             "cluster_knap")
+
+
+def solve_cluster_brute(cluster, arrivals: Sequence[float],
+                        obj: Objective = Objective(),
+                        budget: Optional[float] = None,
+                        max_replicas: int = DEFAULT_MAX_REPLICAS,
+                        latency_model: str = "worst_case") -> ClusterSolution:
+    """Oracle: exhaustive cross-product over every pipeline's full feasible
+    config set (not just the frontier) — validates both the frontier
+    construction and the knapsack on toy clusters."""
+    t0 = time.perf_counter()
+    if budget is None:
+        budget = cluster.cores
+    tables = []
+    for pipe, lam in zip(cluster.pipelines, arrivals):
+        opts, picks, cost, score, pas_v, lat = _combo_eval(
+            pipe, lam, obj, max_replicas, latency_model)
+        if len(cost) == 0:
+            return _cluster_infeasible(cluster, t0, "cluster_brute")
+        tables.append([FrontierPoint(float(cost[i]), float(score[i]),
+                                     float(pas_v[i]), float(lat[i]),
+                                     _point_config(opts, picks, i))
+                       for i in range(len(cost))])
+    best_v, best = -np.inf, None
+    for combo in itertools.product(*tables):
+        tot_c = sum(p.cost for p in combo)
+        if tot_c > budget + 1e-9:
+            continue
+        v = sum(p.objective for p in combo)
+        if v > best_v:
+            best_v, best = v, combo
+    if best is None:
+        return _cluster_infeasible(cluster, t0, "cluster_brute")
+    return _cluster_solution(cluster, list(best), t0, "cluster_brute")

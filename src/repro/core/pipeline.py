@@ -86,13 +86,26 @@ class PipelineConfig:
             sc.replicas * st.variant(sc.variant).base_alloc
             for sc, st in zip(self.stages, pipe.stages)))
 
-    def latency(self, pipe: PipelineModel, arrival: float) -> float:
-        """End-to-end model latency + worst-case queueing (Eq. 7 + 10b)."""
-        from repro.core.queueing import queue_delay
+    def latency(self, pipe: PipelineModel, arrival: float,
+                latency_model: str = "worst_case") -> float:
+        """End-to-end model latency + queueing delay (Eq. 7 + 10b).
+
+        ``latency_model``: ``"worst_case"`` (default — Eq. 7's bound,
+        bit-identical to the paper's planner) or ``"expected"`` (mean
+        batch-formation wait + M/M/c Erlang-C wait across the stage's
+        configured replicas; see ``core.queueing.expected_wait``).
+        """
+        from repro.core.queueing import expected_wait, queue_delay
         tot = 0.0
         for sc, st in zip(self.stages, pipe.stages):
             v = st.variant(sc.variant)
-            tot += float(v.latency(sc.batch)) + queue_delay(sc.batch, arrival)
+            svc = float(v.latency(sc.batch))
+            if latency_model == "expected":
+                tot += svc + expected_wait(sc.batch, arrival, sc.replicas, svc)
+            elif latency_model == "worst_case":
+                tot += svc + queue_delay(sc.batch, arrival)
+            else:
+                raise ValueError(latency_model)
         return tot
 
     def supports(self, pipe: PipelineModel, arrival: float) -> bool:

@@ -1,7 +1,13 @@
-"""Queueing model (paper Eq. 7, from FA2): worst-case batch-formation delay.
+"""Queueing model (paper Eq. 7, from FA2): worst-case batch-formation delay,
+plus an opt-in expected-delay model (M/M/c-style).
 
 The first request of a batch waits for the remaining (b - 1) requests; at
-arrival rate lambda the worst case is q(b) = (b - 1) / lambda.
+arrival rate lambda the worst case is q(b) = (b - 1) / lambda.  That bound
+is what the paper plans against; ``expected_wait`` instead estimates the
+*expected* delay (mean batch-formation wait + Erlang-C queue wait across
+the stage's replicas), selected by ``latency_model="expected"`` in
+``optimizer.stage_options`` / ``PipelineConfig.latency``.  The default
+(worst-case) path is untouched.
 
 Both the analytical planner (``PipelineConfig.latency`` -> ``queue_delay``)
 and the discrete-event simulator (batch-formation timeout ->
@@ -21,6 +27,47 @@ def queue_delay(batch, arrival_rps) -> np.ndarray:
     batch = np.asarray(batch, dtype=np.float64)
     lam = max(float(arrival_rps), 1e-9)
     return (batch - 1.0) / lam
+
+
+def expected_wait(batch: int, arrival_rps: float, replicas: int = 1,
+                  service_time: Optional[float] = None) -> float:
+    """Expected batch-formation + queue delay (M/M/c-style).
+
+    Batch formation: a random request in a forming batch of ``b`` waits on
+    average for the later ``(b - 1) / 2`` of its peers, so the mean wait is
+    ``(b - 1) / (2 lambda)`` — exactly half of Eq. 7's worst case (the head
+    request waiting for all ``b - 1``), hence always <= ``queue_delay``.
+
+    Queue delay (only when ``service_time`` is given): formed batches
+    arrive ~Poisson at ``lambda / b`` and are served by ``replicas``
+    servers each taking ``service_time`` per batch; the expected wait is
+    the M/M/c Erlang-C formula.  Returns ``inf`` when the stage is
+    unstable (offered load >= replicas), which feasibility masks treat as
+    a latency violation.
+    """
+    b = int(batch)
+    lam = max(float(arrival_rps), 1e-9)
+    form = (b - 1) / (2.0 * lam)
+    if service_time is None:
+        return form
+    st = float(service_time)
+    if st <= 0.0:
+        return form
+    c = max(int(replicas), 1)
+    lam_b = lam / max(b, 1)              # batch arrival rate
+    mu = 1.0 / st                        # per-server batch service rate
+    a = lam_b / mu                       # offered load (erlangs)
+    if a >= c:
+        return float("inf")
+    # Erlang C, computed iteratively to stay overflow-free at large c
+    term = 1.0
+    s = 1.0                              # sum_{k=0}^{c-1} a^k / k!
+    for k in range(1, c):
+        term *= a / k
+        s += term
+    top = term * a / c * c / (c - a)     # a^c / c! * c / (c - a)
+    p_wait = top / (s + top)
+    return form + p_wait / (c * mu - lam_b)
 
 
 def wait_bound(batch: int, arrival_rps: float,

@@ -1,9 +1,17 @@
-"""Event-driven simulator of a multi-stage inference pipeline (paper §3:
+"""Event-driven simulator of multi-stage inference pipelines (paper §3:
 "a discrete event simulator uses these profiling data to estimate the
 end-to-end latency and throughput of the pipeline based on the number of
 replicas, model variants, and batch sizes at each stage").
 
-Per stage: one central queue (batch formation) feeding `n_s` replicas
+The core is cluster-general: ``ClusterSimulator`` runs the stages of N
+pipelines (a ``ClusterModel`` sharing one core budget C) in **one event
+heap**, with per-pipeline metrics and a shared-pool replica ledger — a
+reconfigure that grows one pipeline must fit inside C minus the other
+pipelines' current allocations, else ``CoreBudgetExceeded``.
+``PipelineSimulator`` is the N=1 special case and keeps the original
+single-pipeline API (``metrics``, ``lam_est``, ``reconfigure(PipelineConfig)``).
+
+Per stage: one central queue (batch formation) feeding ``n_s`` replicas
 round-robin; service time of a batch of size k under variant m is the
 profiled quadratic l_m(k).  Implements the §4.5 dropping policy: requests
 whose age exceeds drop_factor x SLA_P are dropped at batch formation.
@@ -17,9 +25,9 @@ event carries a per-stage generation counter so that when the batch
 dispatches early (filled up, or flushed by an upstream completion) the
 stale timeout is ignored on pop instead of being searched for and removed
 from the heap.  A dispatch blocked on busy/cold-starting replicas arms a
-``wake`` event at the soonest replica-free time.  Per-dispatch drop scans
-and latency accumulation run vectorized over numpy buffers that parallel
-the per-stage queues.
+``wake`` event at the soonest replica-free time.  Per-dispatch drop scans,
+latency accumulation and the per-stage ``free_at`` replica scan all run
+vectorized over numpy buffers/arrays that parallel the per-stage queues.
 """
 from __future__ import annotations
 
@@ -29,12 +37,21 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core.cluster import ClusterConfig, ClusterModel, single
 from repro.core.pipeline import PipelineConfig, PipelineModel, StageConfig
 from repro.core.queueing import wait_bound
-from repro.serving.request import Request
+from repro.serving.request import Request, RequestPool
 
 _EPS = 1e-12
 _INF = float("inf")
+# replica-fleet size beyond which the free_at dispatch scan lifts the ready
+# times into an ndarray: below this, python list scans beat numpy's per-op
+# overhead (same tradeoff as the _StageQueue columns)
+_NP_SCAN_MIN = 24
+
+
+class CoreBudgetExceeded(RuntimeError):
+    """A reconfigure asked for more cores than the shared pool has left."""
 
 
 class _FloatBuf:
@@ -184,12 +201,23 @@ class _StageQueue:
         return dropped
 
 
-class PipelineSimulator:
-    def __init__(self, pipe: PipelineModel, config: PipelineConfig,
+class ClusterSimulator:
+    """All pipelines of a ``ClusterModel`` in one event heap.
+
+    Stages are flattened to global indices (pipeline p's stage i at
+    ``_first[p] + i``); every per-stage structure (queue, replica
+    ``free_at`` array, generation counter, timeout/wake markers) is one
+    flat list over global stages, so the event machinery is exactly the
+    single-pipeline machinery run over a larger index space.  Metrics,
+    arrival-rate estimates and drop thresholds are per-pipeline.
+    """
+
+    def __init__(self, cluster: ClusterModel, config: ClusterConfig,
                  drop_factor: float = 2.0, max_wait: float = 0.5,
                  seed: int = 0, variant_switch_delay: float = 0.0,
                  scale_up_delay: float = 0.0,
-                 record_timeline: bool = False):
+                 record_timeline: bool = False,
+                 request_pool: Optional[RequestPool] = None):
         """``variant_switch_delay``: cold-start of a stage whose model
         variant changed (container pull + model load; the paper reports an
         ~8 s adaptation process and mitigates pull time with MinIO).
@@ -197,36 +225,84 @@ class PipelineSimulator:
         ``record_timeline``: also fill each request's per-stage
         ``stage_enter``/``stage_exit`` dicts (debug/inspection; the hot
         path skips these dict writes — aggregate metrics, drop marks and
-        ``done`` stamps are always recorded)."""
-        self.pipe = pipe
-        self.n_stages = len(pipe.stages)
-        self.configs: List[StageConfig] = list(config.stages)
+        ``done`` stamps are always recorded).
+        ``request_pool``: when set, completed/dropped requests are released
+        back to the pool at their terminal event — callers that keep
+        references to injected requests must not pass a pool."""
+        if len(config.pipelines) != len(cluster.pipelines):
+            raise ValueError("config/cluster pipeline count mismatch")
+        self.cluster = cluster
+        self.n_pipelines = len(cluster.pipelines)
+        self.core_budget = float(cluster.cores)
         self.drop_factor = drop_factor
         self.max_wait = max_wait
         self.variant_switch_delay = variant_switch_delay
         self.scale_up_delay = scale_up_delay
         self.record_timeline = record_timeline
+        self._pool = request_pool
+
+        # ---- flatten stages to global indices ---------------------------
+        self._stage_models = []              # StageModel per global stage
+        self._pipe_of: List[int] = []        # owning pipeline per stage
+        self._next: List[int] = []           # next global stage (-1 = sink)
+        self._first: List[int] = []          # entry stage per pipeline
+        self._stages_of: List[range] = []    # global stage range per pipeline
+        for pipe in cluster.pipelines:
+            base = len(self._stage_models)
+            ns = len(pipe.stages)
+            self._first.append(base)
+            self._stages_of.append(range(base, base + ns))
+            for i, st in enumerate(pipe.stages):
+                self._stage_models.append(st)
+                self._pipe_of.append(len(self._first) - 1)
+                self._next.append(base + i + 1 if i + 1 < ns else -1)
+        self.n_stages = len(self._stage_models)
+
+        self.configs: List[StageConfig] = []
+        for cfg in config.pipelines:
+            self.configs.extend(cfg.stages)
+        if len(self.configs) != self.n_stages:
+            raise ValueError("config/pipeline stage count mismatch")
+
         self.queues: List[_StageQueue] = [
             _StageQueue() for _ in range(self.n_stages)]
+        # per-stage replica ready times; plain lists like the queue columns
+        # (replica fleets are usually small, python beats numpy's per-op
+        # overhead) — the dispatch scan lifts to a vectorized ndarray pass
+        # only past _NP_SCAN_MIN replicas, where batching wins
         self.free_at: List[List[float]] = [
             [0.0] * sc.replicas for sc in self.configs]
         self.rr: List[int] = [0] * self.n_stages
         self.now = 0.0
-        self.metrics = SimMetrics()
+
+        # ---- per-pipeline control/metrics state -------------------------
+        self.metrics_by_pipe: List[SimMetrics] = [
+            SimMetrics() for _ in range(self.n_pipelines)]
+        self.sla_of: List[float] = [p.sla for p in cluster.pipelines]
+        self._lam_of: List[float] = [10.0] * self.n_pipelines
+        # shared-pool replica ledger: cores currently allocated per pipeline
+        self._alloc: List[float] = [
+            cfg.cost(pipe) for cfg, pipe
+            in zip(config.pipelines, cluster.pipelines)]
+        if sum(self._alloc) > self.core_budget + 1e-9:
+            raise CoreBudgetExceeded(
+                f"initial config needs {sum(self._alloc)} cores, "
+                f"budget is {self.core_budget}")
+
         self._events: List[Tuple[float, int, str, object]] = []
         self._seq = itertools.count()
         # injections bypass the heap: adapter/benchmark workloads inject in
         # (near-)sorted time order, so arrivals live in a sorted list
         # consumed by a front pointer and merged with the heap in run_until
-        self._inj: List[Tuple[float, Request]] = []
+        self._inj: List[Tuple[float, int, Request]] = []
         self._inj_i = 0
         self._inj_sorted = True
-        # hot-path caches: SLA_P and drop threshold are config constants;
-        # per-batch service latency and wait bounds change only on
-        # reconfigure / lam_est updates
-        self.sla_p = pipe.sla
-        self._drop_thr = drop_factor * self.sla_p
-        self._lam_est = 10.0
+        # hot-path caches: SLA_P and drop threshold are per-pipeline config
+        # constants (flattened per-stage for the dispatch path); per-batch
+        # service latency and wait bounds change only on reconfigure /
+        # lam_est updates
+        self._drop_thr_s: List[float] = [
+            drop_factor * self.sla_of[p] for p in self._pipe_of]
         self._lat_tab: List[List[float]] = []
         self._wb: Optional[List[float]] = None
         self._refresh_lat_tab()
@@ -240,8 +316,26 @@ class PipelineSimulator:
         self.in_service = 0
 
     # -- control plane --------------------------------------------------
-    def reconfigure(self, config: PipelineConfig) -> None:
-        for s, sc in enumerate(config.stages):
+    def reconfigure_pipeline(self, p: int, config: PipelineConfig,
+                             _check_budget: bool = True) -> None:
+        """Reconfigure one pipeline inside the shared core pool.
+
+        The new allocation must fit in ``core_budget`` minus the other
+        pipelines' current allocations (the replica ledger); a violating
+        request raises ``CoreBudgetExceeded`` and changes nothing.
+        """
+        pipe = self.cluster.pipelines[p]
+        if len(config.stages) != len(pipe.stages):
+            raise ValueError("config/pipeline stage count mismatch")
+        new_cost = config.cost(pipe)
+        if _check_budget:
+            others = sum(self._alloc) - self._alloc[p]
+            if others + new_cost > self.core_budget + 1e-9:
+                raise CoreBudgetExceeded(
+                    f"pipeline {p} wants {new_cost} cores but only "
+                    f"{self.core_budget - others} of {self.core_budget} "
+                    f"are unallocated")
+        for s, sc in zip(self._stages_of[p], config.stages):
             old = self.free_at[s]
             n = sc.replicas
             switched = sc.variant != self.configs[s].variant
@@ -262,52 +356,81 @@ class PipelineSimulator:
             # are stale, re-arm from current state
             self._bump(s)
             self._wake_at[s] = _INF
-        self._refresh_lat_tab()
+        self._alloc[p] = new_cost
+        self._refresh_lat_tab(self._stages_of[p])
         self._wb = None
-        for s in range(self.n_stages):
+        for s in self._stages_of[p]:
             self._try_dispatch(s)
 
-    # -- invariants ------------------------------------------------------
-    @property
-    def queued(self) -> int:
-        return sum(len(q) for q in self.queues)
+    def reconfigure(self, config: ClusterConfig) -> None:
+        """Atomically reconfigure every pipeline to a joint configuration."""
+        if config.cost(self.cluster) > self.core_budget + 1e-9:
+            raise CoreBudgetExceeded(
+                f"joint config needs {config.cost(self.cluster)} cores, "
+                f"budget is {self.core_budget}")
+        for p, cfg in enumerate(config.pipelines):
+            self.reconfigure_pipeline(p, cfg, _check_budget=False)
 
-    # -- hot-path caches --------------------------------------------------
-    @property
-    def lam_est(self) -> float:
-        return self._lam_est
-
-    @lam_est.setter
-    def lam_est(self, v: float) -> None:
+    def set_lam_est(self, p: int, v: float) -> None:
+        """Update pipeline ``p``'s arrival-rate estimate (re-arms pending
+        batch-formation timeouts, whose Eq. 7 deadline depends on it)."""
         v = float(v)
-        if v == self._lam_est:
+        if v == self._lam_of[p]:
             return
-        self._lam_est = v
+        self._lam_of[p] = v
         self._wb = None                  # wait bounds depend on lambda
         # pending batch-formation timeouts were armed under the old lambda;
         # supersede and re-arm them so the deadline tracks the new Eq. 7
         # bound (the legacy core re-evaluated the bound on every tick)
-        for s, t in enumerate(self._timeout_at):
-            if t != _INF:
+        for s in self._stages_of[p]:
+            if self._timeout_at[s] != _INF:
                 self._bump(s)
                 self._try_dispatch(s)
 
-    def _refresh_lat_tab(self) -> None:
+    # -- invariants / observability --------------------------------------
+    @property
+    def queued(self) -> int:
+        return sum(len(q) for q in self.queues)
+
+    @property
+    def allocated_cores(self) -> float:
+        """Cores currently held across all pipelines (the ledger total)."""
+        return float(sum(self._alloc))
+
+    def pipeline_config(self, p: int) -> PipelineConfig:
+        """The configuration pipeline ``p`` is actually running right now."""
+        return PipelineConfig(tuple(self.configs[s]
+                                    for s in self._stages_of[p]))
+
+    @property
+    def current_config(self) -> ClusterConfig:
+        """The joint configuration the simulator is actually running."""
+        return ClusterConfig(tuple(self.pipeline_config(p)
+                                   for p in range(self.n_pipelines)))
+
+    # -- hot-path caches --------------------------------------------------
+    def _refresh_lat_tab(self, stages=None) -> None:
         """Per-stage service-latency table l_m(k) for k = 0..batch under the
-        current variant (one vectorized evaluation per reconfigure)."""
-        self._lat_tab = []
-        self._batch_of = []
-        for st, sc in zip(self.pipe.stages, self.configs):
+        current variant (one vectorized evaluation per reconfigured stage).
+
+        ``stages``: global stage indices to refresh (default: all) — a
+        per-pipeline reconfigure only rebuilds its own stages' tables.
+        """
+        if stages is None:
+            stages = range(self.n_stages)
+            self._lat_tab = [None] * self.n_stages
+            self._batch_of = [0] * self.n_stages
+        for s in stages:
+            st, sc = self._stage_models[s], self.configs[s]
             ks = np.arange(sc.batch + 1, dtype=np.float64)
             ks[0] = 1.0                  # k=0 never dispatched; keep finite
-            self._lat_tab.append(
-                st.variant(sc.variant).latency(ks).tolist())
-            self._batch_of.append(sc.batch)
+            self._lat_tab[s] = st.variant(sc.variant).latency(ks).tolist()
+            self._batch_of[s] = sc.batch
 
     def _wait_bounds(self) -> List[float]:
         if self._wb is None:
-            self._wb = [wait_bound(sc.batch, self._lam_est, self.max_wait)
-                        for sc in self.configs]
+            self._wb = [wait_bound(sc.batch, self._lam_of[p], self.max_wait)
+                        for sc, p in zip(self.configs, self._pipe_of)]
         return self._wb
 
     # -- event machinery --------------------------------------------------
@@ -331,19 +454,19 @@ class PipelineSimulator:
             self._wake_at[s] = t
             self._push(t, "wake", s)
 
-    def inject(self, req: Request) -> None:
-        self.metrics.arrived += 1
+    def inject(self, req: Request, pipeline: int = 0) -> None:
+        self.metrics_by_pipe[pipeline].arrived += 1
         inj = self._inj
         if inj and req.arrival < inj[-1][0]:
             self._inj_sorted = False
-        inj.append((req.arrival, req))
+        inj.append((req.arrival, self._first[pipeline], req))
 
     def _stage_latency(self, s: int, k: int) -> float:
         tab = self._lat_tab[s]
         if k < len(tab):
             return tab[k]
         sc = self.configs[s]
-        v = self.pipe.stages[s].variant(sc.variant)
+        v = self._stage_models[s].variant(sc.variant)
         return float(v.latency(max(k, 1)))
 
     def _try_dispatch(self, s: int) -> None:
@@ -351,43 +474,76 @@ class PipelineSimulator:
         now = self.now
         # §4.5 drop policy — the min-arrival bound lets the common
         # nothing-to-expire case skip the vectorized scan entirely
-        if now - q.min_arr > self._drop_thr:
-            dropped = q.drop_expired(now, self._drop_thr)
+        thr = self._drop_thr_s[s]
+        if now - q.min_arr > thr:
+            dropped = q.drop_expired(now, thr)
             if dropped:
                 for r in dropped:
                     r.dropped_at = s
                     r.done = now
-                self.metrics.dropped += len(dropped)
+                self.metrics_by_pipe[self._pipe_of[s]].dropped += len(dropped)
                 self._bump(s)
-        sc = self.configs[s]
-        free = self.free_at[s]
+                if self._pool is not None:
+                    self._pool.release_many(dropped)
         nq = len(q.reqs) - q.head
+        if not nq:
+            return
+        batch_sz = self.configs[s].batch
+        free = self.free_at[s]
+        limit = now + _EPS
+        # hot-loop locals: every dispatched batch costs one heap push, one
+        # replica-slot write and one generation bump
+        tab = self._lat_tab[s]
+        tab_n = len(tab)
+        events = self._events
+        seq = self._seq
+        push = heapq.heappush
+        gen = self._gen
         while nq:
-            if not free:
-                # zero replicas configured: requests can only age out
-                self._schedule_wake(s, q.head_arrival() + self._drop_thr)
-                return
-            free_idx = [i for i, t in enumerate(free) if t <= now + _EPS]
-            if not free_idx:
-                self._schedule_wake(s, min(free))
-                return
-            if nq < sc.batch:
+            if nq < batch_sz:
+                # a forming batch waits for its Eq. 7 deadline before the
+                # replica state matters: dispatch happens at
+                # max(deadline, soonest-free) either way, so checking the
+                # deadline first skips the replica scan on the (common)
+                # still-forming path
                 deadline = q.head_enter() + self._wait_bounds()[s]
                 if now < deadline - _EPS:
                     self._schedule_timeout(s, deadline)
                     return
                 k = nq
             else:
-                k = sc.batch
+                k = batch_sz
+            nf = len(free)
+            if nf == 0:
+                # zero replicas configured: requests can only age out
+                self._schedule_wake(s, q.head_arrival() + thr)
+                return
+            if nf > _NP_SCAN_MIN:
+                # large fleet: one vectorized pass over the ready times
+                arr = np.asarray(free)
+                avail = (arr <= limit).nonzero()[0]
+                n_avail = avail.size
+                if n_avail == 0:
+                    self._schedule_wake(s, float(arr.min()))
+                    return
+                rep = int(avail[self.rr[s] % n_avail])
+            else:
+                avail = [i for i, t in enumerate(free) if t <= limit]
+                n_avail = len(avail)
+                if n_avail == 0:
+                    self._schedule_wake(s, min(free))
+                    return
+                rep = avail[self.rr[s] % n_avail]
             batch, arrs = q.pop_batch(k)
             nq -= k
-            rep = free_idx[self.rr[s] % len(free_idx)]
             self.rr[s] += 1
-            done_t = now + self._stage_latency(s, k)
+            done_t = now + (tab[k] if k < tab_n
+                            else self._stage_latency(s, k))
             free[rep] = done_t
             self.in_service += k
-            self._push(done_t, "done", (s, batch, arrs))
-            self._bump(s)
+            push(events, (done_t, next(seq), "done", (s, batch, arrs)))
+            gen[s] += 1                  # inlined _bump (lazy cancel)
+            self._timeout_at[s] = _INF
 
     def _handle(self, kind: str, payload) -> None:
         if kind == "arrive":
@@ -409,7 +565,7 @@ class PipelineSimulator:
             # can have expired — this arrival cannot trigger a dispatch
             if (d >= self._batch_of[s]
                     or self._timeout_at[s] == _INF
-                    or self.now - q.min_arr > self._drop_thr):
+                    or self.now - q.min_arr > self._drop_thr_s[s]):
                 self._try_dispatch(s)
         elif kind == "done":
             s, batch, arrs = payload
@@ -417,17 +573,21 @@ class PipelineSimulator:
             if self.record_timeline:
                 for r in batch:
                     r.stage_exit[s] = self.now
-            if s + 1 < self.n_stages:
+            nxt = self._next[s]
+            if nxt >= 0:
                 # synchronous handoff: the next-stage arrival is at this
                 # same instant, so deliver it directly instead of taking a
                 # round-trip through the heap
-                self._handle("arrive", (s + 1, batch, arrs))
+                self._handle("arrive", (nxt, batch, arrs))
             else:
                 now = self.now
                 for r in batch:
                     r.done = now
-                self.metrics.completed += len(batch)
-                self.metrics._lat.extend([now - a for a in arrs])
+                m = self.metrics_by_pipe[self._pipe_of[s]]
+                m.completed += len(batch)
+                m._lat.extend([now - a for a in arrs])
+                if self._pool is not None:
+                    self._pool.release_many(batch)
             q = self.queues[s]
             if len(q.reqs) > q.head:         # freed replica, waiting work
                 self._try_dispatch(s)
@@ -461,6 +621,8 @@ class PipelineSimulator:
         i = self._inj_i
         n_inj = len(inj)
         pop = heapq.heappop
+        handle = self._handle            # resolves subclass overrides once
+        n_ev = 0
         while True:
             t_inj = inj[i][0] if i < n_inj else _INF
             if ev and ev[0][0] < t_inj:
@@ -468,24 +630,60 @@ class PipelineSimulator:
                 if t > t_end:
                     break
                 _, _, kind, payload = pop(ev)
-                self.events_processed += 1
+                n_ev += 1
                 if t > self.now:
                     self.now = t
-                self._handle(kind, payload)
+                handle(kind, payload)
             elif t_inj <= t_end:
                 # injection stream wins ties: matches the legacy ordering
                 # where arrivals were heap-pushed before any derived event
-                t, req = inj[i]
+                t, entry, req = inj[i]
                 i += 1
-                self.events_processed += 1
+                n_ev += 1
                 if t > self.now:
                     self.now = t
-                self._handle("arrive", (0, (req,), None))
+                handle("arrive", (entry, (req,), None))
             else:
                 break
+        self.events_processed += n_ev
         if i > 4096 and 2 * i >= n_inj:
             del inj[:i]
             i = 0
         self._inj_i = i
         if t_end > self.now:             # never rewind the event clock
             self.now = t_end
+
+
+class PipelineSimulator(ClusterSimulator):
+    """The N=1 special case: one pipeline, unbounded core budget, the
+    original single-pipeline API.  Shares every event-machinery code path
+    with ``ClusterSimulator`` — cluster equivalence at N=1 is structural,
+    and the equivalence tests pin it."""
+
+    def __init__(self, pipe: PipelineModel, config: PipelineConfig, **kw):
+        super().__init__(single(pipe), ClusterConfig((config,)), **kw)
+        self.pipe = pipe
+
+    @property
+    def metrics(self) -> SimMetrics:
+        return self.metrics_by_pipe[0]
+
+    @property
+    def sla_p(self) -> float:
+        return self.sla_of[0]
+
+    @property
+    def lam_est(self) -> float:
+        return self._lam_of[0]
+
+    @lam_est.setter
+    def lam_est(self, v: float) -> None:
+        self.set_lam_est(0, v)
+
+    @property
+    def current_config(self) -> PipelineConfig:
+        """The configuration the simulator is actually running right now."""
+        return self.pipeline_config(0)
+
+    def reconfigure(self, config: PipelineConfig) -> None:  # type: ignore[override]
+        self.reconfigure_pipeline(0, config)

@@ -28,6 +28,50 @@ class Request:
     def dropped(self) -> bool:
         return self.dropped_at is not None
 
+    def reset(self, arrival: float, sla: Optional[float] = None) -> "Request":
+        """Re-initialize for reuse out of a ``RequestPool`` (fresh id)."""
+        self.arrival = arrival
+        self.payload = None
+        self.req_id = next(_ids)
+        self.sla = sla
+        self.stage_enter.clear()
+        self.stage_exit.clear()
+        self.dropped_at = None
+        self.done = float("nan")
+        return self
+
+
+class RequestPool:
+    """Free-list of ``Request`` objects for allocation-heavy replay loops.
+
+    The simulator hot path creates no requests itself, but its drivers
+    (adapter traces, benchmarks) allocate one per arrival; with a pool the
+    simulator releases each request back at its terminal event (completion
+    or drop) so steady-state replay reuses a small working set instead of
+    churning the allocator.  Only safe when the driver does not hold
+    references to injected requests past their completion.
+    """
+
+    __slots__ = ("_free", "allocated", "reused")
+
+    def __init__(self):
+        self._free: List[Request] = []
+        self.allocated = 0
+        self.reused = 0
+
+    def acquire(self, arrival: float, sla: Optional[float] = None) -> Request:
+        if self._free:
+            self.reused += 1
+            return self._free.pop().reset(arrival, sla)
+        self.allocated += 1
+        return Request(arrival=arrival, sla=sla)
+
+    def release(self, req: Request) -> None:
+        self._free.append(req)
+
+    def release_many(self, reqs) -> None:
+        self._free.extend(reqs)
+
 
 @dataclasses.dataclass
 class BatchRecord:

@@ -1,0 +1,251 @@
+"""Cluster co-scheduling: data model, shared-pool ledger, joint solver
+(knapsack vs brute oracle), and the cluster adapter end-to-end."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import adapter as AD
+from repro.core import baselines as BL
+from repro.core import optimizer as OPT
+from repro.core.cluster import (ClusterConfig, ClusterModel,
+                                proportional_split)
+from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
+                                 StageConfig, StageModel)
+from repro.core.simulator import ClusterSimulator, CoreBudgetExceeded
+from repro.serving.request import Request
+
+
+def toy_pipeline(name: str, l1: float = 0.05,
+                 accs=(60.0, 75.0, 85.0)) -> PipelineModel:
+    vs = tuple(
+        ModelVariant(f"{name}_v{i}", a, 2 ** i,
+                     (l1 * s * 0.002, l1 * s * 0.7, l1 * s * 0.3))
+        for i, (a, s) in enumerate(zip(accs, (1.0, 1.7, 3.0))))
+    return PipelineModel(name, (
+        StageModel(f"{name}_s1", vs, sla=5 * l1 * 1.7, batch_choices=(1, 2, 4)),
+        StageModel(f"{name}_s2", vs, sla=5 * l1 * 1.7, batch_choices=(1, 2, 4)),
+    ))
+
+
+def toy_cluster(cores: float = 40.0) -> ClusterModel:
+    return ClusterModel("toy", (toy_pipeline("A"),
+                                toy_pipeline("B", l1=0.03,
+                                             accs=(55.0, 68.0, 90.0))), cores)
+
+
+# ---------------------------------------------------------------------------
+# data model
+# ---------------------------------------------------------------------------
+def test_cluster_config_cost_is_sum_of_pipelines():
+    cl = toy_cluster()
+    sol_a = OPT.solve_capped(cl.pipelines[0], 10.0, OPT.Objective())
+    sol_b = OPT.solve_capped(cl.pipelines[1], 10.0, OPT.Objective())
+    joint = ClusterConfig((sol_a.config, sol_b.config))
+    assert joint.cost(cl) == pytest.approx(sol_a.cost + sol_b.cost)
+    assert joint.fits(cl) == (sol_a.cost + sol_b.cost <= cl.cores + 1e-9)
+
+
+def test_proportional_split_sums_to_budget():
+    cl = toy_cluster(cores=30.0)
+    shares = proportional_split(cl, [10.0, 20.0])
+    assert sum(shares) == pytest.approx(30.0)
+    assert shares[0] == pytest.approx(10.0)
+    assert shares[1] == pytest.approx(20.0)
+    # zero total demand: even split, not div-by-zero
+    even = proportional_split(cl, [0.0, 0.0])
+    assert even[0] == even[1] == pytest.approx(15.0)
+
+
+# ---------------------------------------------------------------------------
+# joint solver: knapsack arbitration vs brute-force oracle
+# ---------------------------------------------------------------------------
+@given(budget=st.integers(4, 60), lam_a=st.floats(1.0, 25.0),
+       lam_b=st.floats(1.0, 25.0))
+@settings(max_examples=20, deadline=None)
+def test_knapsack_matches_brute_force(budget, lam_a, lam_b):
+    cl = ClusterModel("toy", toy_cluster().pipelines, float(budget))
+    obj = OPT.Objective(alpha=1.0, beta=0.05)
+    k = OPT.solve_cluster(cl, [lam_a, lam_b], obj)
+    b = OPT.solve_cluster_brute(cl, [lam_a, lam_b], obj)
+    assert k.feasible == b.feasible
+    if k.feasible:
+        assert k.objective == pytest.approx(b.objective, rel=1e-9)
+        assert k.cost <= budget + 1e-9
+        assert k.config.fits(cl)
+
+
+def test_joint_dominates_proportional_split():
+    """The split's feasible set is a subset of the joint's: the knapsack
+    objective can never be worse, and on asymmetric demand it is strictly
+    better here."""
+    cl = toy_cluster(cores=24.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    lams = [22.0, 4.0]                   # anti-correlated burst snapshot
+    joint = BL.cluster_ipa(cl, lams, obj)
+    split = BL.cluster_split(cl, lams, "ipa", obj)
+    assert joint.feasible and split.feasible
+    assert joint.objective >= split.objective - 1e-9
+    assert joint.objective > split.objective + 1e-6
+
+
+def test_pareto_frontier_is_strictly_improving():
+    pipe = toy_pipeline("A")
+    pts = OPT.pareto_frontier(pipe, 12.0, OPT.Objective(alpha=1.0, beta=0.05))
+    assert pts, "frontier must be non-empty at a feasible rate"
+    costs = [p.cost for p in pts]
+    objs = [p.objective for p in pts]
+    assert costs == sorted(costs)
+    assert all(b > a for a, b in zip(costs, costs[1:]))
+    assert all(b > a for a, b in zip(objs, objs[1:]))
+
+
+def test_unbounded_budget_picks_per_pipeline_best():
+    cl = ClusterModel("toy", toy_cluster().pipelines, float("inf"))
+    obj = OPT.Objective(alpha=1.0, beta=0.05)
+    sol = OPT.solve_cluster(cl, [10.0, 10.0], obj)
+    for pipe, s in zip(cl.pipelines, sol.per_pipeline):
+        best = OPT.pareto_frontier(pipe, 10.0, obj)[-1]
+        assert s.objective == pytest.approx(best.objective)
+
+
+# ---------------------------------------------------------------------------
+# shared-pool replica ledger
+# ---------------------------------------------------------------------------
+def _fit_config(pipe, lam):
+    sol = OPT.solve_capped(pipe, lam, OPT.Objective(alpha=0.0, beta=1.0))
+    assert sol.feasible
+    return sol.config
+
+
+def test_reconfigure_over_budget_raises_and_changes_nothing():
+    cl = toy_cluster(cores=8.0)
+    cfg_a = _fit_config(cl.pipelines[0], 2.0)
+    cfg_b = _fit_config(cl.pipelines[1], 2.0)
+    sim = ClusterSimulator(cl, ClusterConfig((cfg_a, cfg_b)))
+    before = sim.pipeline_config(0)
+    # grow pipeline 0 far past what C minus pipeline 1's allocation allows
+    big = PipelineConfig(tuple(
+        StageConfig(sc.variant, sc.batch, sc.replicas + 50)
+        for sc in cfg_a.stages))
+    with pytest.raises(CoreBudgetExceeded):
+        sim.reconfigure_pipeline(0, big)
+    assert sim.pipeline_config(0) == before
+    assert sim.allocated_cores <= cl.cores + 1e-9
+
+
+def test_reconfigure_within_budget_updates_ledger():
+    cl = toy_cluster(cores=40.0)
+    cfg_a = _fit_config(cl.pipelines[0], 2.0)
+    cfg_b = _fit_config(cl.pipelines[1], 2.0)
+    sim = ClusterSimulator(cl, ClusterConfig((cfg_a, cfg_b)))
+    start = sim.allocated_cores
+    grown = PipelineConfig(tuple(
+        StageConfig(sc.variant, sc.batch, sc.replicas + 1)
+        for sc in cfg_a.stages))
+    sim.reconfigure_pipeline(0, grown)
+    assert sim.allocated_cores > start
+    assert sim.current_config.fits(cl)
+
+
+def test_initial_config_over_budget_rejected():
+    cl = toy_cluster(cores=2.0)          # too small for two pipelines
+    cfg_a = _fit_config(cl.pipelines[0], 10.0)
+    cfg_b = _fit_config(cl.pipelines[1], 10.0)
+    with pytest.raises(CoreBudgetExceeded):
+        ClusterSimulator(cl, ClusterConfig((cfg_a, cfg_b)))
+
+
+# ---------------------------------------------------------------------------
+# shared event loop: per-pipeline isolation of metrics, shared clock
+# ---------------------------------------------------------------------------
+def test_two_pipelines_one_heap_conserve_requests_separately():
+    cl = toy_cluster(cores=float("inf"))
+    cfg_a = _fit_config(cl.pipelines[0], 12.0)
+    cfg_b = _fit_config(cl.pipelines[1], 8.0)
+    sim = ClusterSimulator(cl, ClusterConfig((cfg_a, cfg_b)))
+    rng = np.random.default_rng(3)
+    n_a, n_b = 120, 80
+    for t in np.sort(rng.uniform(0, 10, n_a)):
+        sim.inject(Request(arrival=float(t), sla=cl.pipelines[0].sla), 0)
+    for t in np.sort(rng.uniform(0, 10, n_b)):
+        sim.inject(Request(arrival=float(t), sla=cl.pipelines[1].sla), 1)
+    sim.run_until(10 + 100 * max(sim.sla_of))
+    ma, mb = sim.metrics_by_pipe
+    assert ma.arrived == n_a and mb.arrived == n_b
+    assert ma.completed + ma.dropped == n_a
+    assert mb.completed + mb.dropped == n_b
+    assert sim.queued == 0 and sim.in_service == 0
+    assert len(ma.latencies) == ma.completed
+    assert len(mb.latencies) == mb.completed
+
+
+def test_per_pipeline_lam_est_independent():
+    cl = toy_cluster(cores=float("inf"))
+    sim = ClusterSimulator(cl, ClusterConfig((
+        _fit_config(cl.pipelines[0], 5.0), _fit_config(cl.pipelines[1], 5.0))))
+    sim.set_lam_est(0, 50.0)
+    assert sim._lam_of == [50.0, 10.0]
+
+
+# ---------------------------------------------------------------------------
+# cluster adapter end-to-end
+# ---------------------------------------------------------------------------
+@pytest.fixture(scope="module")
+def cluster_results():
+    cl = toy_cluster(cores=26.0)
+    t = np.arange(60, dtype=np.float64)
+    # anti-correlated: A bursts first half, B second half
+    r_a = np.clip(4.0 + 18.0 * np.exp(-((t - 10) % 60) / 8.0), 0.5, None)
+    r_b = np.clip(4.0 + 18.0 * np.exp(-((t - 40) % 60) / 8.0), 0.5, None)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    return obj, {pol: AD.run_cluster_trace(cl, [r_a, r_b], policy=pol,
+                                           obj=obj, seed=5)
+                 for pol in ("ipa", "split_ipa", "split_fa2_low")}
+
+
+def test_cluster_trace_conserves_requests(cluster_results):
+    _, results = cluster_results
+    for res in results.values():
+        for r in res.per_pipeline:
+            assert r.completed + r.dropped == r.arrived
+        assert res.arrived == sum(r.arrived for r in res.per_pipeline)
+
+
+def test_cluster_trace_stays_within_budget(cluster_results):
+    _, results = cluster_results
+    for res in results.values():
+        for records in zip(*(r.intervals for r in res.per_pipeline)):
+            assert sum(rec.cost for rec in records) <= res.budget + 1e-9
+
+
+def test_joint_beats_split_on_objective_end_to_end(cluster_results):
+    obj, results = cluster_results
+    joint = results["ipa"].mean_objective(obj)
+    assert joint >= results["split_ipa"].mean_objective(obj) - 1e-6
+    assert joint >= results["split_fa2_low"].mean_objective(obj) - 1e-6
+
+
+def test_joint_beats_split_on_pas_end_to_end(cluster_results):
+    _, results = cluster_results
+    assert results["ipa"].mean_pas > results["split_ipa"].mean_pas - 1e-9
+
+
+def test_ragged_traces_supported():
+    """Pipelines may stop receiving traffic at different times: a shorter
+    trace must yield lam_true=0 intervals (not a zero-size .max() crash)
+    and its demand estimate must drop to 0 so it stops competing for the
+    shared pool."""
+    cl = toy_cluster(cores=30.0)
+    r_a = np.full(40, 5.0)
+    r_b = np.full(15, 5.0)               # ends mid-run
+    res = AD.run_cluster_trace(cl, [r_a, r_b],
+                               policy="ipa",
+                               obj=OPT.Objective(alpha=1.0, beta=0.05),
+                               seed=2)
+    assert len(res.per_pipeline[0].intervals) == \
+        len(res.per_pipeline[1].intervals) == 4
+    dead = res.per_pipeline[1].intervals[-1]
+    assert dead.lam_true == 0.0
+    assert dead.lam_hat == 0.0           # finished pipelines release demand
+    for r in res.per_pipeline:
+        assert r.completed + r.dropped == r.arrived

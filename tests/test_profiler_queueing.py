@@ -1,11 +1,12 @@
-"""Profiler (§4.2) + queueing (Eq. 7) + paper-profile fidelity tests."""
+"""Profiler (§4.2) + queueing (Eq. 7 / M/M/c) + paper-profile fidelity tests."""
 import numpy as np
 import pytest
 from _hypothesis_compat import given, settings, st
 
+from repro.core import optimizer as OPT
 from repro.core import paper_profiles as PP
 from repro.core import profiler as PF
-from repro.core.queueing import queue_delay
+from repro.core.queueing import expected_wait, queue_delay
 
 
 @given(a=st.floats(0, 1e-3), b=st.floats(1e-4, 0.2), c=st.floats(1e-4, 0.5))
@@ -37,6 +38,59 @@ def test_queue_delay_properties(b, lam):
     # monotone in batch, antitone in arrival rate
     assert float(queue_delay(b + 1, lam)) >= q
     assert float(queue_delay(b, lam * 2)) <= q + 1e-12
+
+
+@given(b=st.integers(1, 64), lam=st.floats(0.1, 100), reps=st.integers(1, 32))
+@settings(max_examples=50, deadline=None)
+def test_expected_wait_below_worst_case_bound(b, lam, reps):
+    """Property: the M/M/c-style expected batch-formation delay never
+    exceeds Eq. 7's worst-case bound, for all (b, lambda, replicas)."""
+    exp = expected_wait(b, lam, reps)
+    assert 0.0 <= exp <= float(queue_delay(b, lam)) + 1e-12
+    assert expected_wait(1, lam, reps) == 0.0    # a batch of one never waits
+
+
+def test_expected_wait_queue_term_properties():
+    """With a service time, the Erlang-C term is non-negative, shrinks with
+    replicas, and blows up to inf when the stage is unstable."""
+    b, lam, svc = 4, 20.0, 0.5           # offered load: 5 * 0.5 = 2.5 erlangs
+    form = expected_wait(b, lam)
+    assert expected_wait(b, lam, replicas=2, service_time=svc) == np.inf
+    w4 = expected_wait(b, lam, replicas=4, service_time=svc)
+    w8 = expected_wait(b, lam, replicas=8, service_time=svc)
+    assert w4 > form and w8 > form       # queueing adds delay...
+    assert w8 < w4                       # ...but more replicas shrink it
+
+
+def test_default_latency_model_bit_identical_to_eq7():
+    """The opt-in expected path must leave the default worst-case path
+    untouched: stage_options with and without the explicit default agree
+    exactly, and match the hand-computed Eq. 7 sum."""
+    stage = PP.task_stage("object_detection")
+    lam = 12.0
+    dflt = OPT.stage_options(stage, lam)
+    worst = OPT.stage_options(stage, lam, latency_model="worst_case")
+    np.testing.assert_array_equal(dflt.lat, worst.lat)
+    for j, (name, b) in enumerate(zip(dflt.names, dflt.batches)):
+        v = stage.variant(name)
+        assert dflt.lat[j] == float(v.latency(int(b))) + float(
+            queue_delay(int(b), lam))
+
+
+def test_expected_model_opt_in_path():
+    """The expected path produces finite, service-time-bounded latencies
+    for feasible options and rejects unknown model names."""
+    stage = PP.task_stage("object_detection")
+    lam = 12.0
+    worst = OPT.stage_options(stage, lam)
+    exp = OPT.stage_options(stage, lam, latency_model="expected")
+    ok = worst.feasible & np.isfinite(exp.lat)
+    assert ok.any()
+    for j in np.flatnonzero(ok):
+        svc = float(stage.variant(exp.names[j]).latency(int(exp.batches[j])))
+        assert exp.lat[j] >= svc - 1e-12      # queueing only ever adds
+    with pytest.raises(ValueError):
+        OPT.stage_options(stage, lam, latency_model="bogus")
 
 
 def test_base_alloc_monotone_in_threshold():

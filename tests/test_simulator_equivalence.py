@@ -11,10 +11,11 @@ import numpy as np
 import pytest
 
 from repro.core import trace as TR
+from repro.core.cluster import ClusterConfig, ClusterModel
 from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
                                  StageConfig, StageModel)
 from repro.core.queueing import wait_bound
-from repro.core.simulator import PipelineSimulator
+from repro.core.simulator import ClusterSimulator, PipelineSimulator
 from repro.core.simulator_legacy import LegacyTickSimulator
 from repro.serving.request import Request
 
@@ -73,6 +74,30 @@ def test_equivalent_counts_old_vs_new(name):
     assert new.metrics.completed == old.metrics.completed
     assert new.metrics.dropped == old.metrics.dropped
     assert new.metrics.arrived == old.metrics.arrived == len(arrivals)
+
+
+@pytest.mark.parametrize("name", sorted(EQUIV_TRACES))
+def test_cluster_n1_event_for_event_equivalent(name):
+    """A ClusterSimulator holding one pipeline must reproduce
+    PipelineSimulator exactly: same completed/dropped counts, the same
+    latency stream in the same order, and the same event count — the
+    single-pipeline stack is the N=1 special case, not a parallel
+    implementation."""
+    config, arrivals, horizon = EQUIV_TRACES[name]
+    single = replay(PipelineSimulator, PIPE, config, arrivals, horizon)
+
+    clus = ClusterSimulator(ClusterModel("n1", (PIPE,)),
+                            ClusterConfig((config,)))
+    for t in arrivals:
+        clus.inject(Request(arrival=float(t), sla=PIPE.sla), pipeline=0)
+    clus.run_until(horizon)
+
+    m1, mc = single.metrics, clus.metrics_by_pipe[0]
+    assert mc.completed == m1.completed
+    assert mc.dropped == m1.dropped
+    assert mc.arrived == m1.arrived
+    np.testing.assert_array_equal(mc.latencies, m1.latencies)
+    assert clus.events_processed == single.events_processed
 
 
 def test_new_core_schedules_far_fewer_events():
