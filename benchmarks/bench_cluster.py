@@ -27,6 +27,16 @@ violation always means the arbitration layer broke.  (The realized
 trajectory means are NOT construction-guaranteed — hold dynamics differ
 between policies — so they gate only the full run, where they are
 deterministic under the fixed seeds.)  Wired into ``scripts/tier1.sh``.
+
+The ``switch`` scenario replays the joint policy with the §5.3 adaptation
+window modeled (8 s during which a reconfigured pipeline serves its old
+config) with and without switch-cost hysteresis, recording
+reconfigurations/hour and realized mean PAS for both.  Gate: hysteresis
+must reconfigure strictly less often (``--smoke``: no more often) at
+equal-or-better realized mean PAS.  The penalty is sized at the scale of
+the objective's cost-term churn (beta x a few cores), so accuracy-driven
+switches always clear it and only PAS-neutral replica-shuffling thrash is
+suppressed.
 """
 from __future__ import annotations
 
@@ -50,6 +60,11 @@ from repro.core.pipeline import (ModelVariant, PipelineModel,  # noqa: E402
 POLICIES = ("ipa", "split_ipa", "split_fa2_low", "split_fa2_high",
             "split_rim")
 OBJ = OPT.Objective(alpha=1.0, beta=0.02, delta=1e-6, metric="pas")
+# §5.3: ~8 s adaptation process per reconfiguration; the hysteresis
+# penalty is that transition expressed as lost objective, sized to the
+# cost-term churn scale (see module docstring)
+ADAPT_DELAY_S = 8.0
+SWITCH_COST = 0.1
 
 
 def _pipeline(name: str, l1a: float, l1b: float, accs) -> PipelineModel:
@@ -132,6 +147,41 @@ def solver_dominance_check(cluster, rates, interval: float = 10.0) -> list:
     return fails
 
 
+def switch_scenario(cluster, rates, seconds: int, smoke: bool):
+    """Joint policy with the §5.3 adaptation window, with vs. without
+    switch-cost hysteresis.  Returns (record, failures)."""
+    runs = {}
+    for tag, sc in (("no_hysteresis", 0.0), ("hysteresis", SWITCH_COST)):
+        res = AD.run_cluster_trace(cluster, rates, policy="ipa", obj=OBJ,
+                                   seed=11, switch_cost=sc,
+                                   adaptation_delay=ADAPT_DELAY_S)
+        runs[tag] = {
+            "switch_cost": sc,
+            "reconfigs": res.n_reconfigs,
+            "reconfigs_per_hour": round(res.n_reconfigs * 3600.0 / seconds, 1),
+            "mean_pas": round(res.mean_pas, 3),
+            "mean_cost": round(res.mean_cost, 2),
+            "dropped": res.dropped,
+        }
+        print(f"switch/{tag}: reconfigs={res.n_reconfigs} "
+              f"({runs[tag]['reconfigs_per_hour']}/h) "
+              f"pas={runs[tag]['mean_pas']} dropped={res.dropped}")
+    no_h, hyst = runs["no_hysteresis"], runs["hysteresis"]
+    fails = []
+    if smoke:
+        if hyst["reconfigs"] > no_h["reconfigs"]:
+            fails.append(f"switch: hysteresis reconfigured more often "
+                         f"({hyst['reconfigs']} > {no_h['reconfigs']})")
+    elif hyst["reconfigs"] >= no_h["reconfigs"]:
+        fails.append(f"switch: hysteresis must reconfigure strictly less "
+                     f"({hyst['reconfigs']} >= {no_h['reconfigs']})")
+    if hyst["mean_pas"] < no_h["mean_pas"] - 1e-9:
+        fails.append(f"switch: hysteresis lost realized PAS "
+                     f"({hyst['mean_pas']} < {no_h['mean_pas']})")
+    record = {"adaptation_delay_s": ADAPT_DELAY_S, **runs}
+    return record, fails
+
+
 def bench_policies(cluster, rates, policies) -> dict:
     out = {}
     for pol in policies:
@@ -187,9 +237,11 @@ def main() -> int:
 
     policies = ("ipa", "split_ipa") if args.smoke else POLICIES
     results = bench_policies(cluster, rates, policies)
+    switch_rec, switch_fails = switch_scenario(cluster, rates, seconds,
+                                               args.smoke)
 
     # pointwise arbitration health: construction-guaranteed, never flaky
-    fails = solver_dominance_check(cluster, rates)
+    fails = solver_dominance_check(cluster, rates) + switch_fails
     if not args.smoke:
         # realized headline (deterministic under the fixed seeds): joint
         # strictly beats every split on mean PAS at the same budget
@@ -217,6 +269,7 @@ def main() -> int:
                       "delta": OBJ.delta, "metric": OBJ.metric},
         "smoke": bool(args.smoke),
         "policies": results,
+        "switch": switch_rec,
     }
     if not args.smoke or args.out:
         out = args.out or os.path.join(os.path.dirname(__file__), "..",

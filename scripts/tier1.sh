@@ -1,9 +1,13 @@
 #!/usr/bin/env bash
 # Tier-1 gate: fast test loop + simulator perf smoke + cluster-arbitration
 # smoke.  Fails loudly on test regressions, on event-driven-core perf
-# regressions, and on the joint knapsack losing to the proportional
-# static split (which its feasible-set superset makes impossible unless
-# the arbitration layer is broken).
+# regressions, on the joint knapsack losing to the proportional static
+# split (which its feasible-set superset makes impossible unless the
+# arbitration layer is broken), and on the switch scenario: with the
+# §5.3 adaptation window modeled, the hysteresis run must reconfigure no
+# more often than the no-hysteresis run at equal-or-better realized PAS
+# (bench_cluster --smoke runs both gates).  Slow tests (LSTM training,
+# jax decode loops) stay opt-in via `pytest -m slow`.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 

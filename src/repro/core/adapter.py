@@ -9,8 +9,19 @@ per-interval PAS / cost and global latency / drop / SLA metrics.
 traces drive one ``ClusterSimulator`` (one event heap, one shared core
 pool); at each boundary a cluster policy (joint knapsack, or proportional
 static split) proposes a joint configuration, infeasible pipelines hold
-the config the simulator is actually running, and the whole joint config
-is applied only if it fits the core budget.
+the config the simulator is committed to, and the whole joint config is
+applied only if it fits the core budget.
+
+Cluster demand estimation mirrors what the single-pipeline ``run_trace``
+already supports: reactive (max of the trailing window), burst-aware
+(max over a longer window, so a spike that peaked a minute ago still
+reserves capacity — what the static-split baselines get), per-pipeline
+``LSTMPredictor``, or ``OraclePredictor`` ground truth.  The joint policy
+can additionally be made switch-cost-aware (``switch_cost`` /
+``switch_budget`` / ``adaptation_delay`` — paper §5.3's ~8 s adaptation
+overhead), in which case each interval's recorded PAS is the *realized*
+time-weighted value: a reconfigured pipeline serves the old config for
+the adaptation window before the new one takes effect.
 """
 from __future__ import annotations
 
@@ -174,6 +185,12 @@ class ClusterTraceResult:
     per_pipeline: List[TraceResult]
     sim_events: int = 0
     peak_queue_depth: int = 0
+    # committed pipeline-level reconfiguration decisions over the run (the
+    # simulator's log: (decided_at, pipeline, scheduled_apply_at) tuples; a
+    # decision superseded within its adaptation window keeps its entry but
+    # its scheduled apply never fires)
+    n_reconfigs: int = 0
+    reconfig_log: List = dataclasses.field(default_factory=list)
 
     @property
     def mean_pas(self) -> float:
@@ -217,11 +234,12 @@ class ClusterTraceResult:
 
 
 def reactive_demand(trace: np.ndarray, t0: float,
-                    interval: float = ADAPT_INTERVAL) -> float:
+                    interval: float = ADAPT_INTERVAL,
+                    window: int = 20) -> float:
     """Reactive (no-predictor) demand estimate at boundary ``t0``: max of
-    the last 20 s of past rates, bootstrapping from the first interval,
-    and 0 once the trace has ended (a finished pipeline must stop
-    competing for shared cores).  Shared with the cluster bench's
+    the last ``window`` s of past rates, bootstrapping from the first
+    interval, and 0 once the trace has ended (a finished pipeline must
+    stop competing for shared cores).  Shared with the cluster bench's
     pointwise dominance gate so both always probe the same demand points.
     """
     i = int(t0)
@@ -229,15 +247,58 @@ def reactive_demand(trace: np.ndarray, t0: float,
         return 0.0
     if i == 0:
         return float(trace[:int(interval)].max())
-    return float(trace[max(i - 20, 0):i].max())
+    return float(trace[max(i - window, 0):i].max())
 
 
-def _decide_cluster(cluster, lams, policy, obj, max_replicas):
+def burst_demand(trace: np.ndarray, t0: float,
+                 interval: float = ADAPT_INTERVAL,
+                 window: int = 60) -> float:
+    """Burst-aware max-of-window estimate: like ``reactive_demand`` but
+    over a longer trailing window (default 60 s), so a burst that peaked
+    tens of seconds ago still reserves capacity through its decay instead
+    of the estimate collapsing the moment the 20 s window slides past the
+    peak — the cheap anti-thrash guard the static-split baselines get."""
+    return reactive_demand(trace, t0, interval, window=window)
+
+
+DEMAND_ESTIMATORS = {"reactive": reactive_demand, "burst": burst_demand}
+
+
+def _cluster_demands(rates, t0: float, interval: float, demand_mode: str,
+                     predictors, oracles) -> List[float]:
+    """Per-pipeline demand estimates at boundary ``t0``: oracle beats
+    predictor beats the windowed fallback, per pipeline.  A pipeline whose
+    trace has ended always estimates 0 (it must release the shared pool,
+    whatever its predictor says about the stale history)."""
+    try:
+        fallback = DEMAND_ESTIMATORS[demand_mode]
+    except KeyError:
+        raise ValueError(f"demand_mode {demand_mode!r}") from None
+    i = int(t0)
+    out = []
+    for p, r in enumerate(rates):
+        if i >= len(r):
+            out.append(0.0)
+            continue
+        if oracles is not None and oracles[p] is not None:
+            out.append(float(oracles[p].predict_at(i)))
+        elif predictors is not None and predictors[p] is not None and i >= 1:
+            out.append(float(predictors[p].predict(r[:i])))
+        else:
+            out.append(fallback(r, t0, interval))
+    return out
+
+
+def _decide_cluster(cluster, lams, policy, obj, max_replicas,
+                    ipa_kwargs=None):
     try:
         fn = BL.CLUSTER_POLICIES[policy]
     except KeyError:
         raise ValueError(policy) from None
-    return fn(cluster, lams, obj=obj, max_replicas=max_replicas)
+    kw = {"obj": obj, "max_replicas": max_replicas}
+    if policy == "ipa" and ipa_kwargs:
+        kw.update(ipa_kwargs)
+    return fn(cluster, lams, **kw)
 
 
 def run_cluster_trace(cluster: ClusterModel,
@@ -245,31 +306,66 @@ def run_cluster_trace(cluster: ClusterModel,
                       policy: str = "ipa",
                       obj: Optional[OPT.Objective] = None,
                       interval: float = ADAPT_INTERVAL, seed: int = 0,
-                      max_replicas: int = OPT.DEFAULT_MAX_REPLICAS
+                      max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
+                      predictors: Optional[Sequence] = None,
+                      oracles: Optional[Sequence] = None,
+                      demand_mode: str = "reactive",
+                      switch_cost: float = 0.0,
+                      switch_budget: Optional[int] = None,
+                      adaptation_delay: float = 0.0,
+                      sla_weights: Optional[Sequence[float]] = None
                       ) -> ClusterTraceResult:
     """Drive N per-pipeline rate traces through one ``ClusterSimulator``.
 
     ``policy`` is a key of ``baselines.CLUSTER_POLICIES``: ``ipa`` (joint
     knapsack arbitration) or ``split_{ipa,fa2_low,fa2_high,rim}``
     (proportional static split).  At each adaptation boundary the policy
-    proposes per-pipeline configs from the reactive rate estimates; a
-    pipeline whose sub-solution is infeasible holds the config the
-    simulator is actually running (``pipeline_config``), and the mixed
-    joint config is applied only if it fits the shared core budget —
-    otherwise every pipeline holds.
+    proposes per-pipeline configs from the demand estimates; a pipeline
+    whose sub-solution is infeasible holds the config the simulator is
+    *committed* to (``pipeline_config`` — the in-flight transition target
+    while one is rolling out, never the stale pre-transition config), and
+    the mixed joint config is applied only if it fits the shared core
+    budget — otherwise every pipeline holds.
+
+    Demand estimation (per pipeline, past-only): ``oracles[p]`` (ground-
+    truth future max, Fig. 16's baseline) beats ``predictors[p]`` (e.g. a
+    trained ``LSTMPredictor``) beats the ``demand_mode`` fallback
+    (``"reactive"``: trailing 20 s max; ``"burst"``: trailing 60 s max).
+
+    Switch-cost knobs (joint policy only): ``switch_cost`` (objective
+    units per changed pipeline — §5.3's adaptation overhead as lost
+    objective, giving the solver hysteresis), ``switch_budget`` (max
+    pipelines changed per interval) and ``sla_weights`` flow into
+    ``optimizer.solve_cluster`` together with the simulator's committed
+    config as the incumbent.  ``adaptation_delay > 0`` makes the simulator
+    serve the old config for that window after each change, and interval
+    PAS records become realized time-weighted values.
     """
     rates = [np.asarray(r, np.float64) for r in rates]
     if len(rates) != cluster.n_pipelines:
         raise ValueError("one rate trace per pipeline required")
+    for name, seq in (("predictors", predictors), ("oracles", oracles)):
+        if seq is not None and len(seq) != cluster.n_pipelines:
+            raise ValueError(f"one {name} entry per pipeline required")
+    if policy != "ipa" and (switch_cost != 0.0 or switch_budget is not None
+                            or sla_weights is not None):
+        # silently ignoring these would make a "split with hysteresis/
+        # weights" benchmark measure the wrong experiment; weight split
+        # baselines via ClusterModel.sla_weights instead
+        raise ValueError("switch_cost/switch_budget/sla_weights apply to "
+                         "the joint 'ipa' policy only")
     horizon = max(len(r) for r in rates)
     times = [arrivals_from_rates(r, seed=seed + 1000003 * i)
              for i, r in enumerate(rates)]
+    ipa_kwargs = {"switch_cost": switch_cost, "switch_budget": switch_budget,
+                  "sla_weights": sla_weights}
 
     # bootstrap from the first-interval peaks; fall back to cheapest
     # feasible (joint fa2-low split would still have to fit C, so use the
     # joint solver with a pure-cost objective)
     lam0 = [float(r[:int(interval)].max()) for r in rates]
-    sol = _decide_cluster(cluster, lam0, policy, obj, max_replicas)
+    sol = _decide_cluster(cluster, lam0, policy, obj, max_replicas,
+                          ipa_kwargs)
     if not sol.feasible:
         sol = OPT.solve_cluster(
             cluster, lam0, OPT.Objective(alpha=0.0, beta=1.0, delta=1e-6),
@@ -279,23 +375,36 @@ def run_cluster_trace(cluster: ClusterModel,
             f"no feasible initial cluster config for {policy} "
             f"within budget {cluster.cores}")
     pool = RequestPool()
-    sim = ClusterSimulator(cluster, sol.config, request_pool=pool)
+    sim = ClusterSimulator(cluster, sol.config, request_pool=pool,
+                           adaptation_delay=adaptation_delay)
     for p, lam in enumerate(lam0):
         sim.set_lam_est(p, lam)
 
     records: List[List[IntervalRecord]] = [[] for _ in rates]
     ti = [0] * len(rates)
+    # when the committed config of pipeline p changes at a boundary, its
+    # stages keep serving the old config until this absolute time — the
+    # realized-PAS blend below charges the transition window to it
+    pending_until = [0.0] * len(rates)
     n_intervals = int(np.ceil(horizon / interval))
     for k in range(n_intervals):
         t0, t1 = k * interval, min((k + 1) * interval, horizon)
-        # --- monitor + predict (reactive, past-only) ---------------------
-        lam_hat = [reactive_demand(r, t0, interval) for r in rates]
+        # --- monitor + predict (at the boundary, using only the past) ----
+        lam_hat = _cluster_demands(rates, t0, interval, demand_mode,
+                                   predictors, oracles)
         # --- optimize + arbitrate + reconfigure --------------------------
-        sol = _decide_cluster(cluster, lam_hat, policy, obj, max_replicas)
+        if policy == "ipa":
+            ipa_kwargs["current"] = sim.current_config
+        sol = _decide_cluster(cluster, lam_hat, policy, obj, max_replicas,
+                              ipa_kwargs)
         per = sol.per_pipeline if sol.per_pipeline else [
             OPT._infeasible(0.0, sol.solver)] * cluster.n_pipelines
+        committed_before = [sim.pipeline_config(p)
+                            for p in range(cluster.n_pipelines)]
+        serving_before = [sim.serving_config(p)
+                          for p in range(cluster.n_pipelines)]
         mixed = ClusterConfig(tuple(
-            s.config if s.feasible else sim.pipeline_config(p)
+            s.config if s.feasible else committed_before[p]
             for p, s in enumerate(per)))
         applied_ok = mixed.fits(cluster)
         if applied_ok:
@@ -308,10 +417,26 @@ def run_cluster_trace(cluster: ClusterModel,
             applied = sim.current_config
         for p, pipe in enumerate(cluster.pipelines):
             cfg = applied.pipelines[p]
+            if cfg != committed_before[p]:
+                pending_until[p] = t0 + adaptation_delay
+            # realized PAS: the fraction of this interval still served at
+            # the old config while the §5.3 adaptation window runs out.
+            # cost deliberately stays the COMMITTED config's (the ledger
+            # view, which the sum<=C budget invariant is stated over) and
+            # is NOT blended — per-pipeline windows end at different times,
+            # so realized per-interval costs can transiently exceed C and
+            # would break that invariant (see the ClusterSimulator
+            # adaptation_delay docstring on the transition-overlap
+            # simplification)
+            frac = 0.0
+            if t1 > t0 and pending_until[p] > t0:
+                frac = min(pending_until[p] - t0, t1 - t0) / (t1 - t0)
+            pas = frac * pas_of(serving_before[p], pipe) \
+                + (1.0 - frac) * pas_of(cfg, pipe)
             seg = rates[p][int(t0):int(t1)]   # empty once a shorter
             records[p].append(IntervalRecord(  # pipeline's trace has ended
                 t=t0, lam_true=float(seg.max()) if len(seg) else 0.0,
-                lam_hat=lam_hat[p], pas=pas_of(cfg, pipe),
+                lam_hat=lam_hat[p], pas=pas,
                 cost=cfg.cost(pipe),
                 # feasible means "this interval's proposal was applied for
                 # this pipeline" — a hold-all overflow holds everyone
@@ -338,4 +463,6 @@ def run_cluster_trace(cluster: ClusterModel,
     return ClusterTraceResult(policy=policy, budget=float(cluster.cores),
                               per_pipeline=results,
                               sim_events=sim.events_processed,
-                              peak_queue_depth=sim.peak_queue_depth)
+                              peak_queue_depth=sim.peak_queue_depth,
+                              n_reconfigs=sim.n_reconfigs,
+                              reconfig_log=list(sim.reconfig_log))

@@ -91,12 +91,21 @@ def _objective_of(sol: OPT.Solution, pipe: PipelineModel,
 
 def cluster_ipa(cluster: ClusterModel, lams: Sequence[float],
                 obj: Optional[OPT.Objective] = None,
-                max_replicas: int = OPT.DEFAULT_MAX_REPLICAS
+                max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
+                current=None, switch_cost: float = 0.0,
+                switch_budget: Optional[int] = None,
+                sla_weights: Optional[Sequence[float]] = None
                 ) -> OPT.ClusterSolution:
     """Joint arbitration: one knapsack over per-pipeline Pareto frontiers
-    under the shared core budget."""
+    under the shared core budget.  ``current``/``switch_cost``/
+    ``switch_budget``/``sla_weights`` make it switch-cost-aware and
+    SLA-weighted (see ``optimizer.solve_cluster``); the defaults are the
+    PR 2 behaviour bit-for-bit."""
     return OPT.solve_cluster(cluster, lams, obj or OPT.Objective(),
-                             max_replicas=max_replicas)
+                             max_replicas=max_replicas, current=current,
+                             switch_cost=switch_cost,
+                             switch_budget=switch_budget,
+                             sla_weights=sla_weights)
 
 
 def cluster_split(cluster: ClusterModel, lams: Sequence[float],
@@ -116,10 +125,14 @@ def cluster_split(cluster: ClusterModel, lams: Sequence[float],
     All returned objectives (per-pipeline and summed) are re-expressed
     under the caller's ``obj`` regardless of ``inner`` — fa2/rim solve
     with their own internal weights, and their raw objectives would be
-    incommensurable with ``cluster_ipa``'s.
+    incommensurable with ``cluster_ipa``'s.  The summed objective is also
+    SLA-weighted by the cluster's own ``sla_weights`` (per-pipeline
+    objectives stay raw, as in ``cluster_ipa``), so joint-vs-split
+    objective comparisons remain commensurable on weighted clusters.
     """
     t0 = time.perf_counter()
     o = obj or OPT.Objective()
+    weights = cluster.weights
     caps = proportional_split(cluster, lams)
     sols = []
     for pipe, lam, cap in zip(cluster.pipelines, lams, caps):
@@ -144,7 +157,8 @@ def cluster_split(cluster: ClusterModel, lams: Sequence[float],
     cfg = (ClusterConfig(tuple(s.config for s in sols)) if feasible else None)
     return OPT.ClusterSolution(
         config=cfg, per_pipeline=sols,
-        objective=float(sum(s.objective for s in sols)) if feasible else -np.inf,
+        objective=float(sum(w * s.objective for w, s in zip(weights, sols)))
+        if feasible else -np.inf,
         cost=float(sum(s.cost for s in sols if s.feasible)),
         feasible=feasible, solve_time=time.perf_counter() - t0,
         solver=f"split_{inner}")

@@ -17,7 +17,7 @@ Pareto frontiers under ``sum(cost) <= cores``.
 from __future__ import annotations
 
 import dataclasses
-from typing import Sequence, Tuple
+from typing import Optional, Sequence, Tuple
 
 from repro.core.pipeline import PipelineConfig, PipelineModel
 
@@ -26,18 +26,37 @@ _COST_EPS = 1e-9
 
 @dataclasses.dataclass(frozen=True)
 class ClusterModel:
-    """N pipelines plus the shared core budget C they contend for."""
+    """N pipelines plus the shared core budget C they contend for.
+
+    ``sla_weights`` (INFaaS-style workload importance): per-pipeline
+    multipliers on the arbitration objective — a pipeline with weight 2
+    counts double in the joint knapsack, so under contention its accuracy
+    is sacrificed last.  ``None`` means every pipeline weighs 1.0.
+    """
     name: str
     pipelines: Tuple[PipelineModel, ...]
     cores: float = float("inf")          # shared budget C (inf = unbounded)
+    sla_weights: Optional[Tuple[float, ...]] = None
 
     def __post_init__(self):
         if not self.pipelines:
             raise ValueError("a cluster needs at least one pipeline")
+        if self.sla_weights is not None:
+            if len(self.sla_weights) != len(self.pipelines):
+                raise ValueError("one SLA weight per pipeline required")
+            if any(w <= 0 for w in self.sla_weights):
+                raise ValueError("SLA weights must be positive")
 
     @property
     def n_pipelines(self) -> int:
         return len(self.pipelines)
+
+    @property
+    def weights(self) -> Tuple[float, ...]:
+        """Effective per-pipeline SLA weights (1.0 when unset)."""
+        if self.sla_weights is None:
+            return tuple(1.0 for _ in self.pipelines)
+        return tuple(float(w) for w in self.sla_weights)
 
     def pipeline(self, name: str) -> PipelineModel:
         for p in self.pipelines:
@@ -61,6 +80,15 @@ class ClusterConfig:
     def fits(self, cluster: ClusterModel) -> bool:
         """Does the joint allocation fit the shared budget C?"""
         return self.cost(cluster) <= cluster.cores + _COST_EPS
+
+    def n_changes(self, other: "ClusterConfig") -> int:
+        """How many pipelines differ between two joint configurations —
+        the per-interval switch count the reconfiguration budget caps and
+        the §5.3 adaptation penalty is charged per unit of."""
+        if len(self.pipelines) != len(other.pipelines):
+            raise ValueError("config pipeline count mismatch")
+        return sum(1 for a, b in zip(self.pipelines, other.pipelines)
+                   if a != b)
 
 
 def single(pipe: PipelineModel, cores: float = float("inf")) -> ClusterModel:

@@ -23,9 +23,14 @@ pipeline at one rate to its cost -> objective Pareto frontier (any
 off-frontier config is dominated and can never appear in an optimal joint
 allocation); ``solve_cluster`` then arbitrates one frontier point per
 pipeline under the shared core budget with an exact multiple-choice
-knapsack DP (costs are integral: replicas x base allocation).
-``solve_capped`` is the per-pipeline sub-problem the proportional
-static-split baselines run inside their budget share, and
+knapsack DP (costs are integral: replicas x base allocation).  The DP is
+switch-cost-aware (paper §5.3): given the incumbent ``ClusterConfig`` it
+charges ``switch_cost`` per changed pipeline (the held config enters as a
+zero-penalty stay candidate via ``evaluate_config``, which is hysteresis),
+optionally caps changes per interval with an exact second DP dimension
+(``switch_budget``), and weights pipelines by SLA importance
+(``sla_weights``).  ``solve_capped`` is the per-pipeline sub-problem the
+proportional static-split baselines run inside their budget share, and
 ``solve_cluster_brute`` is the cross-product oracle for the tests.
 """
 from __future__ import annotations
@@ -447,7 +452,13 @@ def solve_capped(pipe: PipelineModel, arrival: float,
 
 @dataclasses.dataclass
 class ClusterSolution:
-    """Joint allocation: one frontier point per pipeline under sum(cost) <= C."""
+    """Joint allocation: one frontier point per pipeline under sum(cost) <= C.
+
+    ``objective`` is the arbitration score: the SLA-weighted sum of
+    per-pipeline objectives minus ``switch_cost`` per pipeline whose chosen
+    config differs from the incumbent.  ``n_switches`` is that change count
+    (0 when no incumbent was given).
+    """
     config: Optional["ClusterConfig"]
     per_pipeline: List[Solution]
     objective: float                     # summed alpha*PAS - beta*cost - ...
@@ -455,22 +466,31 @@ class ClusterSolution:
     feasible: bool
     solve_time: float
     solver: str
+    n_switches: int = 0
 
     @property
     def pas_values(self) -> List[float]:
         return [s.pas for s in self.per_pipeline]
 
 
-def _cluster_solution(cluster, chosen: List[FrontierPoint], t0, solver):
+def _cluster_solution(cluster, chosen: List[FrontierPoint], t0, solver,
+                      weights: Optional[Sequence[float]] = None,
+                      current=None, switch_cost: float = 0.0):
     from repro.core.cluster import ClusterConfig
     sols = [Solution(p.config, p.objective, p.pas, p.cost, p.latency,
                      0.0, True, solver) for p in chosen]
+    cfg = ClusterConfig(tuple(p.config for p in chosen))
+    if weights is None:
+        weights = [1.0] * len(chosen)
+    n_switches = cfg.n_changes(current) if current is not None else 0
+    objective = sum(w * p.objective for w, p in zip(weights, chosen)) \
+        - switch_cost * n_switches
     return ClusterSolution(
-        config=ClusterConfig(tuple(p.config for p in chosen)),
-        per_pipeline=sols,
-        objective=float(sum(p.objective for p in chosen)),
+        config=cfg, per_pipeline=sols,
+        objective=float(objective),
         cost=float(sum(p.cost for p in chosen)),
-        feasible=True, solve_time=time.perf_counter() - t0, solver=solver)
+        feasible=True, solve_time=time.perf_counter() - t0, solver=solver,
+        n_switches=n_switches)
 
 
 def _cluster_infeasible(cluster, t0, solver):
@@ -478,96 +498,336 @@ def _cluster_infeasible(cluster, t0, solver):
                            time.perf_counter() - t0, solver)
 
 
+def evaluate_config(pipe: PipelineModel, config: PipelineConfig,
+                    arrival: float, obj: Objective = Objective(),
+                    latency_model: str = "worst_case"
+                    ) -> Optional[FrontierPoint]:
+    """Score one explicit ``PipelineConfig`` at a rate, or ``None`` when it
+    cannot carry that rate (throughput 10c or the SLA 10b fails).
+
+    This is how the cluster's *incumbent* config enters the switch-aware
+    knapsack: the held config generally sits off the frontier built at the
+    new rate (its replica counts were sized for the old rate), so it must
+    be evaluated explicitly to become the zero-penalty "stay" candidate.
+    """
+    if not config.supports(pipe, arrival):
+        return None
+    lat = float(config.latency(pipe, arrival, latency_model))
+    if lat > pipe.sla:
+        return None
+    # score through the same per-stage terms as _acc_term/_combine_acc so
+    # the incumbent stay candidate is priced through the identical float
+    # path as the frontier challengers it competes against in the knapsack
+    accs = np.array([st.variant(sc.variant).accuracy
+                     for sc, st in zip(config.stages, pipe.stages)])
+    pas_log = np.log(np.maximum(accs, 1e-9) / 100.0)
+    if obj.metric == "pas_prime":
+        acc = ACC.pas_prime_of(config, pipe)  # same sums as acc_norm terms
+    elif obj.metric in ("pas", "log_pas"):
+        acc = _combine_acc(float(np.sum(pas_log)), obj.metric)
+    else:
+        raise ValueError(obj.metric)
+    pas_val = 100.0 * float(np.exp(np.sum(pas_log)))
+    cost = config.cost(pipe)
+    bat = sum(sc.batch for sc in config.stages)
+    objective = obj.alpha * acc - obj.beta * cost - obj.delta * bat
+    return FrontierPoint(cost=float(cost), objective=float(objective),
+                         pas=pas_val, latency=lat, config=config)
+
+
+@dataclasses.dataclass(frozen=True)
+class _Candidate:
+    """One knapsack choice for a pipeline: an operating point with its
+    SLA-weighted, switch-penalized arbitration value."""
+    cost: int
+    value: float
+    switch: bool
+    point: FrontierPoint
+
+
+def _switch_candidates(frontier: List[FrontierPoint],
+                       incumbent: Optional[FrontierPoint],
+                       weight: float, switch_cost: float) -> List[_Candidate]:
+    """Frontier points (penalized unless they equal the incumbent) plus the
+    incumbent itself as the zero-penalty stay option when it is feasible at
+    the new rate but off the frontier.  Frontier domination is preserved:
+    the penalty is constant across all switch candidates, so any off-
+    frontier *switch* stays dominated — only the stay option needs
+    injecting."""
+    inc_cfg = incumbent.config if incumbent is not None else None
+    cands = []
+    seen_incumbent = False
+    for p in frontier:
+        stay = inc_cfg is not None and p.config == inc_cfg
+        seen_incumbent = seen_incumbent or stay
+        cands.append(_Candidate(int(round(p.cost)),
+                                weight * p.objective
+                                - (0.0 if stay else switch_cost),
+                                not stay, p))
+    if inc_cfg is not None and not seen_incumbent:
+        cands.append(_Candidate(int(round(incumbent.cost)),
+                                weight * incumbent.objective, False,
+                                incumbent))
+    return cands
+
+
+def _resolve_weights(cluster, sla_weights) -> List[float]:
+    if sla_weights is None:
+        w = getattr(cluster, "weights", None)
+        return list(w) if w is not None else [1.0] * len(cluster.pipelines)
+    if len(sla_weights) != len(cluster.pipelines):
+        raise ValueError("one SLA weight per pipeline required")
+    return [float(w) for w in sla_weights]
+
+
 def solve_cluster(cluster, arrivals: Sequence[float],
                   obj: Objective = Objective(),
                   budget: Optional[float] = None,
                   max_replicas: int = DEFAULT_MAX_REPLICAS,
-                  latency_model: str = "worst_case") -> ClusterSolution:
+                  latency_model: str = "worst_case",
+                  current=None,
+                  switch_cost: float = 0.0,
+                  switch_budget: Optional[int] = None,
+                  sla_weights: Optional[Sequence[float]] = None
+                  ) -> ClusterSolution:
     """Joint arbitration: pick one frontier point per pipeline maximizing
-    the summed objective under ``sum(cost) <= budget`` (default: the
-    cluster's core budget C).
+    the SLA-weighted summed objective under ``sum(cost) <= budget``
+    (default: the cluster's core budget C).
+
+    Switch-cost awareness (paper §5.3: each reconfiguration costs ~8 s of
+    transition during which the old config keeps serving): when ``current``
+    (the incumbent ``ClusterConfig``) is given, every candidate that
+    differs from a pipeline's held config is charged ``switch_cost``
+    (objective units — the §5.3 adaptation overhead expressed as lost
+    objective), and ``switch_budget`` caps how many pipelines may change
+    per interval.  The incumbent enters the candidate set as a zero-penalty
+    "stay" option whenever it can still carry the new rate — hysteresis
+    falls out of the arithmetic: a challenger must beat the incumbent by
+    more than its own transition cost to be picked.  ``sla_weights``
+    multiplies each pipeline's objective in the knapsack (default: the
+    cluster's own ``sla_weights``, else 1.0) — INFaaS-style workload
+    importance.
 
     Costs are integral (replicas x base allocation), so the multiple-choice
     knapsack runs as an exact DP over budgets 0..C: processing pipelines in
-    order, ``dp[b]`` is the best summed objective of a prefix fitting in
-    ``b`` cores.  ``dp`` stays monotone in ``b`` by induction, which makes
-    the backtrack (walk budgets backwards through each pipeline's pick
-    table) exact.
+    order, ``dp[b]`` is the best summed value of a prefix fitting in ``b``
+    cores.  With a switch budget the DP gains a second exact dimension,
+    ``dp[k][b]`` = best value using exactly ``k`` switches.  With
+    ``switch_cost == 0`` and no switch budget the path is the PR 2 DP
+    bit-for-bit (weights of 1.0 multiply exactly).
     """
     t0 = time.perf_counter()
     if budget is None:
         budget = cluster.cores
+    weights = _resolve_weights(cluster, sla_weights)
+    if current is not None and len(current.pipelines) != len(cluster.pipelines):
+        raise ValueError("current config/cluster pipeline count mismatch")
     frontiers = [pareto_frontier(p, lam, obj, max_replicas, latency_model)
                  for p, lam in zip(cluster.pipelines, arrivals)]
     if any(not f for f in frontiers):
         return _cluster_infeasible(cluster, t0, "cluster_knap")
-    if not np.isfinite(budget):
-        # unbounded pool: each pipeline takes its own best point
-        chosen = [f[-1] for f in frontiers]
-        return _cluster_solution(cluster, chosen, t0, "cluster_knap")
 
+    track_switches = current is not None and (switch_cost > 0.0
+                                              or switch_budget is not None)
+    if not track_switches:
+        return _solve_cluster_plain(cluster, frontiers, weights, budget,
+                                    current, t0)
+
+    incumbents = [evaluate_config(pipe, cfg, lam, obj, latency_model)
+                  for pipe, cfg, lam in zip(cluster.pipelines,
+                                            current.pipelines, arrivals)]
+    cand_tabs = [_switch_candidates(f, inc, w, switch_cost)
+                 for f, inc, w in zip(frontiers, incumbents, weights)]
+    if switch_budget is None:
+        chosen = _knapsack_1d(cand_tabs, budget)
+    else:
+        chosen = _knapsack_2d(cand_tabs, budget,
+                              min(int(switch_budget), len(cand_tabs)))
+    if chosen is None:
+        return _cluster_infeasible(cluster, t0, "cluster_knap")
+    return _cluster_solution(cluster, [c.point for c in chosen], t0,
+                             "cluster_knap", weights, current, switch_cost)
+
+
+def _solve_cluster_plain(cluster, frontiers, weights, budget, current, t0):
+    """The PR 2 exact 1-D knapsack (no switch dimension).  Weighted values
+    only — with weights of 1.0 this is bit-identical to the unweighted DP
+    (IEEE multiplication by 1.0 is exact, and ``_knapsack_1d`` runs the
+    same candidate order, float operations and tie-breaking)."""
+    cand_tabs = [[_Candidate(int(round(p.cost)), w * p.objective, False, p)
+                  for p in f] for f, w in zip(frontiers, weights)]
+    chosen = _knapsack_1d(cand_tabs, budget)
+    if chosen is None:
+        return _cluster_infeasible(cluster, t0, "cluster_knap")
+    return _cluster_solution(cluster, [c.point for c in chosen], t0,
+                             "cluster_knap", weights, current)
+
+
+def _knapsack_1d(cand_tabs: List[List[_Candidate]], budget: float
+                 ) -> Optional[List[_Candidate]]:
+    """Exact multiple-choice knapsack over pre-valued candidates (switch
+    penalties already folded into ``value``)."""
+    if not np.isfinite(budget):
+        return [max(cands, key=lambda c: c.value) for cands in cand_tabs]
     B = int(np.floor(budget + 1e-9))
-    costs = [[int(round(p.cost)) for p in f] for f in frontiers]
     dp = np.zeros(B + 1)
     pick_tabs: List[np.ndarray] = []
-    for f, cs in zip(frontiers, costs):
+    for cands in cand_tabs:
         cur = np.full(B + 1, -np.inf)
         pick = np.full(B + 1, -1, dtype=np.int64)
-        for j, (c, p) in enumerate(zip(cs, f)):
-            if c > B:
+        for j, c in enumerate(cands):
+            if c.cost > B:
                 continue
-            cand = dp[:B + 1 - c] + p.objective
-            seg = cur[c:]
-            sel = pick[c:]
+            cand = dp[:B + 1 - c.cost] + c.value
+            seg = cur[c.cost:]
+            sel = pick[c.cost:]
             better = cand > seg
             seg[better] = cand[better]
             sel[better] = j
         pick_tabs.append(pick)
         dp = cur
     if not np.isfinite(dp[B]):
-        return _cluster_infeasible(cluster, t0, "cluster_knap")
+        return None
     b = B
-    chosen_rev: List[FrontierPoint] = []
-    for f, cs, pick in zip(reversed(frontiers), reversed(costs),
-                           reversed(pick_tabs)):
+    chosen_rev: List[_Candidate] = []
+    for cands, pick in zip(reversed(cand_tabs), reversed(pick_tabs)):
         j = int(pick[b])
         if j < 0:
-            return _cluster_infeasible(cluster, t0, "cluster_knap")
-        chosen_rev.append(f[j])
-        b -= cs[j]
-    return _cluster_solution(cluster, list(reversed(chosen_rev)), t0,
-                             "cluster_knap")
+            return None
+        chosen_rev.append(cands[j])
+        b -= cands[j].cost
+    return list(reversed(chosen_rev))
+
+
+def _knapsack_2d(cand_tabs: List[List[_Candidate]], budget: float, K: int
+                 ) -> Optional[List[_Candidate]]:
+    """Exact DP over (switches used, cores used): ``dp[k][b]`` is the best
+    prefix value using exactly ``k`` switches within ``b`` cores.  The
+    reconfiguration budget K caps changed pipelines per interval."""
+    n = len(cand_tabs)
+    if not np.isfinite(budget):
+        return _bounded_switch_unbounded_cores(cand_tabs, K)
+    B = int(np.floor(budget + 1e-9))
+    dp = np.full((K + 1, B + 1), -np.inf)
+    dp[0, :] = 0.0
+    pick_tabs: List[np.ndarray] = []
+    for cands in cand_tabs:
+        cur = np.full((K + 1, B + 1), -np.inf)
+        pick = np.full((K + 1, B + 1), -1, dtype=np.int64)
+        for j, c in enumerate(cands):
+            if c.cost > B:
+                continue
+            dk = 1 if c.switch else 0
+            for k in range(dk, K + 1):
+                cand = dp[k - dk, :B + 1 - c.cost] + c.value
+                seg = cur[k, c.cost:]
+                sel = pick[k, c.cost:]
+                better = cand > seg
+                seg[better] = cand[better]
+                sel[better] = j
+        pick_tabs.append(pick)
+        dp = cur
+    k_best = int(np.argmax(dp[:, B]))
+    if not np.isfinite(dp[k_best, B]):
+        return None
+    k, b = k_best, B
+    chosen_rev: List[_Candidate] = []
+    for cands, pick in zip(reversed(cand_tabs), reversed(pick_tabs)):
+        j = int(pick[k, b])
+        if j < 0:
+            return None
+        chosen_rev.append(cands[j])
+        b -= cands[j].cost
+        k -= 1 if cands[j].switch else 0
+    return list(reversed(chosen_rev))
+
+
+def _bounded_switch_unbounded_cores(cand_tabs: List[List[_Candidate]],
+                                    K: int) -> Optional[List[_Candidate]]:
+    """Unbounded cores, capped switches: pipelines are independent except
+    for the switch count, so take each pipeline's best stay, then spend the
+    K switches on the largest positive switch gains (pipelines with no
+    feasible stay must switch and consume budget first)."""
+    best_stay = []
+    best_switch = []
+    for cands in cand_tabs:
+        stays = [c for c in cands if not c.switch]
+        sws = [c for c in cands if c.switch]
+        best_stay.append(max(stays, key=lambda c: c.value) if stays else None)
+        best_switch.append(max(sws, key=lambda c: c.value) if sws else None)
+    chosen: List[Optional[_Candidate]] = list(best_stay)
+    forced = [i for i, s in enumerate(best_stay) if s is None]
+    if len(forced) > K:
+        return None
+    for i in forced:
+        if best_switch[i] is None:
+            return None
+        chosen[i] = best_switch[i]
+    left = K - len(forced)
+    gains = sorted(
+        ((best_switch[i].value - best_stay[i].value, i)
+         for i in range(len(cand_tabs))
+         if best_stay[i] is not None and best_switch[i] is not None
+         and best_switch[i].value > best_stay[i].value),
+        reverse=True)
+    for gain, i in gains[:left]:
+        chosen[i] = best_switch[i]
+    return chosen  # type: ignore[return-value]
 
 
 def solve_cluster_brute(cluster, arrivals: Sequence[float],
                         obj: Objective = Objective(),
                         budget: Optional[float] = None,
                         max_replicas: int = DEFAULT_MAX_REPLICAS,
-                        latency_model: str = "worst_case") -> ClusterSolution:
+                        latency_model: str = "worst_case",
+                        current=None,
+                        switch_cost: float = 0.0,
+                        switch_budget: Optional[int] = None,
+                        sla_weights: Optional[Sequence[float]] = None
+                        ) -> ClusterSolution:
     """Oracle: exhaustive cross-product over every pipeline's full feasible
-    config set (not just the frontier) — validates both the frontier
-    construction and the knapsack on toy clusters."""
+    config set (not just the frontier) — validates the frontier
+    construction, the knapsack, and the switch-penalty/SLA-weight
+    accounting on toy clusters.  The incumbent (``current``) is appended to
+    a pipeline's table when feasible at the new rate and not already in it
+    (held replica counts are generally off the n*-substituted grid)."""
     t0 = time.perf_counter()
     if budget is None:
         budget = cluster.cores
+    weights = _resolve_weights(cluster, sla_weights)
+    if current is not None and len(current.pipelines) != len(cluster.pipelines):
+        raise ValueError("current config/cluster pipeline count mismatch")
     tables = []
-    for pipe, lam in zip(cluster.pipelines, arrivals):
+    for p_i, (pipe, lam) in enumerate(zip(cluster.pipelines, arrivals)):
         opts, picks, cost, score, pas_v, lat = _combo_eval(
             pipe, lam, obj, max_replicas, latency_model)
         if len(cost) == 0:
             return _cluster_infeasible(cluster, t0, "cluster_brute")
-        tables.append([FrontierPoint(float(cost[i]), float(score[i]),
-                                     float(pas_v[i]), float(lat[i]),
-                                     _point_config(opts, picks, i))
-                       for i in range(len(cost))])
+        tab = [FrontierPoint(float(cost[i]), float(score[i]),
+                             float(pas_v[i]), float(lat[i]),
+                             _point_config(opts, picks, i))
+               for i in range(len(cost))]
+        if current is not None:
+            inc = evaluate_config(pipe, current.pipelines[p_i], lam, obj,
+                                  latency_model)
+            if inc is not None and all(p.config != inc.config for p in tab):
+                tab.append(inc)
+        tables.append(tab)
+    charge = current is not None
     best_v, best = -np.inf, None
     for combo in itertools.product(*tables):
         tot_c = sum(p.cost for p in combo)
         if tot_c > budget + 1e-9:
             continue
-        v = sum(p.objective for p in combo)
+        n_sw = (sum(1 for p, cur in zip(combo, current.pipelines)
+                    if p.config != cur) if charge else 0)
+        if switch_budget is not None and n_sw > switch_budget:
+            continue
+        v = sum(w * p.objective for w, p in zip(weights, combo)) \
+            - switch_cost * n_sw
         if v > best_v:
             best_v, best = v, combo
     if best is None:
         return _cluster_infeasible(cluster, t0, "cluster_brute")
-    return _cluster_solution(cluster, list(best), t0, "cluster_brute")
+    return _cluster_solution(cluster, list(best), t0, "cluster_brute",
+                             weights, current, switch_cost)

@@ -130,9 +130,24 @@ class ReactivePredictor:
 class OraclePredictor:
     """Ground-truth future max (the Fig.-16 'baseline predictor')."""
 
-    def __init__(self, trace: np.ndarray):
+    def __init__(self, trace: np.ndarray, horizon: int = HORIZON):
         self.trace = np.asarray(trace, np.float64)
+        self.horizon = int(horizon)
 
     def predict_at(self, now_s: int) -> float:
-        fut = self.trace[now_s:now_s + HORIZON]
+        fut = self.trace[now_s:now_s + self.horizon]
         return float(fut.max()) if len(fut) else float(self.trace[-1])
+
+    @classmethod
+    def for_traces(cls, traces, horizon: int = HORIZON):
+        """One oracle per per-pipeline trace — the ``oracles`` argument of
+        ``adapter.run_cluster_trace``."""
+        return [cls(t, horizon) for t in traces]
+
+
+def train_cluster_predictors(traces, **train_kw):
+    """One ``LSTMPredictor`` per per-pipeline trace (each pipeline's load
+    shape differs, so they do not share a model) — the ``predictors``
+    argument of ``adapter.run_cluster_trace``."""
+    return [LSTMPredictor.train(np.asarray(t, np.float32), **train_kw)
+            for t in traces]

@@ -216,12 +216,30 @@ class ClusterSimulator:
                  drop_factor: float = 2.0, max_wait: float = 0.5,
                  seed: int = 0, variant_switch_delay: float = 0.0,
                  scale_up_delay: float = 0.0,
+                 adaptation_delay: float = 0.0,
                  record_timeline: bool = False,
                  request_pool: Optional[RequestPool] = None):
         """``variant_switch_delay``: cold-start of a stage whose model
         variant changed (container pull + model load; the paper reports an
         ~8 s adaptation process and mitigates pull time with MinIO).
         ``scale_up_delay``: startup of additionally provisioned replicas.
+        ``adaptation_delay``: the §5.3 adaptation window — a reconfigured
+        pipeline keeps *serving at its old config* for this long before the
+        new one takes effect (the decision commits immediately: the replica
+        ledger charges the new allocation and ``pipeline_config`` returns
+        the target, but queues/batching/service run the old config until
+        the deferred ``apply`` event fires).  ``serving_config`` exposes
+        what is actually serving; ``reconfig_log`` records every committed
+        *decision* as ``(decided_at, pipeline, scheduled_apply_at)`` — a
+        decision superseded inside its window keeps its entry (its
+        disruption was paid) but its scheduled apply never fires.
+        Known simplification: because the ledger re-assigns cores at the
+        decision instant while old replica sets serve out the window, a
+        downsizing pipeline's old (larger) fleet can briefly overlap
+        another pipeline's grant of the freed cores — total *serving*
+        capacity may transiently exceed C during windows even though the
+        committed ledger never does.  Transition-overlap-aware arbitration
+        (planning against max(old, new) per move) is a ROADMAP item.
         ``record_timeline``: also fill each request's per-stage
         ``stage_enter``/``stage_exit`` dicts (debug/inspection; the hot
         path skips these dict writes — aggregate metrics, drop marks and
@@ -238,6 +256,7 @@ class ClusterSimulator:
         self.max_wait = max_wait
         self.variant_switch_delay = variant_switch_delay
         self.scale_up_delay = scale_up_delay
+        self.adaptation_delay = adaptation_delay
         self.record_timeline = record_timeline
         self._pool = request_pool
 
@@ -310,6 +329,20 @@ class ClusterSimulator:
         self._gen: List[int] = [0] * self.n_stages
         self._timeout_at: List[float] = [_INF] * self.n_stages
         self._wake_at: List[float] = [_INF] * self.n_stages
+        # §5.3 adaptation-window state: committed-but-not-yet-serving config
+        # per pipeline, with a generation counter so a superseding decision
+        # lazily cancels the stale deferred apply event
+        self._pending_cfg: List[Optional[PipelineConfig]] = \
+            [None] * self.n_pipelines
+        self._pending_gen: List[int] = [0] * self.n_pipelines
+        # every committed reconfiguration DECISION, as (decided_at,
+        # pipeline, scheduled_apply_at).  Each entry starts an adaptation
+        # window (the §5.3 disruption is paid from decided_at); a later
+        # decision inside the window supersedes the earlier one, whose
+        # scheduled apply then never fires — so this logs decisions made,
+        # not rollouts completed, and n_reconfigs == len(reconfig_log)
+        self.reconfig_log: List[Tuple[float, int, float]] = []
+        self.n_reconfigs = 0
         # observability (benchmarks / invariants)
         self.events_processed = 0
         self.peak_queue_depth = 0
@@ -323,10 +356,20 @@ class ClusterSimulator:
         The new allocation must fit in ``core_budget`` minus the other
         pipelines' current allocations (the replica ledger); a violating
         request raises ``CoreBudgetExceeded`` and changes nothing.
+
+        A proposal equal to the committed config is a no-op (it neither
+        re-arms timeouts nor counts as a reconfiguration).  With
+        ``adaptation_delay > 0`` a genuine change *commits* now (ledger,
+        ``pipeline_config``) but the stages keep serving the old config
+        until the deferred apply event fires ``adaptation_delay`` later;
+        re-proposing the serving config mid-transition cancels the pending
+        rollout instead of scheduling a new one.
         """
         pipe = self.cluster.pipelines[p]
         if len(config.stages) != len(pipe.stages):
             raise ValueError("config/pipeline stage count mismatch")
+        if config == self.pipeline_config(p):     # committed already
+            return
         new_cost = config.cost(pipe)
         if _check_budget:
             others = sum(self._alloc) - self._alloc[p]
@@ -335,6 +378,31 @@ class ClusterSimulator:
                     f"pipeline {p} wants {new_cost} cores but only "
                     f"{self.core_budget - others} of {self.core_budget} "
                     f"are unallocated")
+        self._alloc[p] = new_cost
+        if self._pending_cfg[p] is not None and \
+                config == self.serving_config(p):
+            # revert to what is already serving: cancel the pending rollout
+            # (the cancel itself starts no new adaptation window, so it adds
+            # no log entry; the aborted decision's entry remains, its
+            # scheduled apply never fires)
+            self._pending_cfg[p] = None
+            self._pending_gen[p] += 1
+            return
+        self.n_reconfigs += 1
+        if self.adaptation_delay > 0:
+            apply_at = self.now + self.adaptation_delay
+            self._pending_cfg[p] = config
+            self._pending_gen[p] += 1
+            self._push(apply_at, "apply", (p, self._pending_gen[p]))
+            self.reconfig_log.append((self.now, p, apply_at))
+            return
+        self.reconfig_log.append((self.now, p, self.now))
+        self._apply_pipeline_config(p, config)
+
+    def _apply_pipeline_config(self, p: int, config: PipelineConfig) -> None:
+        """Make ``config`` the serving configuration of pipeline ``p``
+        (immediately at zero adaptation delay, else at the deferred apply
+        event)."""
         for s, sc in zip(self._stages_of[p], config.stages):
             old = self.free_at[s]
             n = sc.replicas
@@ -356,7 +424,6 @@ class ClusterSimulator:
             # are stale, re-arm from current state
             self._bump(s)
             self._wake_at[s] = _INF
-        self._alloc[p] = new_cost
         self._refresh_lat_tab(self._stages_of[p])
         self._wb = None
         for s in self._stages_of[p]:
@@ -398,13 +465,26 @@ class ClusterSimulator:
         return float(sum(self._alloc))
 
     def pipeline_config(self, p: int) -> PipelineConfig:
-        """The configuration pipeline ``p`` is actually running right now."""
+        """The configuration pipeline ``p`` is *committed* to: the pending
+        transition target while an adaptation window is in flight, else the
+        serving config.  This is what the replica ledger charges and what a
+        holding adapter must re-propose — holding the serving (pre-
+        transition) config instead would cancel an in-flight rollout."""
+        pending = self._pending_cfg[p]
+        if pending is not None:
+            return pending
+        return PipelineConfig(tuple(self.configs[s]
+                                    for s in self._stages_of[p]))
+
+    def serving_config(self, p: int) -> PipelineConfig:
+        """The configuration pipeline ``p``'s stages are actually serving
+        right now (the old config while a transition is in flight)."""
         return PipelineConfig(tuple(self.configs[s]
                                     for s in self._stages_of[p]))
 
     @property
     def current_config(self) -> ClusterConfig:
-        """The joint configuration the simulator is actually running."""
+        """The joint configuration the simulator is committed to."""
         return ClusterConfig(tuple(self.pipeline_config(p)
                                    for p in range(self.n_pipelines)))
 
@@ -606,6 +686,15 @@ class ClusterSimulator:
             q = self.queues[s]
             if len(q.reqs) > q.head:
                 self._try_dispatch(s)
+        elif kind == "apply":
+            # end of a §5.3 adaptation window: the committed config starts
+            # serving (stale events from superseded decisions are ignored
+            # via the pipeline generation counter)
+            p, gen = payload
+            if gen == self._pending_gen[p] and self._pending_cfg[p] is not None:
+                cfg = self._pending_cfg[p]
+                self._pending_cfg[p] = None
+                self._apply_pipeline_config(p, cfg)
 
     def run_until(self, t_end: float) -> None:
         ev = self._events
@@ -682,7 +771,9 @@ class PipelineSimulator(ClusterSimulator):
 
     @property
     def current_config(self) -> PipelineConfig:
-        """The configuration the simulator is actually running right now."""
+        """The configuration the simulator is committed to (the pending
+        transition target while an adaptation window is in flight; see
+        ``pipeline_config`` vs ``serving_config``)."""
         return self.pipeline_config(0)
 
     def reconfigure(self, config: PipelineConfig) -> None:  # type: ignore[override]

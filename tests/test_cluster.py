@@ -74,6 +74,215 @@ def test_knapsack_matches_brute_force(budget, lam_a, lam_b):
         assert k.config.fits(cl)
 
 
+# ---------------------------------------------------------------------------
+# switch-cost-aware arbitration: knapsack vs brute oracle, hysteresis,
+# reconfiguration budget, SLA weights
+# ---------------------------------------------------------------------------
+def _incumbent_for(cl, lams, obj):
+    """A plausible held config: the joint solve at a perturbed rate pair
+    (so its replica counts are generally off the new rates' frontiers)."""
+    sol = OPT.solve_cluster(cl, lams, obj)
+    return sol.config if sol.feasible else None
+
+
+@given(budget=st.integers(6, 55), lam_a=st.floats(1.0, 25.0),
+       lam_b=st.floats(1.0, 25.0), switch_cost=st.floats(0.0, 4.0),
+       switch_budget=st.sampled_from([-1, 0, 1, 2]))
+@settings(max_examples=20, deadline=None)
+def test_switch_knapsack_matches_brute_force(budget, lam_a, lam_b,
+                                             switch_cost, switch_budget):
+    """The switch-cost-aware DP must agree with the cross-product oracle
+    that enumerates all configs and subtracts transition costs."""
+    cl = ClusterModel("toy", toy_cluster().pipelines, float(budget))
+    obj = OPT.Objective(alpha=1.0, beta=0.05)
+    current = _incumbent_for(cl, [lam_a * 0.7 + 1.0, lam_b * 0.9 + 1.0], obj)
+    sb = None if switch_budget < 0 else int(switch_budget)
+    weights = (1.0, 1.7)
+    k = OPT.solve_cluster(cl, [lam_a, lam_b], obj, current=current,
+                          switch_cost=switch_cost, switch_budget=sb,
+                          sla_weights=weights)
+    b = OPT.solve_cluster_brute(cl, [lam_a, lam_b], obj, current=current,
+                                switch_cost=switch_cost, switch_budget=sb,
+                                sla_weights=weights)
+    assert k.feasible == b.feasible
+    if k.feasible:
+        assert k.objective == pytest.approx(b.objective, rel=1e-9, abs=1e-9)
+        assert k.cost <= budget + 1e-9
+        assert k.config.fits(cl)
+        if sb is not None:
+            assert k.n_switches <= sb
+        if current is not None:
+            assert k.n_switches == k.config.n_changes(current)
+
+
+def test_switch_free_solver_bit_identical_to_pr2():
+    """With switch cost 0 and uniform SLA weights the solver must be the
+    PR 2 DP bit-for-bit — same objective float, same config — even when an
+    incumbent is supplied."""
+    cl_pipes = toy_cluster().pipelines
+    obj = OPT.Objective(alpha=1.0, beta=0.05)
+    for budget, lam_a, lam_b in [(10, 5.0, 8.0), (24, 22.0, 4.0),
+                                 (40, 10.0, 10.0), (17, 3.3, 19.2),
+                                 (6, 1.0, 1.0), (55, 25.0, 25.0)]:
+        cl = ClusterModel("toy", cl_pipes, float(budget))
+        base = OPT.solve_cluster(cl, [lam_a, lam_b], obj)
+        new = OPT.solve_cluster(cl, [lam_a, lam_b], obj,
+                                current=base.config if base.feasible else None,
+                                switch_cost=0.0, sla_weights=(1.0, 1.0))
+        assert new.feasible == base.feasible
+        if base.feasible:
+            assert new.objective == base.objective      # bit-identical
+            assert new.cost == base.cost
+            assert new.config == base.config
+
+
+def test_hysteresis_holds_incumbent_against_marginal_gains():
+    """A challenger must beat the incumbent by more than the transition
+    cost: under a prohibitive switch cost the solver re-picks the held
+    config wholesale (and reports zero switches)."""
+    cl = toy_cluster(cores=30.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    inc = OPT.solve_cluster(cl, [10.0, 10.0], obj)
+    assert inc.feasible
+    # slightly perturbed rates the incumbent can still carry
+    moved = OPT.solve_cluster(cl, [9.0, 11.0], obj, current=inc.config,
+                              switch_cost=1e6)
+    assert moved.feasible
+    assert moved.n_switches == 0
+    assert moved.config == inc.config
+    # and with zero switch cost the solver is free to move off it
+    free = OPT.solve_cluster(cl, [9.0, 11.0], obj, current=inc.config,
+                             switch_cost=0.0)
+    assert free.feasible
+    assert free.objective >= moved.objective - 1e-9
+
+
+def test_hysteresis_still_switches_when_incumbent_infeasible():
+    """When the held config cannot carry the new rate there is no stay
+    option: the solver must switch (and charge the penalty) rather than
+    return the stale incumbent."""
+    cl = toy_cluster(cores=40.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    inc = OPT.solve_cluster(cl, [2.0, 2.0], obj)
+    assert inc.feasible
+    sol = OPT.solve_cluster(cl, [24.0, 2.0], obj, current=inc.config,
+                            switch_cost=1e6)
+    assert sol.feasible
+    assert sol.config.pipelines[0] != inc.config.pipelines[0]
+    assert sol.n_switches >= 1
+    assert sol.config.pipelines[0].supports(cl.pipelines[0], 24.0)
+
+
+def test_switch_budget_caps_changes_per_interval():
+    cl = toy_cluster(cores=40.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    inc = OPT.solve_cluster(cl, [2.0, 2.0], obj)
+    assert inc.feasible
+    # both pipelines want to move at the new rates
+    free = OPT.solve_cluster(cl, [14.0, 14.0], obj, current=inc.config,
+                             switch_cost=0.0)
+    assert free.feasible and free.config.n_changes(inc.config) == 2
+    capped = OPT.solve_cluster(cl, [14.0, 14.0], obj, current=inc.config,
+                               switch_cost=0.0, switch_budget=1)
+    # one pipeline's incumbent cannot carry 14 rps -> at most one change is
+    # available for the genuinely-forced pipeline; the solve must either
+    # fit the cap or be infeasible, never exceed it
+    if capped.feasible:
+        assert capped.n_switches <= 1
+    # zero-budget: only feasible when every incumbent still carries its rate
+    frozen = OPT.solve_cluster(cl, [14.0, 14.0], obj, current=inc.config,
+                               switch_cost=0.0, switch_budget=0)
+    if frozen.feasible:
+        assert frozen.n_switches == 0
+        assert frozen.config == inc.config
+
+
+def test_sla_weights_shift_allocation_toward_heavy_pipeline():
+    """Under a binding budget, weighting one pipeline must never lower its
+    per-pipeline objective, and on this asymmetric cluster it strictly
+    raises it (cores migrate toward the weighted pipeline)."""
+    cl = toy_cluster(cores=18.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    lams = [12.0, 12.0]
+    uniform = OPT.solve_cluster(cl, lams, obj)
+    heavy_a = OPT.solve_cluster(cl, lams, obj, sla_weights=(8.0, 1.0))
+    assert uniform.feasible and heavy_a.feasible
+    assert heavy_a.per_pipeline[0].objective >= \
+        uniform.per_pipeline[0].objective - 1e-9
+    assert heavy_a.per_pipeline[0].objective > \
+        uniform.per_pipeline[0].objective + 1e-6
+
+
+def test_cluster_model_sla_weights_validation():
+    pipes = toy_cluster().pipelines
+    assert ClusterModel("w", pipes, 10.0).weights == (1.0, 1.0)
+    assert ClusterModel("w", pipes, 10.0, (1.0, 2.0)).weights == (1.0, 2.0)
+    with pytest.raises(ValueError):
+        ClusterModel("w", pipes, 10.0, (1.0,))
+    with pytest.raises(ValueError):
+        ClusterModel("w", pipes, 10.0, (1.0, -2.0))
+
+
+def test_cluster_default_weights_flow_into_solver():
+    """solve_cluster defaults its SLA weights to the cluster's own."""
+    pipes = toy_cluster().pipelines
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    weighted_cl = ClusterModel("w", pipes, 22.0, (1.0, 8.0))
+    plain_cl = ClusterModel("w", pipes, 22.0)
+    implicit = OPT.solve_cluster(weighted_cl, [12.0, 12.0], obj)
+    explicit = OPT.solve_cluster(plain_cl, [12.0, 12.0], obj,
+                                 sla_weights=(1.0, 8.0))
+    assert implicit.config == explicit.config
+    assert implicit.objective == pytest.approx(explicit.objective)
+
+
+def test_weighted_cluster_keeps_joint_split_commensurable():
+    """cluster_split must weight its summed objective by the cluster's
+    sla_weights exactly as cluster_ipa does, or the joint-vs-split
+    dominance gate is vacuous on weighted clusters.  Dominance itself
+    still holds: the split's combo lies in the joint's feasible set and
+    per-pipeline argmaxes are weight-invariant."""
+    pipes = toy_cluster().pipelines
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    lams = [22.0, 4.0]
+    for w in ((4.0, 1.0), (1.0, 4.0)):
+        cl = ClusterModel("w", pipes, 24.0, w)
+        joint = BL.cluster_ipa(cl, lams, obj)
+        split = BL.cluster_split(cl, lams, "ipa", obj)
+        assert joint.feasible and split.feasible
+        assert joint.objective >= split.objective - 1e-9
+        # the split's sum really is the weighted one
+        assert split.objective == pytest.approx(
+            sum(wi * s.objective for wi, s in zip(w, split.per_pipeline)))
+
+
+def test_split_policies_reject_joint_only_knobs():
+    """Silently ignoring the switch/weight knobs for split policies would
+    benchmark the wrong experiment — they must be rejected loudly."""
+    cl = toy_cluster(cores=30.0)
+    rates = [np.full(20, 3.0), np.full(20, 3.0)]
+    for kw in ({"switch_cost": 0.1}, {"switch_budget": 1},
+               {"sla_weights": (2.0, 1.0)}):
+        with pytest.raises(ValueError):
+            AD.run_cluster_trace(cl, rates, policy="split_ipa", **kw)
+    # adaptation_delay is simulator-side and legal for every policy
+    res = AD.run_cluster_trace(cl, rates, policy="split_ipa",
+                               obj=OPT.Objective(alpha=1.0, beta=0.02),
+                               adaptation_delay=2.0, seed=1)
+    assert res.completed + res.dropped == res.arrived
+
+
+def test_cluster_config_n_changes():
+    cl = toy_cluster()
+    a = OPT.solve_cluster(cl, [5.0, 5.0], OPT.Objective()).config
+    b = OPT.solve_cluster(cl, [20.0, 5.0], OPT.Objective()).config
+    assert a.n_changes(a) == 0
+    mixed = ClusterConfig((b.pipelines[0], a.pipelines[1]))
+    assert mixed.n_changes(a) == (1 if b.pipelines[0] != a.pipelines[0] else 0)
+    with pytest.raises(ValueError):
+        a.n_changes(ClusterConfig((a.pipelines[0],)))
+
+
 def test_joint_dominates_proportional_split():
     """The split's feasible set is a subset of the joint's: the knapsack
     objective can never be worse, and on asymmetric demand it is strictly
@@ -228,6 +437,39 @@ def test_joint_beats_split_on_objective_end_to_end(cluster_results):
 def test_joint_beats_split_on_pas_end_to_end(cluster_results):
     _, results = cluster_results
     assert results["ipa"].mean_pas > results["split_ipa"].mean_pas - 1e-9
+
+
+def test_infeasible_hold_mid_transition_keeps_committed_target():
+    """Regression (held-config drift): when the joint solver returns an
+    infeasible plan while a reconfiguration is still rolling out, the
+    adapter must hold the simulator's committed config — the in-flight
+    transition target — NOT the pre-transition config the stages are still
+    serving.  Re-proposing the serving config would silently cancel the
+    committed rollout and drift the cost/PAS records."""
+    cl = ClusterModel("one", (toy_pipeline("A"),), cores=1000.0)
+    # interval 4 s, adaptation window 6 s: the t=8 decision is still in
+    # flight at the t=12 boundary
+    r = np.concatenate([np.full(4, 3.0), np.full(4, 12.0),
+                        np.full(4, 60.0), np.full(4, 3.0)])
+    res = AD.run_cluster_trace(cl, [r], policy="ipa",
+                               obj=OPT.Objective(alpha=1.0, beta=0.02),
+                               interval=4.0, seed=3, max_replicas=2,
+                               adaptation_delay=6.0)
+    recs = res.per_pipeline[0].intervals
+    assert [rec.t for rec in recs] == [0.0, 4.0, 8.0, 12.0]
+    # t=8: demand jumped to 12 -> a genuine change was committed
+    assert recs[2].feasible
+    assert recs[2].cost > recs[1].cost
+    # t=12: 60 rps is infeasible at max_replicas=2 -> the adapter holds;
+    # the held record must carry the committed (transition-target) cost,
+    # not the pre-transition config's
+    assert not recs[3].feasible
+    assert recs[3].lam_hat == 60.0
+    assert recs[3].cost == recs[2].cost
+    # exactly one committed change, decided at t=8, applying at t=14 —
+    # the hold must not have restarted (or cancelled) the rollout
+    assert res.n_reconfigs == 1
+    assert res.reconfig_log == [(8.0, 0, 14.0)]
 
 
 def test_ragged_traces_supported():

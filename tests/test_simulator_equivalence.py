@@ -280,6 +280,121 @@ def test_reconfigure_shrink_keeps_soonest_free_replicas():
     assert sorted(sim.free_at[0]) == [1.0, 3.0]
 
 
+def test_adaptation_window_serves_old_config_until_apply():
+    """§5.3 transition: a reconfigured pipeline keeps serving the old
+    config for the adaptation window; the decision commits immediately
+    (``current_config``) but the rollout applies later."""
+    pipe = two_stage(extra_variant=True)
+    cfg_old = PipelineConfig((StageConfig("a0", 1, 1), StageConfig("b0", 1, 1)))
+    cfg_new = PipelineConfig((StageConfig("a1", 1, 2), StageConfig("b0", 1, 1)))
+    sim = PipelineSimulator(pipe, cfg_old, adaptation_delay=2.0)
+    sim.reconfigure(cfg_new)
+    assert sim.current_config == cfg_new          # committed
+    assert sim.serving_config(0) == cfg_old       # still serving old
+    # a request inside the window is served at the OLD variant's latency
+    r = Request(arrival=0.5, sla=pipe.sla)
+    sim.inject(r)
+    sim.run_until(1.5)
+    l_a0 = float(pipe.stages[0].variants[0].latency(1))
+    l_a1 = float(pipe.stages[0].variants[1].latency(1))
+    l_b0 = float(pipe.stages[1].variants[0].latency(1))
+    assert r.done == pytest.approx(0.5 + l_a0 + l_b0, abs=1e-9)
+    # after the window the new config serves
+    r2 = Request(arrival=2.5, sla=pipe.sla)
+    sim.inject(r2)
+    sim.run_until(10.0)
+    assert sim.serving_config(0) == cfg_new
+    assert r2.done == pytest.approx(2.5 + l_a1 + l_b0, abs=1e-9)
+    assert sim.reconfig_log == [(0.0, 0, 2.0)]
+    assert sim.n_reconfigs == 1
+
+
+def test_adaptation_window_supersede_and_noop():
+    """A second decision inside the window replaces the target (stale
+    apply events are generation-cancelled); re-proposing the committed
+    config is a free no-op; re-proposing the serving config cancels the
+    rollout without logging a phantom reconfiguration."""
+    pipe = two_stage(extra_variant=True)
+    cfg_a = PipelineConfig((StageConfig("a0", 1, 1), StageConfig("b0", 1, 1)))
+    cfg_b = PipelineConfig((StageConfig("a0", 2, 2), StageConfig("b0", 1, 1)))
+    cfg_c = PipelineConfig((StageConfig("a1", 1, 2), StageConfig("b0", 1, 1)))
+    sim = PipelineSimulator(pipe, cfg_a, adaptation_delay=2.0)
+    sim.reconfigure(cfg_b)                        # applies at 2.0
+    sim.reconfigure(cfg_b)                        # no-op: already committed
+    assert sim.n_reconfigs == 1
+    sim.run_until(1.0)
+    sim.reconfigure(cfg_c)                        # supersedes: applies at 3.0
+    sim.run_until(2.5)
+    assert sim.serving_config(0) == cfg_a         # stale apply was ignored
+    sim.run_until(3.5)
+    assert sim.serving_config(0) == cfg_c
+    assert sim.reconfig_log == [(0.0, 0, 2.0), (1.0, 0, 3.0)]
+    # cancel: propose what is already serving mid-rollout
+    sim.run_until(4.0)
+    sim.reconfigure(cfg_b)                        # applies at 6.0
+    sim.reconfigure(cfg_c)                        # back to serving: cancel
+    assert sim.current_config == cfg_c
+    sim.run_until(8.0)
+    assert sim.serving_config(0) == cfg_c         # rollout was cancelled
+    assert sim.n_reconfigs == 3
+    assert len(sim.reconfig_log) == 3
+
+
+# ---------------------------------------------------------------------------
+# golden 3-pipeline cluster trace: pins event counts, completion totals and
+# the reconfiguration log so event-loop perf work can't silently change
+# cluster semantics
+# ---------------------------------------------------------------------------
+def _golden_cluster():
+    def mk(name, lat1, lat2):
+        def var(vname, l1, acc, alloc=1):
+            return ModelVariant(vname, acc, alloc, (0.0, l1 * 0.7, l1 * 0.3))
+        s1 = StageModel(f"{name}_a", (var(f"{name}a0", lat1, 60.0),
+                                      var(f"{name}a1", 2 * lat1, 75.0, 2)),
+                        sla=5 * lat1, batch_choices=(1, 2, 4))
+        s2 = StageModel(f"{name}_b", (var(f"{name}b0", lat2, 70.0),),
+                        sla=5 * lat2, batch_choices=(1, 2, 4))
+        return PipelineModel(name, (s1, s2))
+    return ClusterModel("golden", (mk("p0", 0.05, 0.03),
+                                   mk("p1", 0.04, 0.02),
+                                   mk("p2", 0.06, 0.035)), cores=40.0)
+
+
+def test_golden_cluster_trace_is_pinned():
+    """Deterministic seeded 3-pipeline ClusterSimulator run with scripted
+    mid-flight reconfigurations (adaptation windows in flight across
+    boundaries).  The exact event count, per-pipeline completion/drop
+    totals and the reconfiguration log are golden — any change means the
+    cluster event-loop semantics moved and must be re-derived on purpose."""
+    cl = _golden_cluster()
+    cfg0 = ClusterConfig(tuple(
+        PipelineConfig((StageConfig(p.stages[0].variants[0].name, 2, 2),
+                        StageConfig(p.stages[1].variants[0].name, 2, 1)))
+        for p in cl.pipelines))
+    sim = ClusterSimulator(cl, cfg0, adaptation_delay=1.5)
+    for p, rate in enumerate((18.0, 90.0, 12.0)):
+        for t in TR.arrivals_from_rates(np.full(12, rate), seed=100 + p):
+            sim.inject(Request(arrival=float(t), sla=cl.pipelines[p].sla), p)
+    sim.run_until(5.0)
+    # variant upgrade on p0, replica grow on p1 (both roll out at 6.5)
+    sim.reconfigure_pipeline(0, PipelineConfig(
+        (StageConfig("p0a1", 2, 3), StageConfig("p0b0", 2, 1))))
+    sim.reconfigure_pipeline(1, PipelineConfig(
+        (StageConfig("p1a0", 2, 3), StageConfig("p1b0", 2, 2))))
+    sim.run_until(6.0)
+    # supersede p0's pending rollout mid-window (now rolls out at 7.5)
+    sim.reconfigure_pipeline(0, PipelineConfig(
+        (StageConfig("p0a1", 4, 2), StageConfig("p0b0", 2, 1))))
+    sim.run_until(12 + 60 * max(sim.sla_of))
+    assert sim.reconfig_log == [(5.0, 0, 6.5), (5.0, 1, 6.5), (6.0, 0, 7.5)]
+    assert sim.n_reconfigs == 3
+    totals = [(m.arrived, m.completed, m.dropped)
+              for m in sim.metrics_by_pipe]
+    assert totals == [(241, 241, 0), (1107, 334, 773), (132, 132, 0)]
+    assert sim.events_processed == 3325
+    assert sim.queued == 0 and sim.in_service == 0
+
+
 def test_reconfigure_variant_switch_applies_cold_start():
     pipe = two_stage(extra_variant=True)
     sim = PipelineSimulator(pipe, PipelineConfig(
