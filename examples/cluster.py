@@ -12,7 +12,11 @@ solver (``optimizer.solve_cluster`` via ``adapter.run_cluster_trace``):
 
 * ``adaptation_delay`` — the §5.3 transition: a reconfigured pipeline
   keeps serving its old config for ~8 s before the new one takes effect,
-  so interval PAS records become realized time-weighted values.
+  so interval PAS/cost records become realized time-weighted values.
+  The arbitration is transition-overlap-aware: through the window a
+  changed pipeline is budgeted (solver) and charged (ledger) at
+  max(old, new) cores, so a downsizer's freed cores only become
+  grantable once its window closes — serving capacity never exceeds C.
 * ``switch_cost`` — hysteresis: every config change is charged this much
   objective in the knapsack, and the held (incumbent) config competes
   penalty-free, so a challenger must beat it by more than the transition

@@ -1,0 +1,33 @@
+#!/usr/bin/env bash
+# Doc-link checker: fail when README.md / docs/ARCHITECTURE.md reference a
+# file, module or symbol that no longer exists, so the docs cannot rot
+# silently.  Three checkable reference conventions (all backtick-quoted):
+#   `file.ext` / `dir/file.ext` -> the file must exist in the repo
+#                                  (repo-root-relative, e.g. `BENCH_sim.json`)
+#   `repro.mod.sub`      -> src/repro/mod/sub.py (or package dir) must exist;
+#                           a trailing non-module component must be a
+#                           def/class/assignment in the parent module
+#   `symbol()`           -> a `def symbol(` must exist under src/ benchmarks/
+set -euo pipefail
+cd "$(dirname "$0")/.."
+for f in README.md docs/ARCHITECTURE.md; do
+  [[ -f "$f" ]] || { echo "doc-link: missing doc: $f"; exit 1; }
+done
+fails=0
+while IFS= read -r t; do
+  if [[ "$t" =~ \.(py|sh|md|json|toml)$ ]]; then
+    [[ -e "$t" ]] || { echo "doc-link: missing file: $t"; fails=1; }
+  elif [[ "$t" =~ ^repro(\.[A-Za-z_][A-Za-z0-9_]*)+$ ]]; then
+    p="src/${t//.//}"
+    if [[ ! -e "$p.py" && ! -d "$p" ]]; then
+      mod="src/$(dirname "${t//.//}").py" sym="${t##*.}"
+      grep -qE "(def|class) ${sym}\b|^${sym} *=" "$mod" 2>/dev/null \
+        || { echo "doc-link: missing symbol: $t"; fails=1; }
+    fi
+  elif [[ "$t" =~ ^[A-Za-z_][A-Za-z0-9_]*\(\)$ ]]; then
+    grep -rqE "def ${t%()}\(" src benchmarks scripts \
+      || { echo "doc-link: missing function: $t"; fails=1; }
+  fi
+done < <(grep -ho '`[^`]*`' README.md docs/ARCHITECTURE.md | tr -d '`' | sort -u)
+[[ "$fails" == 0 ]] && echo "doc-link: README.md + docs/ARCHITECTURE.md OK"
+exit "$fails"

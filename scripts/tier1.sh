@@ -6,8 +6,11 @@
 # arbitration layer is broken), and on the switch scenario: with the
 # §5.3 adaptation window modeled, the hysteresis run must reconfigure no
 # more often than the no-hysteresis run at equal-or-better realized PAS
-# (bench_cluster --smoke runs both gates).  Slow tests (LSTM training,
-# jax decode loops) stay opt-in via `pytest -m slow`.
+# (bench_cluster --smoke runs both gates, plus the transition-overlap
+# invariant: serving cost <= C at every instant).  Slow tests (LSTM
+# training, jax decode loops) stay opt-in via `pytest -m slow`.  The
+# doc-link checker fails if README.md / docs/ARCHITECTURE.md reference a
+# file or symbol that no longer exists.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -16,3 +19,4 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 python benchmarks/bench_simulator.py --smoke
 python benchmarks/bench_cluster.py --smoke
+bash scripts/check_docs.sh

@@ -9,8 +9,10 @@ per-interval PAS / cost and global latency / drop / SLA metrics.
 traces drive one ``ClusterSimulator`` (one event heap, one shared core
 pool); at each boundary a cluster policy (joint knapsack, or proportional
 static split) proposes a joint configuration, infeasible pipelines hold
-the config the simulator is committed to, and the whole joint config is
-applied only if it fits the core budget.
+the config the simulator is committed to, and the joint config is
+admitted only if it fits the core budget through its §5.3 transition
+windows — otherwise the admissible subset is applied staged (downsizes
+now, grows once the freed cores leave their windows).
 
 Cluster demand estimation mirrors what the single-pipeline ``run_trace``
 already supports: reactive (max of the trailing window), burst-aware
@@ -191,6 +193,10 @@ class ClusterTraceResult:
     # its scheduled apply never fires)
     n_reconfigs: int = 0
     reconfig_log: List = dataclasses.field(default_factory=list)
+    # supremum over the run of the cores the *serving* replica fleets held
+    # at any instant (transition windows included) — the witness for the
+    # overlap invariant peak_serving_cores <= budget
+    peak_serving_cores: float = 0.0
 
     @property
     def mean_pas(self) -> float:
@@ -289,6 +295,41 @@ def _cluster_demands(rates, t0: float, interval: float, demand_mode: str,
     return out
 
 
+def _staged_admission(cluster, mixed: ClusterConfig,
+                      committed: Sequence[PipelineConfig],
+                      serving: Sequence[PipelineConfig]):
+    """Admit the subset of a joint proposal that fits the budget *through*
+    its transition windows, holding the rest for a later boundary.
+
+    Used when ``mixed`` fits C after its windows but not through them
+    (``sum_p max(old_p, new_p) > C``).  Changes are admitted greedily by
+    ascending transition-charge delta — downsizes first (their charge is
+    the old cost they already hold, so they are always admissible), then
+    the cheapest grows — which is exactly the §5.3 staging a real shared
+    pool needs: free the cores this interval, grant them the next.  This
+    keeps policies that do not plan overlap-aware (the static splits)
+    live on opposite-direction resizes: without it a shrink+grow pair
+    whose combined transition never fits would be held forever.  Returns
+    ``(staged config, per-pipeline admitted flags)``.
+    """
+    serve_c = [s.cost(pipe) for s, pipe in zip(serving, cluster.pipelines)]
+    hold_c = [max(sc, c.cost(pipe))
+              for sc, c, pipe in zip(serve_c, committed, cluster.pipelines)]
+    total = sum(hold_c)
+    chosen = list(committed)
+    flags = [False] * cluster.n_pipelines
+    deltas = sorted(
+        (max(serve_c[p], mixed.pipelines[p].cost(pipe)) - hold_c[p], p)
+        for p, pipe in enumerate(cluster.pipelines)
+        if mixed.pipelines[p] != committed[p])
+    for d, p in deltas:
+        if total + d <= cluster.cores + 1e-9:
+            chosen[p] = mixed.pipelines[p]
+            flags[p] = True
+            total += d
+    return ClusterConfig(tuple(chosen)), flags
+
+
 def _decide_cluster(cluster, lams, policy, obj, max_replicas,
                     ipa_kwargs=None):
     try:
@@ -338,8 +379,16 @@ def run_cluster_trace(cluster: ClusterModel,
     pipelines changed per interval) and ``sla_weights`` flow into
     ``optimizer.solve_cluster`` together with the simulator's committed
     config as the incumbent.  ``adaptation_delay > 0`` makes the simulator
-    serve the old config for that window after each change, and interval
-    PAS records become realized time-weighted values.
+    serve the old config for that window after each change; interval PAS
+    *and cost* records become realized time-weighted values, the joint
+    solver plans overlap-aware (``overlap=True`` with the serving configs,
+    so each changed pipeline is budgeted at ``max(old, new)`` through its
+    window), and a joint proposal is admitted only if it fits the budget
+    throughout its transition (``ClusterSimulator.fits_transition``) —
+    otherwise it is admitted *staged* via ``_staged_admission``:
+    downsizes immediately (their transition charge is what they already
+    hold), grows at a later boundary once the freed cores leave their
+    windows.
     """
     rates = [np.asarray(r, np.float64) for r in rates]
     if len(rates) != cluster.n_pipelines:
@@ -358,7 +407,10 @@ def run_cluster_trace(cluster: ClusterModel,
     times = [arrivals_from_rates(r, seed=seed + 1000003 * i)
              for i, r in enumerate(rates)]
     ipa_kwargs = {"switch_cost": switch_cost, "switch_budget": switch_budget,
-                  "sla_weights": sla_weights}
+                  "sla_weights": sla_weights,
+                  # §5.3 windows in play: plan against max(old, new) so a
+                  # downsizer's freed cores are never granted mid-window
+                  "overlap": adaptation_delay > 0}
 
     # bootstrap from the first-interval peaks; fall back to cheapest
     # feasible (joint fa2-low split would still have to fit C, so use the
@@ -393,54 +445,72 @@ def run_cluster_trace(cluster: ClusterModel,
         lam_hat = _cluster_demands(rates, t0, interval, demand_mode,
                                    predictors, oracles)
         # --- optimize + arbitrate + reconfigure --------------------------
-        if policy == "ipa":
-            ipa_kwargs["current"] = sim.current_config
-        sol = _decide_cluster(cluster, lam_hat, policy, obj, max_replicas,
-                              ipa_kwargs)
-        per = sol.per_pipeline if sol.per_pipeline else [
-            OPT._infeasible(0.0, sol.solver)] * cluster.n_pipelines
         committed_before = [sim.pipeline_config(p)
                             for p in range(cluster.n_pipelines)]
         serving_before = [sim.serving_config(p)
                           for p in range(cluster.n_pipelines)]
+        if policy == "ipa":
+            ipa_kwargs["current"] = sim.current_config
+            # mid-window the serving fleet differs from the committed
+            # incumbent; the overlap charge must price what actually holds
+            # cores right now
+            ipa_kwargs["serving"] = ClusterConfig(tuple(serving_before))
+        sol = _decide_cluster(cluster, lam_hat, policy, obj, max_replicas,
+                              ipa_kwargs)
+        per = sol.per_pipeline if sol.per_pipeline else [
+            OPT._infeasible(0.0, sol.solver)] * cluster.n_pipelines
         mixed = ClusterConfig(tuple(
             s.config if s.feasible else committed_before[p]
             for p, s in enumerate(per)))
-        applied_ok = mixed.fits(cluster)
-        if applied_ok:
-            sim.reconfigure(mixed)
-            for p, (s, lh) in enumerate(zip(per, lam_hat)):
-                if s.feasible:
-                    sim.set_lam_est(p, lh)
+        # admission is transition-aware: the joint proposal must fit C
+        # through every adaptation window (max(old, new) per changed
+        # pipeline), not merely after them.  A proposal that only fits
+        # after its windows is admitted *staged*: downsizes now (their
+        # charge is already held), grows once the freed cores leave their
+        # windows at a later boundary.  At zero delay there are no
+        # windows and an over-budget proposal holds everyone (the PR 2/3
+        # behaviour).
+        if sim.fits_transition(mixed):
+            admitted = [True] * cluster.n_pipelines
             applied = mixed
-        else:  # joint overflow: everyone holds
+        elif adaptation_delay > 0:
+            applied, admitted = _staged_admission(
+                cluster, mixed, committed_before, serving_before)
+        else:  # joint overflow, no windows to stage across: everyone holds
+            admitted = [False] * cluster.n_pipelines
             applied = sim.current_config
+        if any(admitted):
+            sim.reconfigure(applied)
+            for p, (s, lh) in enumerate(zip(per, lam_hat)):
+                if admitted[p] and s.feasible:
+                    sim.set_lam_est(p, lh)
         for p, pipe in enumerate(cluster.pipelines):
             cfg = applied.pipelines[p]
             if cfg != committed_before[p]:
                 pending_until[p] = t0 + adaptation_delay
-            # realized PAS: the fraction of this interval still served at
-            # the old config while the §5.3 adaptation window runs out.
-            # cost deliberately stays the COMMITTED config's (the ledger
-            # view, which the sum<=C budget invariant is stated over) and
-            # is NOT blended — per-pipeline windows end at different times,
-            # so realized per-interval costs can transiently exceed C and
-            # would break that invariant (see the ClusterSimulator
-            # adaptation_delay docstring on the transition-overlap
-            # simplification)
+            # realized PAS and cost: the fraction of this interval still
+            # served at the old config while the §5.3 adaptation window
+            # runs out.  Both are blended time-weighted the same way; the
+            # sum<=C budget invariant survives the blend because the
+            # transition-charged ledger keeps instantaneous serving cost
+            # <= C at every instant, so its per-interval time average
+            # summed over pipelines is <= C too
             frac = 0.0
             if t1 > t0 and pending_until[p] > t0:
                 frac = min(pending_until[p] - t0, t1 - t0) / (t1 - t0)
             pas = frac * pas_of(serving_before[p], pipe) \
                 + (1.0 - frac) * pas_of(cfg, pipe)
+            cost = frac * serving_before[p].cost(pipe) \
+                + (1.0 - frac) * cfg.cost(pipe)
             seg = rates[p][int(t0):int(t1)]   # empty once a shorter
             records[p].append(IntervalRecord(  # pipeline's trace has ended
                 t=t0, lam_true=float(seg.max()) if len(seg) else 0.0,
                 lam_hat=lam_hat[p], pas=pas,
-                cost=cfg.cost(pipe),
                 # feasible means "this interval's proposal was applied for
-                # this pipeline" — a hold-all overflow holds everyone
-                feasible=per[p].feasible and applied_ok,
+                # this pipeline" — under staged admission only the admitted
+                # subset counts; a zero-delay overflow holds everyone
+                cost=cost,
+                feasible=per[p].feasible and admitted[p],
                 solve_time=sol.solve_time))
         # --- serve this interval -----------------------------------------
         for p, (tt, pipe) in enumerate(zip(times, cluster.pipelines)):
@@ -465,4 +535,5 @@ def run_cluster_trace(cluster: ClusterModel,
                               sim_events=sim.events_processed,
                               peak_queue_depth=sim.peak_queue_depth,
                               n_reconfigs=sim.n_reconfigs,
-                              reconfig_log=list(sim.reconfig_log))
+                              reconfig_log=list(sim.reconfig_log),
+                              peak_serving_cores=sim.peak_serving_cores)

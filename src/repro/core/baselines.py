@@ -94,18 +94,21 @@ def cluster_ipa(cluster: ClusterModel, lams: Sequence[float],
                 max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
                 current=None, switch_cost: float = 0.0,
                 switch_budget: Optional[int] = None,
-                sla_weights: Optional[Sequence[float]] = None
+                sla_weights: Optional[Sequence[float]] = None,
+                overlap: bool = False, serving=None
                 ) -> OPT.ClusterSolution:
     """Joint arbitration: one knapsack over per-pipeline Pareto frontiers
     under the shared core budget.  ``current``/``switch_cost``/
-    ``switch_budget``/``sla_weights`` make it switch-cost-aware and
-    SLA-weighted (see ``optimizer.solve_cluster``); the defaults are the
-    PR 2 behaviour bit-for-bit."""
+    ``switch_budget``/``sla_weights``/``overlap``/``serving`` make it
+    switch-cost-aware, SLA-weighted and transition-overlap-aware (the knob
+    semantics are documented in one place: ``optimizer.solve_cluster``);
+    the defaults are the PR 2 behaviour bit-for-bit."""
     return OPT.solve_cluster(cluster, lams, obj or OPT.Objective(),
                              max_replicas=max_replicas, current=current,
                              switch_cost=switch_cost,
                              switch_budget=switch_budget,
-                             sla_weights=sla_weights)
+                             sla_weights=sla_weights,
+                             overlap=overlap, serving=serving)
 
 
 def cluster_split(cluster: ClusterModel, lams: Sequence[float],

@@ -90,6 +90,35 @@ class ClusterConfig:
         return sum(1 for a, b in zip(self.pipelines, other.pipelines)
                    if a != b)
 
+    def transition_cost(self, cluster: ClusterModel,
+                        serving: "ClusterConfig") -> float:
+        """Peak cores needed to move from ``serving`` to this config when
+        every changed pipeline's old replica fleet serves out a §5.3
+        adaptation window: ``sum_p max(old_p, new_p)``.
+
+        During a transition both fleets are provisioned — the old one is
+        still serving, the new one is starting — so the honest capacity
+        charge per pipeline is the larger of the two allocations, not the
+        post-transition one.  This is what the overlap-aware solver plans
+        against and what the simulator's ledger holds until the deferred
+        apply event fires."""
+        if len(self.pipelines) != len(serving.pipelines):
+            raise ValueError("config pipeline count mismatch")
+        if len(self.pipelines) != len(cluster.pipelines):
+            raise ValueError("config/cluster pipeline count mismatch")
+        return float(sum(max(new.cost(pipe), old.cost(pipe))
+                         for new, old, pipe in zip(self.pipelines,
+                                                   serving.pipelines,
+                                                   cluster.pipelines)))
+
+    def fits_transition(self, cluster: ClusterModel,
+                        serving: "ClusterConfig") -> bool:
+        """Does the move from ``serving`` to this config fit the budget C
+        *throughout* the adaptation window (old and new fleets counted at
+        ``max``), not merely after it?"""
+        return self.transition_cost(cluster, serving) \
+            <= cluster.cores + _COST_EPS
+
 
 def single(pipe: PipelineModel, cores: float = float("inf")) -> ClusterModel:
     """Wrap one pipeline as a cluster (the N=1 special case)."""

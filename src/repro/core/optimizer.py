@@ -28,10 +28,15 @@ switch-cost-aware (paper §5.3): given the incumbent ``ClusterConfig`` it
 charges ``switch_cost`` per changed pipeline (the held config enters as a
 zero-penalty stay candidate via ``evaluate_config``, which is hysteresis),
 optionally caps changes per interval with an exact second DP dimension
-(``switch_budget``), and weights pipelines by SLA importance
-(``sla_weights``).  ``solve_capped`` is the per-pipeline sub-problem the
-proportional static-split baselines run inside their budget share, and
-``solve_cluster_brute`` is the cross-product oracle for the tests.
+(``switch_budget``), weights pipelines by SLA importance
+(``sla_weights``), and — with ``overlap=True`` — plans each pipeline
+against the transition charge ``max(old, new)`` so that a §5.3 adaptation
+window (old fleet serving while the new one provisions) can never push
+instantaneous serving capacity past the shared budget.  ``solve_capped``
+is the per-pipeline sub-problem the proportional static-split baselines
+run inside their budget share, and ``solve_cluster_brute`` is the
+cross-product oracle for the tests.  The knob semantics live in one
+place: the ``solve_cluster`` docstring.
 """
 from __future__ import annotations
 
@@ -455,9 +460,11 @@ class ClusterSolution:
     """Joint allocation: one frontier point per pipeline under sum(cost) <= C.
 
     ``objective`` is the arbitration score: the SLA-weighted sum of
-    per-pipeline objectives minus ``switch_cost`` per pipeline whose chosen
-    config differs from the incumbent.  ``n_switches`` is that change count
-    (0 when no incumbent was given).
+    per-pipeline objectives minus ``switch_cost`` per *charged* switch.
+    ``n_switches`` is that charged count (0 when no incumbent was given):
+    pipelines whose chosen config differs from the committed incumbent and
+    — when a serving config was given — from the still-serving config,
+    whose re-proposal is a free cancel of the pending rollout.
     """
     config: Optional["ClusterConfig"]
     per_pipeline: List[Solution]
@@ -475,14 +482,15 @@ class ClusterSolution:
 
 def _cluster_solution(cluster, chosen: List[FrontierPoint], t0, solver,
                       weights: Optional[Sequence[float]] = None,
-                      current=None, switch_cost: float = 0.0):
+                      current=None, switch_cost: float = 0.0,
+                      serving=None):
     from repro.core.cluster import ClusterConfig
     sols = [Solution(p.config, p.objective, p.pas, p.cost, p.latency,
                      0.0, True, solver) for p in chosen]
     cfg = ClusterConfig(tuple(p.config for p in chosen))
     if weights is None:
         weights = [1.0] * len(chosen)
-    n_switches = cfg.n_changes(current) if current is not None else 0
+    n_switches = _charged_switches(chosen, current, serving)
     objective = sum(w * p.objective for w, p in zip(weights, chosen)) \
         - switch_cost * n_switches
     return ClusterSolution(
@@ -496,6 +504,20 @@ def _cluster_solution(cluster, chosen: List[FrontierPoint], t0, solver,
 def _cluster_infeasible(cluster, t0, solver):
     return ClusterSolution(None, [], -np.inf, 0.0, False,
                            time.perf_counter() - t0, solver)
+
+
+def _charged_switches(chosen: Sequence[FrontierPoint], current,
+                      serving) -> int:
+    """Switches that cost something: the chosen config differs from the
+    committed incumbent AND — mid-window — from the still-serving config
+    (re-proposing the serving config is a free cancel in the simulator:
+    no new adaptation window, no reconfiguration counted)."""
+    if current is None:
+        return 0
+    return sum(
+        1 for i, p in enumerate(chosen)
+        if p.config != current.pipelines[i]
+        and (serving is None or p.config != serving.pipelines[i]))
 
 
 def evaluate_config(pipe: PipelineModel, config: PipelineConfig,
@@ -538,7 +560,10 @@ def evaluate_config(pipe: PipelineModel, config: PipelineConfig,
 @dataclasses.dataclass(frozen=True)
 class _Candidate:
     """One knapsack choice for a pipeline: an operating point with its
-    SLA-weighted, switch-penalized arbitration value."""
+    SLA-weighted, switch-penalized arbitration value.  ``cost`` is the
+    knapsack *weight* — the transition charge ``max(old, new)`` under
+    overlap-aware arbitration, which can exceed the operating point's own
+    steady-state cost (``point.cost``)."""
     cost: int
     value: float
     switch: bool
@@ -547,28 +572,73 @@ class _Candidate:
 
 def _switch_candidates(frontier: List[FrontierPoint],
                        incumbent: Optional[FrontierPoint],
-                       weight: float, switch_cost: float) -> List[_Candidate]:
-    """Frontier points (penalized unless they equal the incumbent) plus the
+                       weight: float, switch_cost: float,
+                       old_cost: Optional[int] = None,
+                       revert: Optional[FrontierPoint] = None
+                       ) -> List[_Candidate]:
+    """Frontier points (penalized unless they are free, below) plus the
     incumbent itself as the zero-penalty stay option when it is feasible at
     the new rate but off the frontier.  Frontier domination is preserved:
     the penalty is constant across all switch candidates, so any off-
-    frontier *switch* stays dominated — only the stay option needs
-    injecting."""
+    frontier *switch* stays dominated — only the free options need
+    injecting.
+
+    Free (unpenalized, no switch-budget slot) candidates match what the
+    simulator executes without starting a new adaptation window: the
+    committed incumbent (a hold is a no-op) and — mid-window only —
+    ``revert``, the still-serving old config (re-proposing it cancels the
+    pending rollout for free in ``ClusterSimulator.reconfigure_pipeline``).
+
+    ``old_cost`` (overlap-aware arbitration): the cores the pipeline's
+    currently *serving* fleet holds.  When given, every candidate's
+    knapsack weight becomes ``max(old_cost, candidate cost)`` — during the
+    §5.3 adaptation window the old fleet serves while the new one is
+    provisioned, so the budget must admit the larger of the two.  The
+    transform is monotone in cost, so frontier domination still holds."""
     inc_cfg = incumbent.config if incumbent is not None else None
+    rev_cfg = revert.config if revert is not None else None
+
+    def knap_cost(cost: float) -> int:
+        c = int(round(cost))
+        return c if old_cost is None else max(c, old_cost)
+
     cands = []
-    seen_incumbent = False
+    seen_incumbent = seen_revert = False
     for p in frontier:
         stay = inc_cfg is not None and p.config == inc_cfg
+        rev = rev_cfg is not None and p.config == rev_cfg
         seen_incumbent = seen_incumbent or stay
-        cands.append(_Candidate(int(round(p.cost)),
+        seen_revert = seen_revert or rev
+        free = stay or rev
+        cands.append(_Candidate(knap_cost(p.cost),
                                 weight * p.objective
-                                - (0.0 if stay else switch_cost),
-                                not stay, p))
+                                - (0.0 if free else switch_cost),
+                                not free, p))
     if inc_cfg is not None and not seen_incumbent:
-        cands.append(_Candidate(int(round(incumbent.cost)),
+        cands.append(_Candidate(knap_cost(incumbent.cost),
                                 weight * incumbent.objective, False,
                                 incumbent))
+    if rev_cfg is not None and not seen_revert:
+        cands.append(_Candidate(knap_cost(revert.cost),
+                                weight * revert.objective, False,
+                                revert))
     return cands
+
+
+def _overlap_old_costs(cluster, current, overlap: bool,
+                       serving) -> Optional[List[int]]:
+    """Per-pipeline cores held by the currently *serving* fleets, for the
+    overlap-aware transition charge — ``None`` when overlap arbitration is
+    off (no ``overlap`` flag or no incumbent to overlap with).  ``serving``
+    defaults to ``current``; they differ only while an adaptation window is
+    already in flight at decision time."""
+    if not overlap or current is None:
+        return None
+    serving_cfg = serving if serving is not None else current
+    if len(serving_cfg.pipelines) != len(cluster.pipelines):
+        raise ValueError("serving config/cluster pipeline count mismatch")
+    return [int(round(cfg.cost(pipe)))
+            for cfg, pipe in zip(serving_cfg.pipelines, cluster.pipelines)]
 
 
 def _resolve_weights(cluster, sla_weights) -> List[float]:
@@ -588,11 +658,17 @@ def solve_cluster(cluster, arrivals: Sequence[float],
                   current=None,
                   switch_cost: float = 0.0,
                   switch_budget: Optional[int] = None,
-                  sla_weights: Optional[Sequence[float]] = None
+                  sla_weights: Optional[Sequence[float]] = None,
+                  overlap: bool = False,
+                  serving=None
                   ) -> ClusterSolution:
     """Joint arbitration: pick one frontier point per pipeline maximizing
     the SLA-weighted summed objective under ``sum(cost) <= budget``
     (default: the cluster's core budget C).
+
+    This is the single place the cluster knobs are documented; the adapter
+    (``adapter.run_cluster_trace``) and the joint policy
+    (``baselines.cluster_ipa``) forward them here verbatim.
 
     Switch-cost awareness (paper §5.3: each reconfiguration costs ~8 s of
     transition during which the old config keeps serving): when ``current``
@@ -608,13 +684,39 @@ def solve_cluster(cluster, arrivals: Sequence[float],
     cluster's own ``sla_weights``, else 1.0) — INFaaS-style workload
     importance.
 
+    Transition-overlap awareness (``overlap=True``, requires ``current``):
+    during the adaptation window a changed pipeline's *old* replica fleet
+    keeps serving while the new one is provisioned, so the pipeline
+    transiently holds ``max(old, new)`` cores, not ``new``.  With overlap
+    on, every candidate's knapsack weight becomes that transition charge
+    (old cost taken from ``serving`` — the config actually serving right
+    now, which mid-window differs from the committed ``current`` — default
+    ``current``), making overlapping grants of a downsizer's freed cores
+    inadmissible *at decision time* instead of transiently violating the
+    shared budget mid-window.  The reported ``ClusterSolution.cost`` stays
+    the steady-state (post-transition) cost; only admissibility changes.
+    ``overlap`` without ``current`` is a no-op (nothing old to overlap
+    with), and the adapter only sets it when ``adaptation_delay > 0`` —
+    at zero delay there is no window and the non-overlap path is
+    bit-for-bit the PR 3 solver.
+
+    Passing ``serving`` explicitly also prices the mid-window *revert*
+    correctly: a pipeline's still-serving config (when it differs from the
+    committed incumbent) enters as a second free candidate — no
+    ``switch_cost``, no ``switch_budget`` slot — because re-proposing it
+    cancels the pending rollout in the simulator without starting a new
+    adaptation window.  ``n_switches`` counts only *charged* switches
+    (differs from both the incumbent and the serving config).
+
     Costs are integral (replicas x base allocation), so the multiple-choice
     knapsack runs as an exact DP over budgets 0..C: processing pipelines in
     order, ``dp[b]`` is the best summed value of a prefix fitting in ``b``
     cores.  With a switch budget the DP gains a second exact dimension,
     ``dp[k][b]`` = best value using exactly ``k`` switches.  With
-    ``switch_cost == 0`` and no switch budget the path is the PR 2 DP
-    bit-for-bit (weights of 1.0 multiply exactly).
+    ``switch_cost == 0``, no switch budget and ``overlap=False`` the path
+    is the PR 2 DP bit-for-bit (weights of 1.0 multiply exactly).  All
+    paths are validated against the ``solve_cluster_brute`` cross-product
+    oracle in the property tests.
     """
     t0 = time.perf_counter()
     if budget is None:
@@ -627,17 +729,34 @@ def solve_cluster(cluster, arrivals: Sequence[float],
     if any(not f for f in frontiers):
         return _cluster_infeasible(cluster, t0, "cluster_knap")
 
+    old_costs = _overlap_old_costs(cluster, current, overlap, serving)
     track_switches = current is not None and (switch_cost > 0.0
-                                              or switch_budget is not None)
+                                              or switch_budget is not None
+                                              or old_costs is not None)
     if not track_switches:
         return _solve_cluster_plain(cluster, frontiers, weights, budget,
                                     current, t0)
 
+    serving_cfg = serving                 # current is not None here
+    if serving_cfg is not None and \
+            len(serving_cfg.pipelines) != len(cluster.pipelines):
+        raise ValueError("serving config/cluster pipeline count mismatch")
     incumbents = [evaluate_config(pipe, cfg, lam, obj, latency_model)
                   for pipe, cfg, lam in zip(cluster.pipelines,
                                             current.pipelines, arrivals)]
-    cand_tabs = [_switch_candidates(f, inc, w, switch_cost)
-                 for f, inc, w in zip(frontiers, incumbents, weights)]
+    # mid-window free-revert candidates: the still-serving config, whose
+    # re-proposal cancels the pending rollout for free in the simulator
+    reverts: List[Optional[FrontierPoint]] = [None] * len(cluster.pipelines)
+    if serving_cfg is not None:
+        reverts = [evaluate_config(pipe, scfg, lam, obj, latency_model)
+                   if scfg != ccfg else None
+                   for pipe, scfg, ccfg, lam
+                   in zip(cluster.pipelines, serving_cfg.pipelines,
+                          current.pipelines, arrivals)]
+    cand_tabs = [_switch_candidates(
+        f, inc, w, switch_cost,
+        old_costs[i] if old_costs is not None else None, reverts[i])
+        for i, (f, inc, w) in enumerate(zip(frontiers, incumbents, weights))]
     if switch_budget is None:
         chosen = _knapsack_1d(cand_tabs, budget)
     else:
@@ -646,7 +765,8 @@ def solve_cluster(cluster, arrivals: Sequence[float],
     if chosen is None:
         return _cluster_infeasible(cluster, t0, "cluster_knap")
     return _cluster_solution(cluster, [c.point for c in chosen], t0,
-                             "cluster_knap", weights, current, switch_cost)
+                             "cluster_knap", weights, current, switch_cost,
+                             serving_cfg)
 
 
 def _solve_cluster_plain(cluster, frontiers, weights, budget, current, t0):
@@ -783,20 +903,31 @@ def solve_cluster_brute(cluster, arrivals: Sequence[float],
                         current=None,
                         switch_cost: float = 0.0,
                         switch_budget: Optional[int] = None,
-                        sla_weights: Optional[Sequence[float]] = None
+                        sla_weights: Optional[Sequence[float]] = None,
+                        overlap: bool = False,
+                        serving=None
                         ) -> ClusterSolution:
     """Oracle: exhaustive cross-product over every pipeline's full feasible
     config set (not just the frontier) — validates the frontier
-    construction, the knapsack, and the switch-penalty/SLA-weight
+    construction, the knapsack, and the switch-penalty/SLA-weight/overlap
     accounting on toy clusters.  The incumbent (``current``) is appended to
     a pipeline's table when feasible at the new rate and not already in it
-    (held replica counts are generally off the n*-substituted grid)."""
+    (held replica counts are generally off the n*-substituted grid).  With
+    ``overlap=True`` the budget constraint is evaluated over the transition
+    charge ``sum_p max(old_p, new_p)`` (old from ``serving``, default
+    ``current``) exactly as ``solve_cluster`` plans."""
     t0 = time.perf_counter()
     if budget is None:
         budget = cluster.cores
     weights = _resolve_weights(cluster, sla_weights)
     if current is not None and len(current.pipelines) != len(cluster.pipelines):
         raise ValueError("current config/cluster pipeline count mismatch")
+    old_costs = _overlap_old_costs(cluster, current, overlap, serving)
+    serving_cfg = serving if (serving is not None and current is not None) \
+        else None
+    if serving_cfg is not None and \
+            len(serving_cfg.pipelines) != len(cluster.pipelines):
+        raise ValueError("serving config/cluster pipeline count mismatch")
     tables = []
     for p_i, (pipe, lam) in enumerate(zip(cluster.pipelines, arrivals)):
         opts, picks, cost, score, pas_v, lat = _combo_eval(
@@ -812,15 +943,22 @@ def solve_cluster_brute(cluster, arrivals: Sequence[float],
                                   latency_model)
             if inc is not None and all(p.config != inc.config for p in tab):
                 tab.append(inc)
+        if serving_cfg is not None and \
+                serving_cfg.pipelines[p_i] != current.pipelines[p_i]:
+            rev = evaluate_config(pipe, serving_cfg.pipelines[p_i], lam,
+                                  obj, latency_model)
+            if rev is not None and all(p.config != rev.config for p in tab):
+                tab.append(rev)
         tables.append(tab)
-    charge = current is not None
     best_v, best = -np.inf, None
     for combo in itertools.product(*tables):
-        tot_c = sum(p.cost for p in combo)
+        if old_costs is not None:
+            tot_c = sum(max(p.cost, o) for p, o in zip(combo, old_costs))
+        else:
+            tot_c = sum(p.cost for p in combo)
         if tot_c > budget + 1e-9:
             continue
-        n_sw = (sum(1 for p, cur in zip(combo, current.pipelines)
-                    if p.config != cur) if charge else 0)
+        n_sw = _charged_switches(combo, current, serving_cfg)
         if switch_budget is not None and n_sw > switch_budget:
             continue
         v = sum(w * p.objective for w, p in zip(weights, combo)) \
@@ -830,4 +968,4 @@ def solve_cluster_brute(cluster, arrivals: Sequence[float],
     if best is None:
         return _cluster_infeasible(cluster, t0, "cluster_brute")
     return _cluster_solution(cluster, list(best), t0, "cluster_brute",
-                             weights, current, switch_cost)
+                             weights, current, switch_cost, serving_cfg)

@@ -233,13 +233,17 @@ class ClusterSimulator:
         *decision* as ``(decided_at, pipeline, scheduled_apply_at)`` — a
         decision superseded inside its window keeps its entry (its
         disruption was paid) but its scheduled apply never fires.
-        Known simplification: because the ledger re-assigns cores at the
-        decision instant while old replica sets serve out the window, a
-        downsizing pipeline's old (larger) fleet can briefly overlap
-        another pipeline's grant of the freed cores — total *serving*
-        capacity may transiently exceed C during windows even though the
-        committed ledger never does.  Transition-overlap-aware arbitration
-        (planning against max(old, new) per move) is a ROADMAP item.
+        Transition-overlap accounting: during the window the old replica
+        fleet is still serving while the new one provisions, so the ledger
+        charges the pipeline ``max(old, new)`` cores from the decision
+        instant until the apply fires (then drops to the new cost).  A
+        grant of a downsizer's freed cores to another pipeline inside the
+        window therefore raises ``CoreBudgetExceeded`` *at decision time*
+        — instantaneous serving capacity can never exceed C
+        (``peak_serving_cores`` is the run's witness; the overlap-aware
+        ``optimizer.solve_cluster(..., overlap=True)`` plans against the
+        same ``max(old, new)`` charge so its proposals are admissible by
+        construction).
         ``record_timeline``: also fill each request's per-stage
         ``stage_enter``/``stage_exit`` dicts (debug/inspection; the hot
         path skips these dict writes — aggregate metrics, drop marks and
@@ -299,14 +303,28 @@ class ClusterSimulator:
             SimMetrics() for _ in range(self.n_pipelines)]
         self.sla_of: List[float] = [p.sla for p in cluster.pipelines]
         self._lam_of: List[float] = [10.0] * self.n_pipelines
-        # shared-pool replica ledger: cores currently allocated per pipeline
+        # shared-pool replica ledger: cores currently held per pipeline.
+        # While a §5.3 adaptation window is in flight this is the
+        # transition charge max(serving, committed) — the old fleet still
+        # serves while the new one provisions — and drops to the committed
+        # cost when the deferred apply fires.  _serving_cost tracks what
+        # the serving fleets alone hold (<= _alloc elementwise always).
         self._alloc: List[float] = [
             cfg.cost(pipe) for cfg, pipe
             in zip(config.pipelines, cluster.pipelines)]
+        self._serving_cost: List[float] = list(self._alloc)
         if sum(self._alloc) > self.core_budget + 1e-9:
             raise CoreBudgetExceeded(
                 f"initial config needs {sum(self._alloc)} cores, "
                 f"budget is {self.core_budget}")
+        # invariant witness: sup over time of sum(_serving_cost) — serving
+        # cost is piecewise constant between (re)configuration instants, so
+        # maxing at every change captures the exact supremum.  A zero-delay
+        # *joint* reconfigure is semantically atomic: per-pipeline partial
+        # sums mid-loop are states that never existed, so peak sampling is
+        # suppressed until the whole joint config has been applied.
+        self.peak_serving_cores = float(sum(self._serving_cost))
+        self._joint_apply = False
 
         self._events: List[Tuple[float, int, str, object]] = []
         self._seq = itertools.count()
@@ -363,7 +381,10 @@ class ClusterSimulator:
         ``pipeline_config``) but the stages keep serving the old config
         until the deferred apply event fires ``adaptation_delay`` later;
         re-proposing the serving config mid-transition cancels the pending
-        rollout instead of scheduling a new one.
+        rollout instead of scheduling a new one.  The ledger charge
+        through the window is ``max(serving, new)`` — the old fleet serves
+        it out while the new one provisions — so an overlapping grant of
+        not-yet-freed cores is rejected here, at decision time.
         """
         pipe = self.cluster.pipelines[p]
         if len(config.stages) != len(pipe.stages):
@@ -371,14 +392,18 @@ class ClusterSimulator:
         if config == self.pipeline_config(p):     # committed already
             return
         new_cost = config.cost(pipe)
+        if self.adaptation_delay > 0:
+            trans_cost = max(self._serving_cost[p], new_cost)
+        else:
+            trans_cost = new_cost
         if _check_budget:
             others = sum(self._alloc) - self._alloc[p]
-            if others + new_cost > self.core_budget + 1e-9:
+            if others + trans_cost > self.core_budget + 1e-9:
                 raise CoreBudgetExceeded(
-                    f"pipeline {p} wants {new_cost} cores but only "
-                    f"{self.core_budget - others} of {self.core_budget} "
-                    f"are unallocated")
-        self._alloc[p] = new_cost
+                    f"pipeline {p} wants {trans_cost} cores through its "
+                    f"transition but only {self.core_budget - others} of "
+                    f"{self.core_budget} are unallocated")
+        self._alloc[p] = trans_cost
         if self._pending_cfg[p] is not None and \
                 config == self.serving_config(p):
             # revert to what is already serving: cancel the pending rollout
@@ -424,19 +449,38 @@ class ClusterSimulator:
             # are stale, re-arm from current state
             self._bump(s)
             self._wake_at[s] = _INF
+        # the old fleet stops serving here: settle the ledger from the
+        # transition charge max(old, new) down to the new steady-state cost
+        cost = config.cost(self.cluster.pipelines[p])
+        self._alloc[p] = cost
+        self._serving_cost[p] = cost
+        if not self._joint_apply:
+            self._note_serving_peak()
         self._refresh_lat_tab(self._stages_of[p])
         self._wb = None
         for s in self._stages_of[p]:
             self._try_dispatch(s)
 
     def reconfigure(self, config: ClusterConfig) -> None:
-        """Atomically reconfigure every pipeline to a joint configuration."""
-        if config.cost(self.cluster) > self.core_budget + 1e-9:
+        """Atomically reconfigure every pipeline to a joint configuration.
+
+        With ``adaptation_delay > 0`` the admission check is the
+        *transition* cost — every changed pipeline charged
+        ``max(serving, new)`` through its window — so a joint proposal
+        that only fits after the windows close is rejected now, not
+        silently over-committed mid-window."""
+        cost = self.transition_cost(config)
+        if cost > self.core_budget + 1e-9:
             raise CoreBudgetExceeded(
-                f"joint config needs {config.cost(self.cluster)} cores, "
+                f"joint config needs {cost} cores through its transition, "
                 f"budget is {self.core_budget}")
-        for p, cfg in enumerate(config.pipelines):
-            self.reconfigure_pipeline(p, cfg, _check_budget=False)
+        self._joint_apply = True
+        try:
+            for p, cfg in enumerate(config.pipelines):
+                self.reconfigure_pipeline(p, cfg, _check_budget=False)
+        finally:
+            self._joint_apply = False
+        self._note_serving_peak()
 
     def set_lam_est(self, p: int, v: float) -> None:
         """Update pipeline ``p``'s arrival-rate estimate (re-arms pending
@@ -461,8 +505,50 @@ class ClusterSimulator:
 
     @property
     def allocated_cores(self) -> float:
-        """Cores currently held across all pipelines (the ledger total)."""
+        """Cores currently held across all pipelines (the ledger total,
+        transition charges included)."""
         return float(sum(self._alloc))
+
+    @property
+    def serving_cores(self) -> float:
+        """Cores the currently *serving* replica fleets hold — during a
+        §5.3 window this is the old fleets' total, which the ledger's
+        ``max(old, new)`` charge bounds from above, so
+        ``serving_cores <= allocated_cores <= core_budget`` always."""
+        return float(sum(self._serving_cost))
+
+    def _note_serving_peak(self) -> None:
+        total = sum(self._serving_cost)
+        if total > self.peak_serving_cores:
+            self.peak_serving_cores = total
+
+    @property
+    def serving_cluster_config(self) -> ClusterConfig:
+        """The joint configuration the stages are actually serving right
+        now (per-pipeline ``serving_config``)."""
+        return ClusterConfig(tuple(self.serving_config(p)
+                                   for p in range(self.n_pipelines)))
+
+    def transition_cost(self, config: ClusterConfig) -> float:
+        """Cores a joint reconfiguration to ``config`` would hold through
+        its §5.3 adaptation windows: each pipeline charged
+        ``max(serving, new)`` — delegated to
+        ``ClusterConfig.transition_cost`` against the serving config (at
+        zero adaptation delay there is no window and this is just
+        ``config.cost``).  ``fits_transition`` is the admission predicate
+        the adapter checks before applying a joint proposal."""
+        if self.adaptation_delay <= 0:
+            return config.cost(self.cluster)
+        return config.transition_cost(self.cluster,
+                                      self.serving_cluster_config)
+
+    def fits_transition(self, config: ClusterConfig) -> bool:
+        """Does reconfiguring to ``config`` fit the core budget throughout
+        its adaptation windows (not merely after them)?"""
+        if self.adaptation_delay <= 0:
+            return config.fits(self.cluster)
+        return config.fits_transition(self.cluster,
+                                      self.serving_cluster_config)
 
     def pipeline_config(self, p: int) -> PipelineConfig:
         """The configuration pipeline ``p`` is *committed* to: the pending

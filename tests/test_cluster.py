@@ -272,6 +272,309 @@ def test_split_policies_reject_joint_only_knobs():
     assert res.completed + res.dropped == res.arrived
 
 
+# ---------------------------------------------------------------------------
+# transition-overlap-aware arbitration: during a §5.3 adaptation window a
+# changed pipeline holds max(old, new) cores (the old fleet serves while the
+# new one provisions), and both the solver and the ledger must account for it
+# ---------------------------------------------------------------------------
+@given(budget=st.integers(8, 55), lam_a=st.floats(1.0, 25.0),
+       lam_b=st.floats(1.0, 25.0), switch_cost=st.floats(0.0, 2.0),
+       switch_budget=st.sampled_from([-1, 1, 2]))
+@settings(max_examples=20, deadline=None)
+def test_overlap_knapsack_matches_brute_force(budget, lam_a, lam_b,
+                                              switch_cost, switch_budget):
+    """The overlap-aware DP (knapsack weights = max(old, new)) must agree
+    with the cross-product oracle evaluating the same transition charge,
+    including when the serving config differs from the committed incumbent
+    (a window already in flight at decision time)."""
+    cl = ClusterModel("toy", toy_cluster().pipelines, float(budget))
+    obj = OPT.Objective(alpha=1.0, beta=0.05)
+    current = _incumbent_for(cl, [lam_a * 0.7 + 1.0, lam_b * 0.9 + 1.0], obj)
+    serving = _incumbent_for(cl, [lam_a * 0.5 + 2.0, lam_b * 1.1 + 0.5], obj)
+    sb = None if switch_budget < 0 else int(switch_budget)
+    k = OPT.solve_cluster(cl, [lam_a, lam_b], obj, current=current,
+                          switch_cost=switch_cost, switch_budget=sb,
+                          overlap=True, serving=serving)
+    b = OPT.solve_cluster_brute(cl, [lam_a, lam_b], obj, current=current,
+                                switch_cost=switch_cost, switch_budget=sb,
+                                overlap=True, serving=serving)
+    assert k.feasible == b.feasible
+    if k.feasible:
+        assert k.objective == pytest.approx(b.objective, rel=1e-9, abs=1e-9)
+        assert k.config.fits(cl)
+        if current is not None:
+            old = serving if serving is not None else current
+            assert k.config.transition_cost(cl, old) <= budget + 1e-9
+
+
+def test_overlap_off_or_without_incumbent_is_the_pr3_path():
+    """``overlap=False`` (the default, what the adapter passes at zero
+    adaptation delay) must be bit-for-bit the PR 3 solver, and
+    ``overlap=True`` with no incumbent is a no-op (nothing old to overlap
+    with)."""
+    cl = toy_cluster(cores=24.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    inc = OPT.solve_cluster(cl, [10.0, 10.0], obj)
+    assert inc.feasible
+    base = OPT.solve_cluster(cl, [8.0, 14.0], obj, current=inc.config,
+                             switch_cost=0.1)
+    off = OPT.solve_cluster(cl, [8.0, 14.0], obj, current=inc.config,
+                            switch_cost=0.1, overlap=False)
+    assert off.objective == base.objective           # bit-identical
+    assert off.config == base.config
+    plain = OPT.solve_cluster(cl, [8.0, 14.0], obj)
+    noop = OPT.solve_cluster(cl, [8.0, 14.0], obj, overlap=True)
+    assert noop.objective == plain.objective
+    assert noop.config == plain.config
+    # a serving config of the wrong shape is rejected loudly
+    with pytest.raises(ValueError):
+        OPT.solve_cluster(cl, [8.0, 14.0], obj, current=inc.config,
+                          overlap=True,
+                          serving=ClusterConfig((inc.config.pipelines[0],)))
+
+
+def test_revert_to_serving_is_a_free_candidate():
+    """Mid-window the still-serving config can be re-proposed for free —
+    the simulator cancels the pending rollout without a new window — so
+    the solver must not charge it switch_cost: under a prohibitive
+    penalty, with a committed rollout that turned out wrong, the solver
+    reverts to the serving config rather than holding the bad incumbent,
+    and reports zero charged switches."""
+    cl = toy_cluster(cores=40.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    serving_sol = OPT.solve_cluster(cl, [10.0, 10.0], obj)
+    committed_sol = OPT.solve_cluster(cl, [2.0, 2.0], obj,
+                                      budget=10.0)    # a cheap rollout
+    assert serving_sol.feasible and committed_sol.feasible
+    assert serving_sol.config != committed_sol.config
+    # demand stays at 10 rps: the cheap committed target is the mistake,
+    # the serving config is (near-)optimal.  A prohibitive switch cost
+    # must not trap the solver on the committed incumbent.
+    sol = OPT.solve_cluster(cl, [10.0, 10.0], obj,
+                            current=committed_sol.config, switch_cost=1e6,
+                            overlap=True, serving=serving_sol.config)
+    assert sol.feasible
+    assert sol.n_switches == 0
+    assert sol.config == serving_sol.config
+    assert sol.objective > -1e5          # nothing was charged the penalty
+    # and the oracle agrees on the semantics
+    b = OPT.solve_cluster_brute(cl, [10.0, 10.0], obj,
+                                current=committed_sol.config,
+                                switch_cost=1e6,
+                                overlap=True, serving=serving_sol.config)
+    assert b.feasible
+    assert b.objective == pytest.approx(sol.objective, rel=1e-9, abs=1e-9)
+    # a revert does not consume a switch-budget slot either
+    frozen = OPT.solve_cluster(cl, [10.0, 10.0], obj,
+                               current=committed_sol.config,
+                               switch_cost=0.0, switch_budget=0,
+                               overlap=True, serving=serving_sol.config)
+    assert frozen.feasible and frozen.n_switches == 0
+
+
+def test_overlap_charges_serving_not_committed():
+    """Mid-window the cores are held by the *serving* fleet: with a large
+    serving cost the overlap-aware solve must become infeasible at a budget
+    the committed-cost view would accept."""
+    cl = toy_cluster(cores=24.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.02)
+    small = OPT.solve_cluster(cl, [2.0, 2.0], obj)
+    assert small.feasible and small.cost <= 20.0
+    # a serving config pinned at heavy variants, far over the committed cost
+    heavy = ClusterConfig(tuple(
+        PipelineConfig(tuple(StageConfig(st_m.heaviest.name, 1, 3)
+                             for st_m in pipe.stages))
+        for pipe in cl.pipelines))
+    assert heavy.cost(cl) > cl.cores
+    sol = OPT.solve_cluster(cl, [2.0, 2.0], obj, current=small.config,
+                            switch_cost=0.1, overlap=True, serving=heavy)
+    # whatever is chosen, the serving fleets alone exceed C through any
+    # window, so no transition plan can fit
+    assert not sol.feasible
+
+
+def _explicit(pipe, variant_i: int, replicas: int) -> PipelineConfig:
+    return PipelineConfig(tuple(
+        StageConfig(st_m.variants[variant_i].name, 1, replicas)
+        for st_m in pipe.stages))
+
+
+def test_ledger_holds_transition_charge_until_apply():
+    """Golden deferred-grant run: a downsizer's freed cores must not be
+    grantable until its window closes.  Pre-overlap this exact sequence was
+    admissible (the post-transition joint config fits C), and the serving
+    fleets transiently held 24 of 20 cores."""
+    cl = toy_cluster(cores=20.0)
+    a, b = cl.pipelines
+    a_big, a_small = _explicit(a, 2, 2), _explicit(a, 0, 1)   # 16 -> 2 cores
+    b_small, b_big = _explicit(b, 0, 1), _explicit(b, 2, 1)   # 2 -> 8 cores
+    sim = ClusterSimulator(cl, ClusterConfig((a_big, b_small)),
+                           adaptation_delay=5.0)
+    assert sim.allocated_cores == 18.0
+    # the post-transition joint target fits C — PR 3 admitted it wholesale
+    flipped = ClusterConfig((a_small, b_big))
+    assert flipped.fits(cl)
+    assert flipped.transition_cost(cl, sim.current_config) == 24.0
+    assert not sim.fits_transition(flipped)
+    with pytest.raises(CoreBudgetExceeded):
+        sim.reconfigure(flipped)                 # rejected at decision time
+    # staged: the downsize alone is always admissible (its charge is the
+    # old cost it already holds) ...
+    sim.reconfigure_pipeline(0, a_small)
+    assert sim.pipeline_config(0) == a_small     # committed
+    assert sim.serving_config(0) == a_big        # old fleet serves the window
+    assert sim.allocated_cores == 18.0           # charge held at max(16, 2)
+    assert sim.serving_cores == 18.0
+    # ... but the freed cores are not grantable mid-window
+    with pytest.raises(CoreBudgetExceeded):
+        sim.reconfigure_pipeline(1, b_big)
+    sim.run_until(6.0)                           # a's window closes at 5.0
+    assert sim.serving_config(0) == a_small
+    assert sim.allocated_cores == 4.0            # 2 + 2: charge settled
+    sim.reconfigure_pipeline(1, b_big)           # deferred grant now fits
+    sim.run_until(12.0)
+    assert sim.serving_config(1) == b_big
+    assert sim.allocated_cores == 10.0
+    assert sim.reconfig_log == [(0.0, 0, 5.0), (6.0, 1, 11.0)]
+    # the witness: serving fleets never exceeded C at any instant
+    assert sim.peak_serving_cores <= cl.cores + 1e-9
+
+
+def test_supersede_mid_window_charges_serving_not_stale_target():
+    """A decision superseding another inside its window re-charges against
+    what is *serving* (the original old fleet) — the superseded target's
+    fleet never started, so its charge must be released."""
+    cl = toy_cluster(cores=20.0)
+    a, b = cl.pipelines
+    sim = ClusterSimulator(cl, ClusterConfig((_explicit(a, 2, 2),   # 16
+                                              _explicit(b, 0, 1))),  # 2
+                           adaptation_delay=5.0)
+    sim.reconfigure_pipeline(0, _explicit(a, 0, 1))   # 16 -> 2, charge 16
+    sim.run_until(2.0)
+    sim.reconfigure_pipeline(0, _explicit(a, 1, 1))   # supersede: target 4
+    assert sim._alloc[0] == 16.0                      # still max(serving=16, 4)
+    # cancel back to the serving config releases the transition entirely
+    sim.reconfigure_pipeline(0, _explicit(a, 2, 2))
+    assert sim._alloc[0] == 16.0
+    assert sim.pipeline_config(0) == _explicit(a, 2, 2)
+    sim.run_until(10.0)
+    assert sim.serving_config(0) == _explicit(a, 2, 2)  # rollout cancelled
+    assert sim.allocated_cores == 18.0
+
+
+def test_zero_delay_ledger_unchanged():
+    """With adaptation_delay == 0 there is no window: the ledger charges
+    the new cost immediately (the PR 2/3 behaviour, pinned)."""
+    cl = toy_cluster(cores=20.0)
+    a, b = cl.pipelines
+    sim = ClusterSimulator(cl, ClusterConfig((_explicit(a, 2, 2),
+                                              _explicit(b, 0, 1))))
+    sim.reconfigure(ClusterConfig((_explicit(a, 0, 1), _explicit(b, 2, 1))))
+    assert sim.allocated_cores == 10.0
+    assert sim.serving_cores == 10.0
+    assert sim.serving_config(0) == _explicit(a, 0, 1)  # applied immediately
+    assert sim.peak_serving_cores == 18.0               # the initial config
+
+
+def test_zero_delay_joint_swap_is_atomic_for_the_peak_witness():
+    """A zero-delay joint reconfigure is semantically atomic: a swap that
+    grows a lower-index pipeline before the higher-index one shrinks must
+    not record the mid-loop partial sum (a state that never existed) in
+    peak_serving_cores."""
+    cl = toy_cluster(cores=20.0)
+    a, b = cl.pipelines
+    sim = ClusterSimulator(cl, ClusterConfig((_explicit(a, 0, 1),   # 2
+                                              _explicit(b, 2, 2))))  # 16
+    sim.reconfigure(ClusterConfig((_explicit(a, 2, 2),    # grow A first ...
+                                   _explicit(b, 0, 1))))  # ... then shrink B
+    assert sim.allocated_cores == 18.0
+    assert sim.peak_serving_cores == 18.0   # not the fictitious 32 mid-swap
+    assert sim.peak_serving_cores <= cl.cores + 1e-9
+
+
+@given(seed=st.integers(0, 9999))
+@settings(max_examples=8, deadline=None)
+def test_serving_cost_never_exceeds_budget_on_bursty_traces(seed):
+    """The tentpole invariant: with adaptation_delay > 0, the cores held
+    by the serving fleets never exceed C at any instant — and therefore
+    the realized (blended) per-interval cost records sum within C too —
+    on random bursty traces, for the joint policy and the static split."""
+    rng = np.random.default_rng(seed)
+    cl = toy_cluster(cores=float(rng.integers(14, 30)))
+    t = np.arange(50, dtype=np.float64)
+    traces = []
+    for _ in range(2):
+        phase = rng.uniform(0.0, 40.0)
+        burst = rng.uniform(6.0, 20.0) * np.exp(
+            -((t - phase) % 40.0) / rng.uniform(4.0, 12.0))
+        traces.append(np.clip(2.0 + burst + rng.normal(0.0, 0.3, 50),
+                              0.5, None))
+    for policy, kw in (("ipa", {"switch_cost": 0.05}), ("split_ipa", {})):
+        res = AD.run_cluster_trace(cl, traces, policy=policy,
+                                   obj=OPT.Objective(alpha=1.0, beta=0.02),
+                                   seed=seed % 7, adaptation_delay=6.0, **kw)
+        assert res.peak_serving_cores <= cl.cores + 1e-9, policy
+        for recs in zip(*(r.intervals for r in res.per_pipeline)):
+            assert sum(rec.cost for rec in recs) <= cl.cores + 1e-9, policy
+
+
+def test_split_policy_stages_opposite_resizes_instead_of_freezing():
+    """Regression (staged admission): a split policy's sub-solvers propose
+    a simultaneous shrink+grow on an anti-correlated demand flip; its
+    combined transition charge max(old,new)+max(old,new) never fits C, so
+    a plain hold-all admission would freeze the stale allocation forever.
+    The adapter must stage it — downsize now, grow once the freed cores
+    leave their window — and converge to the flipped allocation, without
+    ever letting serving cost exceed C."""
+    cl = toy_cluster(cores=20.0)
+    flip = 20
+    r_a = np.concatenate([np.full(flip, 20.0), np.full(50, 4.0)])
+    r_b = np.concatenate([np.full(flip, 4.0), np.full(50, 20.0)])
+    res = AD.run_cluster_trace(cl, [r_a, r_b], policy="split_ipa",
+                               obj=OPT.Objective(alpha=1.0, beta=0.02),
+                               seed=4, adaptation_delay=8.0)
+    assert res.peak_serving_cores <= cl.cores + 1e-9
+    rec_a = res.per_pipeline[0].intervals
+    rec_b = res.per_pipeline[1].intervals
+    # before the flip A holds the lion's share ...
+    assert rec_a[1].cost > rec_b[1].cost
+    # ... and after it the allocation must actually flip (the staged path:
+    # A's downsize is admitted first, B's grow lands a boundary later)
+    assert rec_b[-1].cost > rec_a[-1].cost
+    # at least one post-flip interval applied a proposal for B
+    assert any(rec.feasible for rec in rec_b if rec.t >= flip)
+    # and the staging order is visible in the decision log: the donor's
+    # downsize is decided strictly before the receiver's grow
+    a_dec = [t for t, p, _ in res.reconfig_log if p == 0]
+    b_dec = [t for t, p, _ in res.reconfig_log if p == 1]
+    assert a_dec and b_dec
+    assert min(b_dec) > min(a_dec)
+
+
+def test_interval_cost_records_blend_time_weighted():
+    """Regression: during an adaptation window the interval cost record is
+    the realized time-weighted blend of old and new cost (it used to
+    report the committed config's cost for the whole interval)."""
+    cl = ClusterModel("one", (toy_pipeline("A"),), cores=1000.0)
+    # rate step at t=8, first seen at the t=12 boundary; interval 4 s,
+    # window 6 s -> the rollout decided at 12 applies at 18, so the t=12
+    # interval is fully old and the t=16 interval is a half/half blend
+    r = np.concatenate([np.full(8, 3.0), np.full(16, 12.0)])
+    res = AD.run_cluster_trace(cl, [r], policy="ipa",
+                               obj=OPT.Objective(alpha=1.0, beta=0.02),
+                               interval=4.0, seed=3, max_replicas=2,
+                               switch_cost=0.01, adaptation_delay=6.0)
+    recs = res.per_pipeline[0].intervals
+    assert [rec.t for rec in recs] == [0.0, 4.0, 8.0, 12.0, 16.0, 20.0]
+    assert res.reconfig_log == [(12.0, 0, 18.0)]
+    old_cost, new_cost = recs[2].cost, recs[5].cost
+    assert new_cost > old_cost                   # the step forced a grow
+    assert recs[3].cost == pytest.approx(old_cost)            # fully in window
+    assert recs[4].cost == pytest.approx(0.5 * old_cost + 0.5 * new_cost)
+    # PAS blends with the same fraction (realized semantics match)
+    assert recs[4].pas == pytest.approx(0.5 * recs[3].pas + 0.5 * recs[5].pas)
+
+
 def test_cluster_config_n_changes():
     cl = toy_cluster()
     a = OPT.solve_cluster(cl, [5.0, 5.0], OPT.Objective()).config
@@ -457,15 +760,19 @@ def test_infeasible_hold_mid_transition_keeps_committed_target():
                                adaptation_delay=6.0)
     recs = res.per_pipeline[0].intervals
     assert [rec.t for rec in recs] == [0.0, 4.0, 8.0, 12.0]
-    # t=8: demand jumped to 12 -> a genuine change was committed
+    # t=8: demand jumped to 12 -> a genuine change was committed; the whole
+    # [8,12) interval sits inside the 6 s window (applies at t=14), so the
+    # realized cost record is still the serving (old) config's
     assert recs[2].feasible
-    assert recs[2].cost > recs[1].cost
-    # t=12: 60 rps is infeasible at max_replicas=2 -> the adapter holds;
-    # the held record must carry the committed (transition-target) cost,
-    # not the pre-transition config's
+    assert recs[2].cost == recs[1].cost
+    # t=12: 60 rps is infeasible at max_replicas=2 -> the adapter holds the
+    # committed (transition-target) config, whose rollout lands at t=14:
+    # the realized record blends old and grown cost half/half and must
+    # show the grow — a cancelled/re-proposed-serving rollout would have
+    # kept the old cost forever
     assert not recs[3].feasible
     assert recs[3].lam_hat == 60.0
-    assert recs[3].cost == recs[2].cost
+    assert recs[3].cost > recs[2].cost
     # exactly one committed change, decided at t=8, applying at t=14 —
     # the hold must not have restarted (or cancelled) the rollout
     assert res.n_reconfigs == 1
