@@ -18,6 +18,11 @@ policy:
 Emits ``BENCH_cluster.json`` next to the repo root and asserts the
 headline: IPA-joint achieves strictly higher mean PAS than every
 proportional static-split baseline at the same total core budget.
+Every policy record carries the per-phase wall breakdown
+(``solver_wall_s`` — time inside the joint solver, surfaced by
+``ClusterTraceResult`` — vs ``sim_wall_s``) plus the run's
+``FrontierCache`` hit/miss stats, so solver-vs-simulator regressions
+are attributable from the JSON alone.
 ``--smoke`` runs a seconds-scale 2-pipeline subset and gates on
 *pointwise solver dominance*: at every adaptation boundary's demand
 vector, whenever the split is feasible the joint knapsack must be
@@ -175,6 +180,8 @@ def switch_scenario(cluster, rates, seconds: int, smoke: bool):
             "mean_cost": round(res.mean_cost, 2),
             "peak_serving_cores": round(res.peak_serving_cores, 2),
             "dropped": res.dropped,
+            "solver_wall_s": round(res.solver_wall_s, 3),
+            "frontier_cache": res.frontier_cache_stats,
         }
         print(f"switch/{tag}: reconfigs={res.n_reconfigs} "
               f"({runs[tag]['reconfigs_per_hour']}/h) "
@@ -210,6 +217,10 @@ def bench_policies(cluster, rates, policies) -> dict:
         wall = time.perf_counter() - t0
         out[pol] = {
             "wall_s": round(wall, 3),
+            "solver_wall_s": round(res.solver_wall_s, 3),
+            "sim_wall_s": round(wall - res.solver_wall_s, 3),
+            "events_per_sec": round(res.sim_events / max(wall, 1e-9)),
+            "frontier_cache": res.frontier_cache_stats,
             "sim_events": res.sim_events,
             "peak_queue_depth": res.peak_queue_depth,
             "mean_pas": round(res.mean_pas, 3),

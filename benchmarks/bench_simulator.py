@@ -6,13 +6,31 @@ Replays a bursty trace through a synthetic 4-stage pipeline and measures
 * the raw cores head-to-head on a fixed configuration (wall time, events
   processed, events/sec, peak queue depth, completed/dropped counts), and
 * the adaptation loop (``adapter.run_trace``) under all four policies
-  (ipa / fa2_low / fa2_high / rim) on the event-driven core.
+  (ipa / fa2_low / fa2_high / rim) on the event-driven core, with a
+  per-phase wall-time breakdown: ``solver_wall_s`` (time inside the
+  per-interval decision solver, surfaced by ``TraceResult``) vs
+  ``sim_wall_s`` (everything else: event processing, arrival injection,
+  bookkeeping).
 
 Emits ``BENCH_sim.json`` next to the repo root so the perf trajectory of
 the simulator hot path is tracked from PR 1 onward.  ``--smoke`` runs a
 seconds-scale subset and is wired into ``scripts/tier1.sh`` so a perf
-regression (event-driven core slower than the tick baseline) fails the
-tier-1 gate loudly.
+regression fails the tier-1 gate loudly — both the raw-core speedup
+floor and the *policy-trace throughput floor* (events/sec with the
+solver in the decision loop, the number that used to be solver-bound by
+two orders of magnitude before the vectorized ``optimizer.solve_vec``
+path landed).
+
+Known scenario degeneracy (kept deliberately, regression-tested in
+``tests/test_bench_scenarios.py``): at the default objective
+(alpha=1, beta=0.1) the ``ipa`` policy sits in the all-heavy-variant
+corner at every demand point this trace visits — each variant downgrade
+loses ~4 PAS while saving only ~0.1-0.8 objective units of cores — and
+cost-minimizing inside that corner is exactly FA2-high's fixed-variant
+solve, so ``ipa`` and ``fa2_high`` report identical trajectories here.
+That is the objective's verdict on this pipeline, not a policy-wiring
+bug: raise beta (e.g. 2.0) and the two policies diverge at every demand
+point.
 """
 from __future__ import annotations
 
@@ -133,14 +151,16 @@ def bench_core(pipe, rates, arrivals, repeats: int = 5) -> dict:
                              and best_new["dropped"] == best_old["dropped"])}
 
 
-def bench_policies(pipe, rates) -> dict:
+def bench_policies(pipe, rates, policies=POLICIES) -> dict:
     out = {}
-    for pol in POLICIES:
+    for pol in policies:
         t0 = time.perf_counter()
         res = AD.run_trace(pipe, rates, policy=pol, seed=11, max_replicas=96)
         wall = time.perf_counter() - t0
         out[pol] = {
             "wall_s": round(wall, 3),
+            "solver_wall_s": round(res.solver_wall_s, 3),
+            "sim_wall_s": round(wall - res.solver_wall_s, 3),
             "sim_events": res.sim_events,
             "events_per_sec": round(res.sim_events / max(wall, 1e-9)),
             "peak_queue_depth": res.peak_queue_depth,
@@ -194,21 +214,41 @@ def main() -> int:
         "n_requests": len(arrivals),
         "smoke": bool(args.smoke),
         "core": core,
+        "notes": {
+            "fa2_high": "identical to ipa by objective degeneracy on this "
+                        "scenario (see module docstring; regression-tested "
+                        "in tests/test_bench_scenarios.py)"},
     }
-    if not args.smoke:
-        result["policies"] = bench_policies(pipe, rates)
-        for pol, r in result["policies"].items():
-            print(f"policy {pol}: {r['wall_s']}s wall, "
-                  f"{r['events_per_sec']} ev/s, peak_q={r['peak_queue_depth']},"
-                  f" dropped={r['dropped']}, pas={r['mean_pas']}")
+    # policy-trace throughput floor: events/sec WITH the solver in the
+    # decision loop.  Pre-vectorization this ran ~1.1k ev/s (the per-call
+    # jax.jit re-trace in solve_enum dominated by ~100x); solve_vec
+    # sustains ~15-60k ev/s here.  Floors keep ~4x headroom for slow
+    # containers while still catching a solver-path regression loudly.
+    policy_floor = 3000 if args.smoke else 6500
+    policies = ("ipa",) if args.smoke else POLICIES
+    result["policies"] = bench_policies(pipe, rates, policies)
+    for pol, r in result["policies"].items():
+        print(f"policy {pol}: {r['wall_s']}s wall "
+              f"(solver {r['solver_wall_s']}s + sim {r['sim_wall_s']}s), "
+              f"{r['events_per_sec']} ev/s, peak_q={r['peak_queue_depth']},"
+              f" dropped={r['dropped']}, pas={r['mean_pas']}")
+    slow = {pol: r["events_per_sec"] for pol, r in
+            result["policies"].items() if r["events_per_sec"] < policy_floor}
+    if slow:
+        print(f"FAIL: policy-trace throughput below the {policy_floor} "
+              f"ev/s floor (solver in loop): {slow}")
 
-    if not args.smoke or args.out:
+    # an explicit --out is always honoured — on a floor failure the
+    # per-phase breakdown is exactly the diagnostic worth keeping — but
+    # the canonical BENCH_sim.json ratchet artifact is only overwritten
+    # by a passing full run
+    if args.out or (not args.smoke and not slow):
         out = args.out or os.path.join(os.path.dirname(__file__), "..",
                                        "BENCH_sim.json")
         with open(out, "w") as f:
             json.dump(result, f, indent=2)
         print(f"wrote {os.path.abspath(out)}")
-    return 0
+    return 1 if slow else 0
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 #!/usr/bin/env bash
 # Tier-1 gate: fast test loop + simulator perf smoke + cluster-arbitration
 # smoke.  Fails loudly on test regressions, on event-driven-core perf
-# regressions, on the joint knapsack losing to the proportional static
-# split (which its feasible-set superset makes impossible unless the
-# arbitration layer is broken), and on the switch scenario: with the
+# regressions, on policy-trace throughput falling below the solver-in-
+# the-loop floor (bench_simulator --smoke runs an ipa adaptation trace
+# and gates events/sec — the vectorized-solver ratchet, alongside the
+# core-speedup floor), on the joint knapsack losing to the proportional
+# static split (which its feasible-set superset makes impossible unless
+# the arbitration layer is broken), and on the switch scenario: with the
 # §5.3 adaptation window modeled, the hysteresis run must reconfigure no
 # more often than the no-hysteresis run at equal-or-better realized PAS
 # (bench_cluster --smoke runs both gates, plus the transition-overlap

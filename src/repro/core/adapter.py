@@ -68,6 +68,11 @@ class TraceResult:
     # constructors working)
     sim_events: int = 0
     peak_queue_depth: int = 0
+    # total wall seconds spent inside the policy's solver over the run
+    # (bootstrap decision included) — the benches' per-phase breakdown
+    # (solver_wall_s vs sim_wall_s) reads this directly instead of
+    # re-instrumenting externally
+    solver_wall_s: float = 0.0
 
     @property
     def sla_violation_rate(self) -> float:
@@ -101,19 +106,28 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
               obj: Optional[OPT.Objective] = None,
               predictor=None, oracle=None,
               interval: float = ADAPT_INTERVAL, seed: int = 0,
-              max_replicas: int = OPT.DEFAULT_MAX_REPLICAS) -> TraceResult:
+              max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
+              solver: Optional[str] = None) -> TraceResult:
     """policy in {ipa, fa2_low, fa2_high, rim}; predictor: LSTMPredictor or
-    None (reactive); oracle: OraclePredictor for the Fig.-16 'baseline'."""
+    None (reactive); oracle: OraclePredictor for the Fig.-16 'baseline'.
+    ``solver`` overrides the policy's enumeration solver (``vec`` — the
+    default hot path — ``brute`` or ``enum``); the vec-vs-brute pinning
+    tests replay identical traces through both."""
     rates = np.asarray(rates, np.float64)
     times = arrivals_from_rates(rates, seed=seed)
 
     # initial config from the first-second load
     lam0 = float(rates[:int(interval)].max())
-    sol = _decide(pipe, lam0, policy, obj, max_replicas)
+    solver_wall = 0.0
+    sol = _decide(pipe, lam0, policy, obj, max_replicas, solver)
+    solver_wall += sol.solve_time
     if not sol.feasible:
         # bootstrap fallback: cheapest feasible config (production behaviour:
-        # a policy must never leave the pipeline unconfigured)
-        sol = BL.fa2(pipe, lam0, "low", max_replicas=max_replicas)
+        # a policy must never leave the pipeline unconfigured); it honours
+        # the same solver override so pinned replays stay single-solver
+        sol = BL.fa2(pipe, lam0, "low", max_replicas=max_replicas,
+                     **({"solver": solver} if solver is not None else {}))
+        solver_wall += sol.solve_time
     if not sol.feasible:
         raise RuntimeError(f"no feasible initial config for {policy}")
     # requests never outlive their completion event here, so the simulator
@@ -137,7 +151,8 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
         else:
             lam_hat = float(hist[-20:].max()) if len(hist) else lam0
         # --- optimize + reconfigure --------------------------------------
-        sol = _decide(pipe, lam_hat, policy, obj, max_replicas)
+        sol = _decide(pipe, lam_hat, policy, obj, max_replicas, solver)
+        solver_wall += sol.solve_time
         if sol.feasible:
             sim.reconfigure(sol.config)
             sim.lam_est = lam_hat
@@ -150,9 +165,11 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
             cost=cfg.cost(pipe), feasible=sol.feasible,
             solve_time=sol.solve_time))
         # --- serve this interval -----------------------------------------
-        while ti < len(times) and times[ti] < t1:
-            sim.inject(pool.acquire(float(times[ti]), pipe.sla))
-            ti += 1
+        # pre-sized arrival batching: one sorted-array cut + bulk inject
+        # per window (the simulator acquires the requests from the pool)
+        i1 = int(np.searchsorted(times, t1, side="left"))
+        sim.inject_arrivals(times[ti:i1])
+        ti = i1
         sim.run_until(t1)
     # flush stragglers
     sim.run_until(horizon + 4 * pipe.sla)
@@ -162,10 +179,11 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
                        arrived=m.arrived, completed=m.completed,
                        dropped=m.dropped, sla=pipe.sla,
                        sim_events=sim.events_processed,
-                       peak_queue_depth=sim.peak_queue_depth)
+                       peak_queue_depth=sim.peak_queue_depth,
+                       solver_wall_s=float(solver_wall))
 
 
-def _decide(pipe, lam, policy, obj, max_replicas):
+def _decide(pipe, lam, policy, obj, max_replicas, solver=None):
     try:
         fn = BL.POLICIES[policy]
     except KeyError:
@@ -173,6 +191,8 @@ def _decide(pipe, lam, policy, obj, max_replicas):
     kw = {"max_replicas": max_replicas}
     if policy == "ipa":
         kw["obj"] = obj
+    if solver is not None:
+        kw["solver"] = solver
     return fn(pipe, lam, **kw)
 
 
@@ -197,6 +217,13 @@ class ClusterTraceResult:
     # at any instant (transition windows included) — the witness for the
     # overlap invariant peak_serving_cores <= budget
     peak_serving_cores: float = 0.0
+    # total wall seconds inside the joint solver over the run (bootstrap
+    # included; each interval's joint solve counted once, not per
+    # pipeline) — the bench breakdown's solver_wall_s
+    solver_wall_s: float = 0.0
+    # FrontierCache.stats of the run's cache (None when caching was
+    # bypassed) — hit-rate observability for the benches
+    frontier_cache_stats: Optional[Dict] = None
 
     @property
     def mean_pas(self) -> float:
@@ -331,12 +358,12 @@ def _staged_admission(cluster, mixed: ClusterConfig,
 
 
 def _decide_cluster(cluster, lams, policy, obj, max_replicas,
-                    ipa_kwargs=None):
+                    ipa_kwargs=None, cache=None):
     try:
         fn = BL.CLUSTER_POLICIES[policy]
     except KeyError:
         raise ValueError(policy) from None
-    kw = {"obj": obj, "max_replicas": max_replicas}
+    kw = {"obj": obj, "max_replicas": max_replicas, "cache": cache}
     if policy == "ipa" and ipa_kwargs:
         kw.update(ipa_kwargs)
     return fn(cluster, lams, **kw)
@@ -354,7 +381,8 @@ def run_cluster_trace(cluster: ClusterModel,
                       switch_cost: float = 0.0,
                       switch_budget: Optional[int] = None,
                       adaptation_delay: float = 0.0,
-                      sla_weights: Optional[Sequence[float]] = None
+                      sla_weights: Optional[Sequence[float]] = None,
+                      frontier_cache="auto"
                       ) -> ClusterTraceResult:
     """Drive N per-pipeline rate traces through one ``ClusterSimulator``.
 
@@ -389,6 +417,15 @@ def run_cluster_trace(cluster: ClusterModel,
     downsizes immediately (their transition charge is what they already
     hold), grows at a later boundary once the freed cores leave their
     windows.
+
+    ``frontier_cache``: the cross-interval ``optimizer.FrontierCache``
+    threaded through every boundary's policy call.  ``"auto"`` (default)
+    creates a fresh exact-keyed cache for this run — arrival estimates
+    repeat heavily across intervals, so most frontier builds become dict
+    hits while staying bit-identical to uncached planning (property-
+    tested).  ``None`` bypasses caching (the A/B knob); passing a
+    ``FrontierCache`` instance shares it across runs of the *same* model
+    objects.
     """
     rates = [np.asarray(r, np.float64) for r in rates]
     if len(rates) != cluster.n_pipelines:
@@ -411,17 +448,24 @@ def run_cluster_trace(cluster: ClusterModel,
                   # §5.3 windows in play: plan against max(old, new) so a
                   # downsizer's freed cores are never granted mid-window
                   "overlap": adaptation_delay > 0}
+    if frontier_cache == "auto":
+        cache = OPT.FrontierCache()
+    else:
+        cache = frontier_cache          # an instance, or None = bypass
 
     # bootstrap from the first-interval peaks; fall back to cheapest
     # feasible (joint fa2-low split would still have to fit C, so use the
     # joint solver with a pure-cost objective)
     lam0 = [float(r[:int(interval)].max()) for r in rates]
+    solver_wall = 0.0
     sol = _decide_cluster(cluster, lam0, policy, obj, max_replicas,
-                          ipa_kwargs)
+                          ipa_kwargs, cache)
+    solver_wall += sol.solve_time
     if not sol.feasible:
         sol = OPT.solve_cluster(
             cluster, lam0, OPT.Objective(alpha=0.0, beta=1.0, delta=1e-6),
-            max_replicas=max_replicas)
+            max_replicas=max_replicas, cache=cache)
+        solver_wall += sol.solve_time
     if not sol.feasible:
         raise RuntimeError(
             f"no feasible initial cluster config for {policy} "
@@ -456,7 +500,8 @@ def run_cluster_trace(cluster: ClusterModel,
             # cores right now
             ipa_kwargs["serving"] = ClusterConfig(tuple(serving_before))
         sol = _decide_cluster(cluster, lam_hat, policy, obj, max_replicas,
-                              ipa_kwargs)
+                              ipa_kwargs, cache)
+        solver_wall += sol.solve_time
         per = sol.per_pipeline if sol.per_pipeline else [
             OPT._infeasible(0.0, sol.solver)] * cluster.n_pipelines
         mixed = ClusterConfig(tuple(
@@ -513,12 +558,12 @@ def run_cluster_trace(cluster: ClusterModel,
                 feasible=per[p].feasible and admitted[p],
                 solve_time=sol.solve_time))
         # --- serve this interval -----------------------------------------
-        for p, (tt, pipe) in enumerate(zip(times, cluster.pipelines)):
-            i = ti[p]
-            while i < len(tt) and tt[i] < t1:
-                sim.inject(pool.acquire(float(tt[i]), pipe.sla), p)
-                i += 1
-            ti[p] = i
+        # pre-sized arrival batching: one sorted-array cut + bulk inject
+        # per pipeline per window (the simulator acquires from the pool)
+        for p, tt in enumerate(times):
+            i1 = int(np.searchsorted(tt, t1, side="left"))
+            sim.inject_arrivals(tt[ti[p]:i1], p)
+            ti[p] = i1
         sim.run_until(t1)
     # flush stragglers
     sim.run_until(horizon + 4 * max(sim.sla_of))
@@ -536,4 +581,8 @@ def run_cluster_trace(cluster: ClusterModel,
                               peak_queue_depth=sim.peak_queue_depth,
                               n_reconfigs=sim.n_reconfigs,
                               reconfig_log=list(sim.reconfig_log),
-                              peak_serving_cores=sim.peak_serving_cores)
+                              peak_serving_cores=sim.peak_serving_cores,
+                              solver_wall_s=float(solver_wall),
+                              frontier_cache_stats=(
+                                  cache.stats if cache is not None
+                                  else None))

@@ -38,21 +38,29 @@ from repro.core.pipeline import PipelineModel
 
 
 def fa2(pipe: PipelineModel, arrival: float, level: str = "low",
-        max_replicas: int = OPT.DEFAULT_MAX_REPLICAS) -> OPT.Solution:
-    """FA2-low / FA2-high: fixed variants, min-cost (batch, replicas)."""
+        max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
+        solver: str = "vec") -> OPT.Solution:
+    """FA2-low / FA2-high: fixed variants, min-cost (batch, replicas).
+
+    ``solver`` names any ``optimizer.solve`` solver: ``vec`` (the float64
+    broadcast hot path — default), ``brute`` (the plain-python oracle,
+    bit-identical to ``vec``), or ``enum`` (the float32 JAX reference)."""
     variants = [s.lightest.name if level == "low" else s.heaviest.name
                 for s in pipe.stages]
     obj = OPT.Objective(alpha=0.0, beta=1.0, delta=1e-6, metric="pas")
-    return OPT.solve_enum(pipe, arrival, obj, max_replicas=max_replicas,
-                          restrict_variants=variants)
+    return OPT.solve(pipe, arrival, obj, solver=solver,
+                     max_replicas=max_replicas, restrict_variants=variants)
 
 
 def rim(pipe: PipelineModel, arrival: float, static_replicas: int = 24,
-        max_replicas: int = OPT.DEFAULT_MAX_REPLICAS) -> OPT.Solution:
-    """RIM: variant switching at a static (over-provisioned) replication."""
+        max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
+        solver: str = "vec") -> OPT.Solution:
+    """RIM: variant switching at a static (over-provisioned) replication.
+    ``solver`` as in ``fa2``."""
     obj = OPT.Objective(alpha=1.0, beta=0.0, delta=1e-6, metric="pas")
-    return OPT.solve_enum(pipe, arrival, obj, max_replicas=max_replicas,
-                          fixed_replicas=static_replicas)
+    return OPT.solve(pipe, arrival, obj, solver=solver,
+                     max_replicas=max_replicas,
+                     fixed_replicas=static_replicas)
 
 
 def ipa(pipe: PipelineModel, arrival: float,
@@ -95,26 +103,31 @@ def cluster_ipa(cluster: ClusterModel, lams: Sequence[float],
                 current=None, switch_cost: float = 0.0,
                 switch_budget: Optional[int] = None,
                 sla_weights: Optional[Sequence[float]] = None,
-                overlap: bool = False, serving=None
+                overlap: bool = False, serving=None,
+                cache: Optional[OPT.FrontierCache] = None
                 ) -> OPT.ClusterSolution:
     """Joint arbitration: one knapsack over per-pipeline Pareto frontiers
     under the shared core budget.  ``current``/``switch_cost``/
     ``switch_budget``/``sla_weights``/``overlap``/``serving`` make it
     switch-cost-aware, SLA-weighted and transition-overlap-aware (the knob
     semantics are documented in one place: ``optimizer.solve_cluster``);
-    the defaults are the PR 2 behaviour bit-for-bit."""
+    the defaults are the PR 2 behaviour bit-for-bit.  ``cache``: an
+    optional ``optimizer.FrontierCache`` memoizing the frontier builds
+    across adaptation intervals (bit-identical with exact keying)."""
     return OPT.solve_cluster(cluster, lams, obj or OPT.Objective(),
                              max_replicas=max_replicas, current=current,
                              switch_cost=switch_cost,
                              switch_budget=switch_budget,
                              sla_weights=sla_weights,
-                             overlap=overlap, serving=serving)
+                             overlap=overlap, serving=serving,
+                             cache=cache)
 
 
 def cluster_split(cluster: ClusterModel, lams: Sequence[float],
                   inner: str = "ipa",
                   obj: Optional[OPT.Objective] = None,
-                  max_replicas: int = OPT.DEFAULT_MAX_REPLICAS
+                  max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
+                  cache: Optional[OPT.FrontierCache] = None
                   ) -> OPT.ClusterSolution:
     """Proportional static split: pipeline i plans alone inside its demand
     share ``C * lam_i / sum(lam)`` of the core budget.
@@ -132,6 +145,10 @@ def cluster_split(cluster: ClusterModel, lams: Sequence[float],
     SLA-weighted by the cluster's own ``sla_weights`` (per-pipeline
     objectives stay raw, as in ``cluster_ipa``), so joint-vs-split
     objective comparisons remain commensurable on weighted clusters.
+
+    ``cache``: optional ``optimizer.FrontierCache`` for the inner ``ipa``
+    sub-problem's frontier builds (the other inners do not build
+    frontiers and ignore it).
     """
     t0 = time.perf_counter()
     o = obj or OPT.Objective()
@@ -140,7 +157,8 @@ def cluster_split(cluster: ClusterModel, lams: Sequence[float],
     sols = []
     for pipe, lam, cap in zip(cluster.pipelines, lams, caps):
         if inner == "ipa":
-            sol = OPT.solve_capped(pipe, lam, o, cap, max_replicas)
+            sol = OPT.solve_capped(pipe, lam, o, cap, max_replicas,
+                                   cache=cache)
         elif inner in ("fa2_low", "fa2_high"):
             sol = fa2(pipe, lam, inner.split("_")[1], max_replicas)
             if sol.feasible and sol.cost > cap + 1e-9:

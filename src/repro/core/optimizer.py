@@ -5,12 +5,20 @@ used by every solver here: the objective strictly decreases in n (-beta n R)
 and n appears only in the throughput constraint (10c), so the optimal
 replica count for a chosen (m, b) is n*(m, b) = ceil(lambda / h_m(b)).
 Substituting n* collapses the IP to "pick one (m, b) option per stage under
-a total-latency budget" — which we solve three ways:
+a total-latency budget" — which we solve four ways:
 
-  * ``solve_enum``  -- exact enumeration of the option cross-product,
-    vectorized with JAX (vmap over combo indices, feasibility-masked argmax).
-    Exact for the true multiplicative PAS.  Chunked, so pipelines up to
-    ~10^7 combos are fine.
+  * ``solve_vec``   -- exact enumeration of the option cross-product as one
+    numpy broadcast over the per-stage option tables (feasibility mask, SLA
+    cutoff and objective scoring all as float64 array ops; first-index
+    argmax tie-break).  Exact for the true multiplicative PAS and
+    bit-identical to ``solve_brute`` by construction (same accumulation
+    order, same tie-break) — this is the adaptation loop's hot path.
+  * ``solve_enum``  -- the same enumeration vectorized with JAX (vmap over
+    combo indices, feasibility-masked argmax), kept as a cross-check
+    reference.  NOTE: it evaluates in float32, so an *exact* objective tie
+    can resolve to a different (equal-valued) config than the float64
+    solvers; and the per-call ``jax.jit`` re-trace makes it ~100x slower
+    than ``solve_vec`` in a decision loop.
   * ``solve_milp``  -- scipy HiGHS MILP (the Gurobi stand-in, §4.4) over
     binary x_{s,j}.  Exact for the *linear* accuracy metrics: PAS'
     (Appendix C) or log-PAS (a monotone surrogate of Eq. 8; exact tradeoff
@@ -37,6 +45,13 @@ is the per-pipeline sub-problem the proportional static-split baselines
 run inside their budget share, and ``solve_cluster_brute`` is the
 cross-product oracle for the tests.  The knob semantics live in one
 place: the ``solve_cluster`` docstring.
+
+``FrontierCache`` memoizes ``pareto_frontier`` across adaptation
+intervals: a policy trace revisits the same (pipeline, rate) demand
+points constantly (reactive estimators hold a value through many
+boundaries), so with a cache threaded through ``solve_cluster`` /
+``solve_capped`` most per-interval frontier builds become dict hits.
+Exact keying (the default) is bit-identical to uncached planning.
 """
 from __future__ import annotations
 
@@ -187,7 +202,110 @@ def _infeasible(t0, solver):
 
 
 # ---------------------------------------------------------------------------
-# exact enumeration (JAX)
+# exact enumeration (numpy broadcast — the hot path)
+# ---------------------------------------------------------------------------
+def _broadcast_eval(opts: List[StageOptions], obj: Objective, sla: float,
+                    stage0_fastest: bool = True):
+    """Evaluate the full option cross-product as one numpy broadcast.
+
+    With ``stage0_fastest`` (the frontier/combo convention), combo ``k``'s
+    stage-``s`` pick is ``(k // prod(sizes[:s])) % sizes[s]`` — stage ``s``
+    maps to axis ``S-1-s`` of the broadcast lattice so the C-order ravel
+    enumerates combos in exactly that order.  With it off, the flat order
+    is ``itertools.product``'s (last stage fastest — ``solve_brute``'s
+    scan order, which is what makes ``solve_vec``'s first-index argmax
+    tie-break match the oracle's strict-improvement scan exactly).
+    Either way, accumulation runs in stage order with the same float64
+    operations as the retired per-stage fancy-indexing loop (and as
+    ``solve_brute``'s python sums), so every returned array is
+    bit-identical to both — the frontier/oracle property tests pin this.
+
+    Returns flat length-``prod(sizes)`` arrays:
+    ``(ok, score, cost, pas, lat)``.
+    """
+    S = len(opts)
+
+    def view(col: np.ndarray, s: int) -> np.ndarray:
+        shape = [1] * S
+        shape[(S - 1 - s) if stage0_fastest else s] = len(col)
+        return np.asarray(col).reshape(shape)
+
+    lat_tot = view(opts[0].lat, 0)
+    cost_tot = view(opts[0].cost, 0)
+    bat_tot = view(opts[0].batches.astype(np.float64), 0)
+    pas_log_tot = view(_acc_term(opts[0], "pas"), 0)
+    acc_tot = (pas_log_tot if obj.metric == "pas"
+               else view(_acc_term(opts[0], obj.metric), 0))
+    ok = view(opts[0].feasible, 0)
+    for s, o in enumerate(opts[1:], start=1):
+        lat_tot = lat_tot + view(o.lat, s)
+        cost_tot = cost_tot + view(o.cost, s)
+        bat_tot = bat_tot + view(o.batches.astype(np.float64), s)
+        pas_term = view(_acc_term(o, "pas"), s)
+        pas_log_tot = pas_log_tot + pas_term
+        acc_tot = (pas_log_tot if obj.metric == "pas"
+                   else acc_tot + view(_acc_term(o, obj.metric), s))
+        ok = ok & view(o.feasible, s)
+    lat_tot = np.broadcast_to(lat_tot, ok.shape).reshape(-1)
+    cost_tot = np.broadcast_to(cost_tot, ok.shape).reshape(-1)
+    bat_tot = np.broadcast_to(bat_tot, ok.shape).reshape(-1)
+    pas_log_tot = np.broadcast_to(pas_log_tot, ok.shape).reshape(-1)
+    acc_tot = (pas_log_tot if obj.metric == "pas"
+               else np.broadcast_to(acc_tot, ok.shape).reshape(-1))
+    ok = ok.reshape(-1) & (lat_tot <= sla)
+    acc_val = _combine_acc(acc_tot, obj.metric)
+    score = obj.alpha * acc_val - obj.beta * cost_tot - obj.delta * bat_tot
+    pas_val = 100.0 * np.exp(pas_log_tot)
+    return ok, score, cost_tot, pas_val, lat_tot
+
+
+def _unravel_picks(k: int, sizes: Sequence[int]) -> List[int]:
+    """Per-stage option indices of flat combo ``k`` in
+    ``itertools.product`` order (last stage fastest-varying)."""
+    picks = []
+    for j in reversed(sizes):
+        picks.append(int(k % j))
+        k //= j
+    return list(reversed(picks))
+
+
+def solve_vec(pipe: PipelineModel, arrival: float,
+              obj: Objective = Objective(),
+              max_replicas: int = DEFAULT_MAX_REPLICAS,
+              restrict_variants=None, fixed_replicas=None,
+              latency_model: str = "worst_case",
+              max_combos: int = 1 << 23) -> Solution:
+    """Exact enumeration of Eq. 10 as float64 numpy broadcast ops.
+
+    Bit-identical to ``solve_brute`` by construction: same per-stage
+    accumulation order, same feasibility/SLA boundary, and ``np.argmax``'s
+    first-occurrence tie-break over the ``itertools.product``-ordered
+    lattice matches the oracle's strict-improvement scan.  This is the
+    per-interval decision loop's solver — no per-call JIT tracing, just a
+    handful of array ops over the option lattice.
+    """
+    t0 = time.perf_counter()
+    opts = [stage_options(s, arrival, max_replicas, latency_model)
+            for s in pipe.stages]
+    opts = _apply_restrictions(pipe, opts, restrict_variants, fixed_replicas,
+                               arrival)
+    sizes = [len(o.names) for o in opts]
+    if math.prod(sizes) > max_combos:
+        raise ValueError(f"pipeline {pipe.name}: {math.prod(sizes)} combos "
+                         f"exceed the vectorized cap {max_combos}; use "
+                         f"solve_milp")
+    ok, score, _, _, _ = _broadcast_eval(opts, obj, pipe.sla,
+                                         stage0_fastest=False)
+    score = np.where(ok, score, -np.inf)
+    k = int(np.argmax(score))
+    if not np.isfinite(score[k]):
+        return _infeasible(t0, "vec")
+    return _mk_solution(pipe, opts, _unravel_picks(k, sizes), obj, arrival,
+                        t0, "vec")
+
+
+# ---------------------------------------------------------------------------
+# exact enumeration (JAX — float32 cross-check reference)
 # ---------------------------------------------------------------------------
 def solve_enum(pipe: PipelineModel, arrival: float, obj: Objective = Objective(),
                max_replicas: int = DEFAULT_MAX_REPLICAS,
@@ -337,8 +455,9 @@ def solve(pipe: PipelineModel, arrival: float, obj: Objective = Objective(),
     if solver == "auto":
         combos = math.prod(len(s.variants) * len(s.batch_choices)
                            for s in pipe.stages)
-        solver = "enum" if combos <= (1 << 23) else "milp"
-    fn = {"enum": solve_enum, "brute": solve_brute, "milp": solve_milp}[solver]
+        solver = "vec" if combos <= (1 << 23) else "milp"
+    fn = {"vec": solve_vec, "enum": solve_enum, "brute": solve_brute,
+          "milp": solve_milp}[solver]
     return fn(pipe, arrival, obj, **kw)
 
 
@@ -363,7 +482,9 @@ def _combo_eval(pipe: PipelineModel, arrival: float, obj: Objective,
 
     Returns (opts, feasible-combo indices as per-stage pick columns, cost,
     objective, pas) over feasible combos only.  Shared by the frontier
-    builder and the brute cluster oracle.
+    builder and the brute cluster oracle.  The evaluation itself is one
+    ``_broadcast_eval`` pass; only the surviving combos' per-stage pick
+    columns are materialized.
     """
     opts = [stage_options(s, arrival, max_replicas, latency_model)
             for s in pipe.stages]
@@ -372,33 +493,15 @@ def _combo_eval(pipe: PipelineModel, arrival: float, obj: Objective,
     if K > max_combos:
         raise ValueError(f"pipeline {pipe.name}: {K} combos exceed the "
                          f"frontier cap {max_combos}; use fewer options")
-    idx = np.arange(K)
+    ok, score, cost_tot, pas_val, lat_tot = _broadcast_eval(opts, obj,
+                                                            pipe.sla)
+    keep = np.flatnonzero(ok)
     picks = []
     radix = 1
-    lat_tot = np.zeros(K)
-    cost_tot = np.zeros(K)
-    acc_tot = np.zeros(K)
-    pas_log_tot = np.zeros(K)
-    bat_tot = np.zeros(K)
-    ok = np.ones(K, dtype=bool)
-    for o, j_size in zip(opts, sizes):
-        js = (idx // radix) % j_size
-        picks.append(js)
+    for j_size in sizes:
+        picks.append((keep // radix) % j_size)
         radix *= j_size
-        lat_tot += o.lat[js]
-        cost_tot += o.cost[js]
-        pas_term = _acc_term(o, "pas")[js]
-        pas_log_tot += pas_term
-        acc_tot += (pas_term if obj.metric == "pas"
-                    else _acc_term(o, obj.metric)[js])
-        bat_tot += o.batches[js].astype(np.float64)
-        ok &= o.feasible[js]
-    ok &= lat_tot <= pipe.sla
-    acc_val = _combine_acc(acc_tot, obj.metric)
-    score = obj.alpha * acc_val - obj.beta * cost_tot - obj.delta * bat_tot
-    pas_val = 100.0 * np.exp(pas_log_tot)
-    keep = np.flatnonzero(ok)
-    return (opts, [js[keep] for js in picks], cost_tot[keep], score[keep],
+    return (opts, picks, cost_tot[keep], score[keep],
             pas_val[keep], lat_tot[keep])
 
 
@@ -438,15 +541,107 @@ def pareto_frontier(pipe: PipelineModel, arrival: float,
     return points
 
 
+class FrontierCache:
+    """Cross-interval memo of per-pipeline Pareto frontiers.
+
+    ``pareto_frontier`` is a pure function of ``(pipeline, arrival rate,
+    objective, max_replicas, latency_model)``, and a policy trace revisits
+    the same demand points constantly: reactive max-of-window estimators
+    hold one value through many adaptation boundaries, and anti-correlated
+    pipelines sit at base load most of the time.  Keying the memo on that
+    exact tuple turns most per-interval frontier builds into dict hits
+    while staying **bit-identical** to uncached planning (the cache
+    property tests pin cached vs uncached traces config-for-config).
+
+    Keys are hashable value objects (the frozen model dataclasses), so an
+    entry can never go stale while its inputs are unchanged — the only
+    invalidation semantics needed are explicit: ``clear()`` drops
+    everything, and ``max_entries`` bounds memory by FIFO eviction.
+    Passing ``cache=None`` to the solvers (or
+    ``frontier_cache=None`` to ``adapter.run_cluster_trace``) bypasses
+    caching entirely — the A/B knob the benchmarks use.
+
+    ``quantize``: optional rate-bucket width.  When set, the rate the
+    frontier is *computed at* snaps to ``round(lam / quantize) *
+    quantize``, so nearby rates share one frontier — more hits, but the
+    planning becomes approximate (deterministically so: the plan depends
+    only on the bucketed rate, never on cache state).  The default
+    ``None`` keys on the exact rate.
+    """
+
+    __slots__ = ("quantize", "max_entries", "hits", "misses", "_tab")
+
+    def __init__(self, quantize: Optional[float] = None,
+                 max_entries: int = 4096):
+        if quantize is not None and quantize <= 0:
+            raise ValueError("quantize must be positive")
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.quantize = quantize
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self._tab: dict = {}
+
+    def __len__(self) -> int:
+        return len(self._tab)
+
+    def rate_of(self, arrival: float) -> float:
+        """The (possibly bucketed) rate a frontier is computed/keyed at."""
+        if self.quantize is None:
+            return float(arrival)
+        return round(float(arrival) / self.quantize) * self.quantize
+
+    def frontier(self, pipe: PipelineModel, arrival: float, obj: Objective,
+                 max_replicas: int = DEFAULT_MAX_REPLICAS,
+                 latency_model: str = "worst_case") -> List[FrontierPoint]:
+        """Memoized ``pareto_frontier`` — callers must treat the returned
+        list as immutable (it is shared across hits)."""
+        lam = self.rate_of(arrival)
+        key = (pipe, lam, obj, max_replicas, latency_model)
+        pts = self._tab.get(key)
+        if pts is not None:
+            self.hits += 1
+            return pts
+        self.misses += 1
+        pts = pareto_frontier(pipe, lam, obj, max_replicas, latency_model)
+        if len(self._tab) >= self.max_entries:
+            self._tab.pop(next(iter(self._tab)))
+        self._tab[key] = pts
+        return pts
+
+    def clear(self) -> None:
+        self._tab.clear()
+
+    @property
+    def stats(self) -> dict:
+        """Hit/miss counters for bench observability."""
+        total = self.hits + self.misses
+        return {"hits": self.hits, "misses": self.misses,
+                "entries": len(self._tab),
+                "hit_rate": round(self.hits / total, 4) if total else 0.0}
+
+
+def _frontier(pipe: PipelineModel, arrival: float, obj: Objective,
+              max_replicas: int, latency_model: str,
+              cache: Optional[FrontierCache]) -> List[FrontierPoint]:
+    if cache is not None:
+        return cache.frontier(pipe, arrival, obj, max_replicas,
+                              latency_model)
+    return pareto_frontier(pipe, arrival, obj, max_replicas, latency_model)
+
+
 def solve_capped(pipe: PipelineModel, arrival: float,
                  obj: Objective = Objective(), cost_cap: float = np.inf,
                  max_replicas: int = DEFAULT_MAX_REPLICAS,
-                 latency_model: str = "worst_case") -> Solution:
+                 latency_model: str = "worst_case",
+                 cache: Optional[FrontierCache] = None) -> Solution:
     """Best per-pipeline config whose cost fits ``cost_cap`` (the
-    static-split baselines' per-pipeline sub-problem)."""
+    static-split baselines' per-pipeline sub-problem).  ``cache``: an
+    optional ``FrontierCache`` memoizing the frontier build."""
     t0 = time.perf_counter()
-    pts = [p for p in pareto_frontier(pipe, arrival, obj, max_replicas,
-                                      latency_model)
+    pts = [p for p in _frontier(pipe, arrival, obj, max_replicas,
+                                latency_model, cache)
            if p.cost <= cost_cap + 1e-9]
     if not pts:
         return _infeasible(t0, "capped")
@@ -660,7 +855,8 @@ def solve_cluster(cluster, arrivals: Sequence[float],
                   switch_budget: Optional[int] = None,
                   sla_weights: Optional[Sequence[float]] = None,
                   overlap: bool = False,
-                  serving=None
+                  serving=None,
+                  cache: Optional[FrontierCache] = None
                   ) -> ClusterSolution:
     """Joint arbitration: pick one frontier point per pipeline maximizing
     the SLA-weighted summed objective under ``sum(cost) <= budget``
@@ -717,6 +913,11 @@ def solve_cluster(cluster, arrivals: Sequence[float],
     is the PR 2 DP bit-for-bit (weights of 1.0 multiply exactly).  All
     paths are validated against the ``solve_cluster_brute`` cross-product
     oracle in the property tests.
+
+    ``cache``: an optional ``FrontierCache`` memoizing the per-pipeline
+    frontier builds across calls (the dominant cost when rates repeat
+    across adaptation intervals).  With exact keying (the default cache
+    construction) results are bit-identical to ``cache=None``.
     """
     t0 = time.perf_counter()
     if budget is None:
@@ -724,7 +925,7 @@ def solve_cluster(cluster, arrivals: Sequence[float],
     weights = _resolve_weights(cluster, sla_weights)
     if current is not None and len(current.pipelines) != len(cluster.pipelines):
         raise ValueError("current config/cluster pipeline count mismatch")
-    frontiers = [pareto_frontier(p, lam, obj, max_replicas, latency_model)
+    frontiers = [_frontier(p, lam, obj, max_replicas, latency_model, cache)
                  for p, lam in zip(cluster.pipelines, arrivals)]
     if any(not f for f in frontiers):
         return _cluster_infeasible(cluster, t0, "cluster_knap")

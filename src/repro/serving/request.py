@@ -66,6 +66,28 @@ class RequestPool:
         self.allocated += 1
         return Request(arrival=arrival, sla=sla)
 
+    def acquire_many(self, arrivals, sla: Optional[float] = None
+                     ) -> List[Request]:
+        """Bulk ``acquire``: recycle up to ``len(arrivals)`` pooled
+        requests in one slice, allocate the rest.  Requests come back in
+        arrival order (ids are stamped in that order, as sequential
+        ``acquire`` calls would)."""
+        free = self._free
+        k = len(arrivals)
+        reuse = min(len(free), k)
+        out: List[Request] = []
+        if reuse:
+            self.reused += reuse
+            recycled = free[-reuse:]
+            del free[-reuse:]
+            out.extend(r.reset(t, sla)
+                       for r, t in zip(recycled, arrivals))
+        if reuse < k:
+            self.allocated += k - reuse
+            out.extend(Request(arrival=t, sla=sla)
+                       for t in arrivals[reuse:])
+        return out
+
     def release(self, req: Request) -> None:
         self._free.append(req)
 

@@ -1,0 +1,122 @@
+"""Regressions pinned on the benchmark scenarios themselves.
+
+Two contracts live here:
+
+* **Solver-path pin** (the perf PR's acceptance): replaying the
+  ``BENCH_sim.json`` policy traces through the vectorized hot path
+  (``optimizer.solve_vec``) and through the plain-python oracle
+  (``solve_brute``) must be bit-identical — completed/dropped counts,
+  event counts, interval records and the full latency stream.  The two
+  solvers share accumulation order and tie-break by construction; this
+  test catches any drift at the trace level, where a single flipped
+  near-tie decision changes the whole downstream event stream.
+
+* **fa2_high collapse** (investigated, expected): on the bench pipeline
+  at the default objective (alpha=1, beta=0.1), ``ipa``'s optimum sits in
+  the all-heavy-variant corner at every demand point the bursty trace
+  visits — a variant downgrade loses ~4 PAS (multiplicative) while
+  saving well under 1 objective unit of cores — and cost-minimizing
+  within that corner is exactly FA2-high's fixed-variant solve.  So the
+  identical ``ipa``/``fa2_high`` rows in ``BENCH_sim.json`` are objective
+  degeneracy, not a policy-wiring bug: with a cost-heavy objective the
+  two diverge.  This test pins both halves so a future wiring regression
+  cannot hide behind "they were always equal".
+"""
+import os
+import sys
+
+import numpy as np
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..",
+                                "benchmarks"))
+
+from bench_simulator import bursty_trace, four_stage_pipeline  # noqa: E402
+
+from repro.core import adapter as AD                           # noqa: E402
+from repro.core import baselines as BL                         # noqa: E402
+from repro.core import optimizer as OPT                        # noqa: E402
+
+
+@pytest.fixture(scope="module")
+def bench_pipe():
+    return four_stage_pipeline()
+
+
+@pytest.fixture(scope="module")
+def bench_rates():
+    return bursty_trace(60)              # the --smoke scale
+
+
+def _demand_points(rates, interval=10.0, window=20):
+    """The reactive demand estimates a trace replay actually visits."""
+    pts = {float(rates[:int(interval)].max())}
+    for t0 in np.arange(interval, len(rates), interval):
+        i = int(t0)
+        pts.add(float(rates[max(i - window, 0):i].max()))
+    return sorted(pts)
+
+
+# ---------------------------------------------------------------------------
+# solver-path pin: vec vs brute, whole traces, all policies
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", ["ipa", "fa2_low", "fa2_high", "rim"])
+def test_policy_trace_bit_identical_vec_vs_brute(bench_pipe, bench_rates,
+                                                 policy):
+    vec = AD.run_trace(bench_pipe, bench_rates, policy=policy, seed=11,
+                       max_replicas=96, solver="vec")
+    brute = AD.run_trace(bench_pipe, bench_rates, policy=policy, seed=11,
+                         max_replicas=96, solver="brute")
+    assert (vec.arrived, vec.completed, vec.dropped, vec.sim_events,
+            vec.peak_queue_depth) == \
+        (brute.arrived, brute.completed, brute.dropped, brute.sim_events,
+         brute.peak_queue_depth)
+    assert np.array_equal(vec.latencies, brute.latencies)
+    assert [(r.t, r.lam_hat, r.pas, r.cost, r.feasible)
+            for r in vec.intervals] == \
+        [(r.t, r.lam_hat, r.pas, r.cost, r.feasible)
+         for r in brute.intervals]
+
+
+def test_vec_is_the_default_trace_solver(bench_pipe, bench_rates):
+    """``run_trace`` without a solver override runs the vec hot path —
+    identical outputs to asking for it explicitly."""
+    default = AD.run_trace(bench_pipe, bench_rates, policy="ipa", seed=11,
+                           max_replicas=96)
+    vec = AD.run_trace(bench_pipe, bench_rates, policy="ipa", seed=11,
+                       max_replicas=96, solver="vec")
+    assert np.array_equal(default.latencies, vec.latencies)
+    assert default.completed == vec.completed
+    assert default.solver_wall_s > 0.0
+
+
+# ---------------------------------------------------------------------------
+# fa2_high collapse: degeneracy documented and pinned
+# ---------------------------------------------------------------------------
+def test_fa2_high_collapse_is_objective_degeneracy(bench_pipe):
+    """At the bench objective, ipa picks the all-heavy corner at every
+    visited demand point and coincides with fa2_high exactly."""
+    rates = bursty_trace(600)            # the full-bench demand points
+    heavy = {s.name: s.heaviest.name for s in bench_pipe.stages}
+    for lam in _demand_points(rates):
+        ipa = BL.ipa(bench_pipe, lam, max_replicas=96)
+        high = BL.fa2(bench_pipe, lam, "high", max_replicas=96)
+        assert ipa.feasible and high.feasible
+        assert all(sc.variant == heavy[st.name]
+                   for sc, st in zip(ipa.config.stages, bench_pipe.stages))
+        assert ipa.config == high.config, lam
+
+
+def test_fa2_high_and_ipa_diverge_under_cost_pressure(bench_pipe):
+    """Wiring sanity: the collapse is the objective's verdict, not a
+    restriction leak — a cost-heavy objective pushes ipa out of the
+    all-heavy corner, away from fa2_high."""
+    heavy = {s.name: s.heaviest.name for s in bench_pipe.stages}
+    diverged = 0
+    for lam in (5.0, 12.0, 20.0):
+        ipa = BL.ipa(bench_pipe, lam, obj=OPT.Objective(alpha=1.0, beta=2.0),
+                     max_replicas=96)
+        if any(sc.variant != heavy[st.name]
+               for sc, st in zip(ipa.config.stages, bench_pipe.stages)):
+            diverged += 1
+    assert diverged == 3

@@ -1,0 +1,176 @@
+"""FrontierCache: exact-keyed memoization of per-pipeline Pareto
+frontiers across adaptation intervals.
+
+The load-bearing property: with exact keying (the default), threading a
+cache through ``solve_cluster`` / ``run_cluster_trace`` is pure
+memoization — cached and uncached runs are **bit-identical** in every
+chosen config, reconfiguration log entry and realized PAS/cost record,
+including mid-window cases where the committed incumbent and the serving
+config diverge while the arrival estimate repeats.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import adapter as AD
+from repro.core import optimizer as OPT
+from test_cluster import toy_cluster
+
+
+# ---------------------------------------------------------------------------
+# unit: keying, counters, invalidation, bounds
+# ---------------------------------------------------------------------------
+def test_cache_hits_on_repeated_rate_and_misses_on_new():
+    cl = toy_cluster()
+    cache = OPT.FrontierCache()
+    obj = OPT.Objective()
+    f1 = cache.frontier(cl.pipelines[0], 10.0, obj)
+    assert (cache.hits, cache.misses) == (0, 1)
+    f2 = cache.frontier(cl.pipelines[0], 10.0, obj)
+    assert (cache.hits, cache.misses) == (1, 1)
+    assert f2 is f1                       # shared, treated immutable
+    cache.frontier(cl.pipelines[0], 11.0, obj)          # new rate
+    cache.frontier(cl.pipelines[1], 10.0, obj)          # new pipeline
+    cache.frontier(cl.pipelines[0], 10.0,
+                   OPT.Objective(alpha=2.0))            # new objective
+    cache.frontier(cl.pipelines[0], 10.0, obj, max_replicas=7)
+    cache.frontier(cl.pipelines[0], 10.0, obj, latency_model="expected")
+    assert cache.misses == 6
+    assert len(cache) == 6
+
+
+def test_cached_frontier_is_bit_identical_to_direct():
+    cl = toy_cluster()
+    cache = OPT.FrontierCache()
+    obj = OPT.Objective(alpha=1.0, beta=0.05)
+    for lam in (3.0, 11.5, 3.0, 24.0):
+        got = cache.frontier(cl.pipelines[0], lam, obj)
+        ref = OPT.pareto_frontier(cl.pipelines[0], lam, obj)
+        assert [(p.cost, p.objective, p.pas, p.latency, p.config)
+                for p in got] == \
+            [(p.cost, p.objective, p.pas, p.latency, p.config) for p in ref]
+
+
+def test_cache_clear_and_fifo_eviction():
+    cl = toy_cluster()
+    cache = OPT.FrontierCache(max_entries=2)
+    obj = OPT.Objective()
+    for lam in (1.0, 2.0, 3.0):           # third insert evicts the first
+        cache.frontier(cl.pipelines[0], lam, obj)
+    assert len(cache) == 2
+    cache.frontier(cl.pipelines[0], 1.0, obj)      # evicted -> miss again
+    assert cache.misses == 4
+    cache.clear()
+    assert len(cache) == 0
+    cache.frontier(cl.pipelines[0], 3.0, obj)
+    assert cache.misses == 5
+
+
+def test_cache_quantize_buckets_nearby_rates():
+    cl = toy_cluster()
+    cache = OPT.FrontierCache(quantize=1.0)
+    obj = OPT.Objective()
+    a = cache.frontier(cl.pipelines[0], 10.2, obj)
+    b = cache.frontier(cl.pipelines[0], 9.9, obj)   # same bucket: 10.0
+    assert b is a and cache.hits == 1
+    # the frontier is computed AT the bucketed rate — deterministic in the
+    # bucket, never dependent on which member arrived first
+    ref = OPT.pareto_frontier(cl.pipelines[0], 10.0, obj)
+    assert [p.config for p in a] == [p.config for p in ref]
+
+
+def test_cache_rejects_bad_args():
+    with pytest.raises(ValueError):
+        OPT.FrontierCache(quantize=0.0)
+    with pytest.raises(ValueError):
+        OPT.FrontierCache(max_entries=0)
+
+
+def test_cache_stats_shape():
+    cache = OPT.FrontierCache()
+    assert cache.stats == {"hits": 0, "misses": 0, "entries": 0,
+                           "hit_rate": 0.0}
+
+
+# ---------------------------------------------------------------------------
+# solver parity: cache in / cache out
+# ---------------------------------------------------------------------------
+@given(budget=st.integers(6, 55), lam_a=st.floats(1.0, 25.0),
+       lam_b=st.floats(1.0, 25.0))
+@settings(max_examples=15, deadline=None)
+def test_solve_cluster_with_cache_is_bit_identical(budget, lam_a, lam_b):
+    cl = toy_cluster(cores=float(budget))
+    obj = OPT.Objective(alpha=1.0, beta=0.05)
+    cache = OPT.FrontierCache()
+    for _ in range(2):                    # second pass runs off pure hits
+        cached = OPT.solve_cluster(cl, [lam_a, lam_b], obj, cache=cache)
+        plain = OPT.solve_cluster(cl, [lam_a, lam_b], obj)
+        assert cached.feasible == plain.feasible
+        if cached.feasible:
+            assert cached.config == plain.config
+            assert cached.objective == plain.objective
+            assert cached.cost == plain.cost
+    assert cache.hits > 0
+
+
+# ---------------------------------------------------------------------------
+# end to end: cached vs uncached cluster traces, bit for bit
+# ---------------------------------------------------------------------------
+def _trace_signature(res):
+    """Everything a solver-path change could perturb: per-interval chosen
+    configs are reflected in (pas, cost, feasible), plus the reconfig log
+    and the realized latency streams."""
+    return (
+        res.completed, res.dropped, res.arrived, res.sim_events,
+        res.n_reconfigs, tuple(res.reconfig_log), res.peak_serving_cores,
+        tuple(tuple((r.t, r.lam_hat, r.pas, r.cost, r.feasible)
+                    for r in p.intervals) for p in res.per_pipeline),
+        tuple(tuple(np.asarray(p.latencies).tolist())
+              for p in res.per_pipeline),
+    )
+
+
+@given(seed=st.integers(0, 9999))
+@settings(max_examples=6, deadline=None)
+def test_cached_cluster_trace_bit_identical_on_bursty_traces(seed):
+    """Property (the ISSUE's cache-correctness pin): cached vs uncached
+    ``run_cluster_trace`` produce bit-identical configs, reconfig logs and
+    realized PAS on random bursty traces — including mid-window incumbent
+    cases (adaptation_delay > 0 with hysteresis, so ``current`` and
+    ``serving`` diverge while the arrival estimate repeats)."""
+    rng = np.random.default_rng(seed)
+    cl = toy_cluster(cores=float(rng.integers(14, 30)))
+    t = np.arange(50, dtype=np.float64)
+    traces = []
+    for _ in range(2):
+        phase = rng.uniform(0.0, 40.0)
+        burst = rng.uniform(6.0, 20.0) * np.exp(
+            -((t - phase) % 40.0) / rng.uniform(4.0, 12.0))
+        traces.append(np.clip(2.0 + burst + rng.normal(0.0, 0.3, 50),
+                              0.5, None))
+    for policy, kw in (("ipa", {"switch_cost": 0.05,
+                                "adaptation_delay": 6.0}),
+                       ("ipa", {}),
+                       ("split_ipa", {"adaptation_delay": 6.0})):
+        common = dict(policy=policy, obj=OPT.Objective(alpha=1.0, beta=0.02),
+                      seed=seed % 7, **kw)
+        cached = AD.run_cluster_trace(cl, traces, **common)   # auto cache
+        plain = AD.run_cluster_trace(cl, traces, frontier_cache=None,
+                                     **common)
+        assert _trace_signature(cached) == _trace_signature(plain), \
+            (policy, kw)
+        assert cached.frontier_cache_stats is not None
+        assert plain.frontier_cache_stats is None
+
+
+def test_explicit_cache_instance_is_shared_across_runs():
+    cl = toy_cluster(cores=24.0)
+    traces = [np.full(30, 6.0), np.full(30, 4.0)]
+    cache = OPT.FrontierCache()
+    AD.run_cluster_trace(cl, traces, policy="ipa", frontier_cache=cache)
+    first_misses = cache.misses
+    res = AD.run_cluster_trace(cl, traces, policy="ipa",
+                               frontier_cache=cache)
+    # the second identical run re-solves from pure hits
+    assert cache.misses == first_misses
+    assert res.frontier_cache_stats["hits"] > 0

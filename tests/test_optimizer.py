@@ -44,6 +44,61 @@ def test_enum_matches_brute_oracle(seed, lam):
         assert se.objective == pytest.approx(sb.objective, rel=1e-9)
 
 
+@given(seed=st.integers(0, 10_000), lam=st.floats(0.5, 60.0),
+       metric=st.sampled_from(["pas", "pas_prime", "log_pas"]))
+@settings(max_examples=60, deadline=None)
+def test_vec_is_bit_identical_to_brute(seed, lam, metric):
+    """The hot-path contract: ``solve_vec`` (broadcast float64 numpy) and
+    ``solve_brute`` (plain python) agree *bitwise* — same config (ties
+    included: both scan the option lattice in itertools.product order and
+    take the first maximum), same objective/pas/cost/latency floats."""
+    pipe = random_pipeline(np.random.default_rng(seed))
+    obj = OPT.Objective(alpha=2.0, beta=0.7, delta=1e-5, metric=metric)
+    sv = OPT.solve_vec(pipe, lam, obj)
+    sb = OPT.solve_brute(pipe, lam, obj)
+    assert sv.feasible == sb.feasible
+    if sv.feasible:
+        assert sv.config == sb.config
+        assert sv.objective == sb.objective
+        assert sv.pas == sb.pas
+        assert sv.cost == sb.cost
+        assert sv.latency == sb.latency
+
+
+@given(seed=st.integers(0, 10_000), lam=st.floats(0.5, 40.0))
+@settings(max_examples=30, deadline=None)
+def test_vec_matches_brute_under_restrictions(seed, lam):
+    """The fa2/rim paths: restricted variants and pinned replication run
+    through the same broadcast machinery, still bit-identical."""
+    pipe = random_pipeline(np.random.default_rng(seed))
+    lo = [s.lightest.name for s in pipe.stages]
+    obj = OPT.Objective(alpha=0.0, beta=1.0, delta=1e-6)
+    sv = OPT.solve_vec(pipe, lam, obj, restrict_variants=lo)
+    sb = OPT.solve_brute(pipe, lam, obj, restrict_variants=lo)
+    assert sv.feasible == sb.feasible
+    if sv.feasible:
+        assert sv.config == sb.config and sv.objective == sb.objective
+    obj = OPT.Objective(alpha=1.0, beta=0.0, delta=1e-6)
+    sv = OPT.solve_vec(pipe, lam, obj, fixed_replicas=8)
+    sb = OPT.solve_brute(pipe, lam, obj, fixed_replicas=8)
+    assert sv.feasible == sb.feasible
+    if sv.feasible:
+        assert sv.config == sb.config and sv.objective == sb.objective
+
+
+def test_solve_auto_picks_vec():
+    pipe = PP.video()
+    sol = OPT.solve(pipe, 12.0, OPT.Objective())
+    assert sol.solver == "vec"
+    assert sol.feasible
+
+
+def test_vec_rejects_oversized_lattice():
+    pipe = PP.video()
+    with pytest.raises(ValueError):
+        OPT.solve_vec(pipe, 10.0, OPT.Objective(), max_combos=1)
+
+
 @given(seed=st.integers(0, 10_000), lam=st.floats(0.5, 50.0))
 @settings(max_examples=40, deadline=None)
 def test_solution_satisfies_constraints(seed, lam):

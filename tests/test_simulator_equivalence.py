@@ -110,6 +110,75 @@ def test_new_core_schedules_far_fewer_events():
 
 
 # ---------------------------------------------------------------------------
+# pre-sized arrival batching: bulk inject == per-request inject
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("name", sorted(EQUIV_TRACES))
+def test_bulk_injection_event_for_event_equivalent(name):
+    """``inject_arrivals`` is the per-request ``inject`` loop call-for-
+    call: same event count, same metrics, same latency stream — whether
+    the whole trace lands in one bulk extend or in per-window cuts."""
+    config, arrivals, horizon = EQUIV_TRACES[name]
+    ref = replay(PipelineSimulator, PIPE, config, arrivals, horizon)
+
+    bulk = PipelineSimulator(PIPE, config)
+    bulk.inject_arrivals(arrivals)
+    bulk.run_until(horizon)
+
+    cuts = PipelineSimulator(PIPE, config)
+    arr = np.asarray(arrivals, np.float64)
+    edges = np.linspace(0.0, horizon, 5)
+    lo = 0
+    for b in edges[1:]:
+        hi = int(np.searchsorted(arr, b, side="left"))
+        cuts.inject_arrivals(arr[lo:hi])
+        lo = hi
+        cuts.run_until(float(b))
+    cuts.inject_arrivals(arr[lo:])
+    cuts.run_until(horizon)
+
+    for sim in (bulk, cuts):
+        m, mr = sim.metrics, ref.metrics
+        assert (m.arrived, m.completed, m.dropped) == \
+            (mr.arrived, mr.completed, mr.dropped)
+        np.testing.assert_array_equal(m.latencies, mr.latencies)
+        assert sim.events_processed == ref.events_processed
+
+
+def test_bulk_injection_unsorted_and_empty():
+    """Out-of-order bulk blocks trip the sortedness flag and are merged
+    stably; empty blocks are free no-ops."""
+    config, arrivals, horizon = EQUIV_TRACES["poisson_mid"]
+    ref = replay(PipelineSimulator, PIPE, config, arrivals, horizon)
+
+    sim = PipelineSimulator(PIPE, config)
+    arr = np.asarray(arrivals, np.float64)
+    half = len(arr) // 2
+    sim.inject_arrivals(arr[half:])      # later block first
+    sim.inject_arrivals(np.empty(0))
+    sim.inject_arrivals(arr[:half])
+    sim.run_until(horizon)
+    assert (sim.metrics.arrived, sim.metrics.completed,
+            sim.metrics.dropped) == (ref.metrics.arrived,
+                                     ref.metrics.completed,
+                                     ref.metrics.dropped)
+
+
+def test_bulk_injection_acquires_from_attached_pool():
+    from repro.serving.request import RequestPool
+    config, arrivals, horizon = EQUIV_TRACES["linspace_full"]
+    pool = RequestPool()
+    sim = PipelineSimulator(PIPE, config, request_pool=pool)
+    sim.inject_arrivals(arrivals)
+    sim.run_until(horizon)
+    assert pool.allocated >= 1
+    # terminal events released every request back to the free list
+    sim2 = PipelineSimulator(PIPE, config, request_pool=pool)
+    sim2.inject_arrivals(arrivals)
+    sim2.run_until(horizon)
+    assert pool.reused > 0
+
+
+# ---------------------------------------------------------------------------
 # exact timeout scheduling
 # ---------------------------------------------------------------------------
 def test_lone_request_dispatches_at_exact_wait_bound():
