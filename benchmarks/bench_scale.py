@@ -1,0 +1,251 @@
+#!/usr/bin/env python
+"""BENCH_scale: the production-scale scenario the ROADMAP north star asks
+for — 50-100 pipelines on one shared pool at C>=512, thousands of
+aggregate RPS synthesized from the heavy-tailed / flash-crowd excerpts
+(``trace.scale_excerpt`` with the ``scale`` knob).
+
+Three sections, emitted to ``BENCH_scale.json``:
+
+* ``simulator`` — the same capacity-constrained replay (one joint-solver
+  config, bulk-injected arrivals, windowed ``run_until``) through both
+  event cores, recording wall, events and ev/s each.  The structured-
+  array core must sustain >= 2x the heapq core's ev/s (>= 1.5x in
+  ``--smoke``, where fixed costs loom larger) *and* land bit-identical
+  aggregate metrics — the speedup is only admissible because the replay
+  is event-for-event the same simulation.
+* ``solver`` — ``optimizer.solve_cluster`` at the full pipeline count
+  and budget in every planning mode the adapter uses (plain, switch-cost
+  hysteresis, budgeted 2-D, overlap-aware transition planning).  Each
+  solve must fit the paper's ~10 s decision interval (2 s in smoke);
+  at C>=512 this is what the dominance-pruned knapsack buys.
+* ``adapter`` (full runs only) — a short end-to-end ``run_cluster_trace``
+  per event core: the whole monitor/predict/optimize/reconfigure loop
+  must produce identical completed/dropped/event counts on both cores,
+  and the JSON records the solver-vs-simulator wall split.
+
+``peak_rss_mb`` records the process high-water mark after the heaviest
+section.  ``--smoke`` (wired into ``scripts/tier1.sh``) shrinks the
+trace, keeps the pipeline count at 50 and the budget at C=512, gates the
+ev/s floor, the speedup ratio and the solver-wall ceiling, and writes
+nothing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import resource
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import adapter as AD                      # noqa: E402
+from repro.core import optimizer as OPT                   # noqa: E402
+from repro.core import trace as TR                        # noqa: E402
+from repro.core.cluster import ClusterModel               # noqa: E402
+from repro.core.pipeline import (ModelVariant, PipelineModel,  # noqa: E402
+                                 StageModel)
+from repro.core.simulator import make_cluster_simulator   # noqa: E402
+
+CORES = 512.0
+OBJ = OPT.Objective(alpha=1.0, beta=0.02, delta=1e-6, metric="pas")
+
+
+def build_cluster(n_pipes: int, rng: np.random.Generator) -> ClusterModel:
+    """Two-stage pipelines with three variants per stage — the same shape
+    the cluster bench uses, multiplied to production counts."""
+    def stage(sname: str, l1: float) -> StageModel:
+        variants = tuple(
+            ModelVariant(f"{sname}_{tag}", acc, alloc,
+                         (0.0, l1 * sc * 0.7, l1 * sc * 0.3))
+            for tag, acc, alloc, sc in zip(
+                ("light", "mid", "heavy"), (55.0, 70.0, 80.0), (1, 2, 4),
+                (1.0, 1.8, 3.2)))
+        return StageModel(sname, variants, sla=9.0 * l1,
+                          batch_choices=(1, 2, 4, 8, 16))
+
+    pipes = tuple(
+        PipelineModel(f"p{i}", (
+            stage(f"p{i}_a", 0.03 + 0.02 * rng.random()),
+            stage(f"p{i}_b", 0.02 + 0.02 * rng.random())))
+        for i in range(n_pipes))
+    return ClusterModel("scale", pipes, CORES)
+
+
+def build_traces(n_pipes: int, seconds: int, scale: float):
+    """Alternate the two production stress shapes across pipelines."""
+    rates, times = [], []
+    for i in range(n_pipes):
+        kind = TR.SCALE_EXCERPTS[i % len(TR.SCALE_EXCERPTS)]
+        cfg = TR.TraceConfig(
+            seed=i, base_rps=8.0, scale=scale,
+            burst_amp=10.0 if kind == "heavy_tailed" else 4.0)
+        r = TR.scale_excerpt(kind, seconds, cfg)
+        rates.append(r)
+        times.append(TR.arrivals_from_rates(r, seed=1000 + i))
+    return rates, times
+
+
+def replay(core: str, cluster, config, times, horizon: float,
+           window: float = 10.0):
+    """Fixed-config windowed replay; returns (wall_s, events, metrics)."""
+    sim = make_cluster_simulator(cluster, config, event_core=core)
+    t0 = time.perf_counter()
+    for p, tt in enumerate(times):
+        sim.inject_arrivals(tt, p)
+    edge = 0.0
+    while edge < horizon:
+        edge += window
+        sim.run_until(edge)
+    wall = time.perf_counter() - t0
+    metrics = [(m.arrived, m.completed, m.dropped)
+               for m in sim.metrics_by_pipe]
+    return wall, sim.events_processed, metrics
+
+
+def bench_solver(cluster, lam0, lam1, switch_budget: int):
+    """Wall time per planning mode, fresh caches (a cold boundary)."""
+    walls = {}
+    t0 = time.perf_counter()
+    base = OPT.solve_cluster(cluster, lam0, OBJ)
+    walls["plain_1d_s"] = time.perf_counter() - t0
+    assert base.feasible, "scale scenario must be plannable at C=512"
+    modes = {
+        "switch_1d_s": dict(current=base.config, switch_cost=0.1),
+        "budgeted_2d_s": dict(current=base.config, switch_cost=0.1,
+                              switch_budget=switch_budget),
+        "overlap_2d_s": dict(current=base.config, switch_cost=0.1,
+                             switch_budget=switch_budget, overlap=True,
+                             serving=base.config),
+    }
+    for name, kw in modes.items():
+        t0 = time.perf_counter()
+        OPT.solve_cluster(cluster, lam1, OBJ, **kw)
+        walls[name] = time.perf_counter() - t0
+    return base, walls
+
+
+def adapter_section(cluster, rates, seconds: int):
+    """End-to-end adaptation loop on both cores: identical results, and
+    the solver/simulator wall split the JSON promises."""
+    out = {}
+    check = {}
+    for core in ("heap", "struct"):
+        t0 = time.perf_counter()
+        res = AD.run_cluster_trace(
+            cluster, rates, policy="ipa", obj=OBJ, interval=10.0,
+            switch_cost=0.1, switch_budget=max(4, cluster.n_pipelines // 8),
+            adaptation_delay=8.0, event_core=core)
+        wall = time.perf_counter() - t0
+        out[core] = {
+            "trace_wall_s": round(wall, 3),
+            "solver_wall_s": round(res.solver_wall_s, 3),
+            "sim_wall_s": round(wall - res.solver_wall_s, 3),
+            "sim_events": res.sim_events,
+        }
+        check[core] = (res.sim_events, res.n_reconfigs,
+                       [(r.arrived, r.completed, r.dropped)
+                        for r in res.per_pipeline])
+    assert check["heap"] == check["struct"], \
+        "adapter diverges between event cores"
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true",
+                    help="seconds-scale gated subset for tier-1; no JSON")
+    args = ap.parse_args()
+
+    n_pipes = 50 if args.smoke else 60
+    seconds = 12 if args.smoke else 120
+    scale = 6.0 if args.smoke else 5.0
+    min_speedup = 1.5 if args.smoke else 2.0
+    max_solve_s = 2.0 if args.smoke else 10.0
+    min_evps = 40_000.0
+
+    rng = np.random.default_rng(0)
+    cluster = build_cluster(n_pipes, rng)
+    rates, times = build_traces(n_pipes, seconds, scale)
+    total_arrivals = int(sum(t.size for t in times))
+    aggregate_rps = float(sum(r.mean() for r in rates))
+    # plan the replay config for the pre-burst base load (20th percentile)
+    # — the IPA motivating regime: a flash crowd / Pareto burst lands on a
+    # fleet sized for quiet traffic, and the simulator is measured during
+    # the saturated window *before* adaptation would kick in
+    lam0 = [float(np.percentile(r, 20.0)) for r in rates]
+    lam1 = [float(r.max()) for r in rates]
+
+    base, solver_walls = bench_solver(
+        cluster, lam0, lam1, switch_budget=max(4, n_pipes // 8))
+    worst_solve = max(solver_walls.values())
+
+    horizon = seconds + 30.0
+    sim = {}
+    for core in ("heap", "struct"):
+        wall, events, metrics = replay(core, cluster, base.config, times,
+                                       horizon)
+        sim[core] = {"wall_s": round(wall, 3), "events": events,
+                     "evps": round(events / wall, 1), "metrics": metrics}
+    assert sim["heap"]["metrics"] == sim["struct"]["metrics"], \
+        "struct core diverges from heapq core on the scale replay"
+    assert sim["heap"]["events"] == sim["struct"]["events"]
+    for core in sim:
+        del sim[core]["metrics"]
+    speedup = sim["struct"]["evps"] / sim["heap"]["evps"]
+
+    adapter = None
+    if not args.smoke:
+        adapter = adapter_section(cluster, rates, seconds)
+
+    peak_rss_mb = resource.getrusage(resource.RUSAGE_SELF).ru_maxrss / 1024.0
+
+    print(f"scenario: {n_pipes} pipelines, C={CORES:.0f}, {seconds}s, "
+          f"{aggregate_rps:.0f} aggregate RPS, {total_arrivals} arrivals")
+    for core in ("heap", "struct"):
+        print(f"  {core:6s}: {sim[core]['events']} events in "
+              f"{sim[core]['wall_s']:.2f}s = {sim[core]['evps']/1000:.0f}k "
+              f"ev/s")
+    print(f"  speedup: {speedup:.2f}x  (gate >= {min_speedup}x)")
+    print("  solver: " + "  ".join(f"{k}={v*1000:.0f}ms"
+                                   for k, v in solver_walls.items())
+          + f"  (gate <= {max_solve_s}s per solve)")
+    print(f"  peak rss: {peak_rss_mb:.0f} MB")
+
+    assert speedup >= min_speedup, \
+        f"struct core speedup {speedup:.2f}x below the {min_speedup}x floor"
+    assert sim["struct"]["evps"] >= min_evps, \
+        f"struct ev/s {sim['struct']['evps']:.0f} below {min_evps:.0f} floor"
+    assert worst_solve <= max_solve_s, \
+        f"solver wall {worst_solve:.2f}s exceeds {max_solve_s}s ceiling"
+
+    if args.smoke:
+        print("bench_scale --smoke OK")
+        return
+
+    payload = {
+        "scenario": {
+            "pipelines": n_pipes, "cores": CORES, "seconds": seconds,
+            "scale": scale, "aggregate_rps": round(aggregate_rps, 1),
+            "total_arrivals": total_arrivals,
+            "excerpts": list(TR.SCALE_EXCERPTS),
+        },
+        "simulator": {**sim, "speedup": round(speedup, 2),
+                      "identical_metrics": True},
+        "solver": {**{k: round(v, 4) for k, v in solver_walls.items()},
+                   "max_solve_s": round(worst_solve, 4),
+                   "decision_interval_s": 10.0},
+        "adapter": adapter,
+        "peak_rss_mb": round(peak_rss_mb, 1),
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_scale.json")
+    with open(out, "w") as fh:
+        json.dump(payload, fh, indent=2)
+    print(f"wrote {os.path.abspath(out)}")
+
+
+if __name__ == "__main__":
+    main()

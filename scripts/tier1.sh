@@ -10,10 +10,13 @@
 # §5.3 adaptation window modeled, the hysteresis run must reconfigure no
 # more often than the no-hysteresis run at equal-or-better realized PAS
 # (bench_cluster --smoke runs both gates, plus the transition-overlap
-# invariant: serving cost <= C at every instant).  Slow tests (LSTM
-# training, jax decode loops) stay opt-in via `pytest -m slow`.  The
-# doc-link checker fails if README.md / docs/ARCHITECTURE.md reference a
-# file or symbol that no longer exists.
+# invariant: serving cost <= C at every instant), and on the production-
+# scale scenario (bench_scale --smoke: 50 pipelines at C=512 — struct
+# event core ev/s floor + speedup over the heapq core with identical
+# metrics, and a per-solve wall ceiling on every solve_cluster planning
+# mode).  Slow tests (LSTM training, jax decode loops) stay opt-in via
+# `pytest -m slow`.  The doc-link checker fails if README.md /
+# docs/ARCHITECTURE.md reference a file or symbol that no longer exists.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -22,4 +25,5 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q
 python benchmarks/bench_simulator.py --smoke
 python benchmarks/bench_cluster.py --smoke
+python benchmarks/bench_scale.py --smoke
 bash scripts/check_docs.sh

@@ -37,7 +37,9 @@ from repro.core import optimizer as OPT
 from repro.core.accuracy import pas_of
 from repro.core.cluster import ClusterConfig, ClusterModel
 from repro.core.pipeline import PipelineConfig, PipelineModel
-from repro.core.simulator import ClusterSimulator, PipelineSimulator
+from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
+                                  StructPipelineSimulator, EVENT_CORES,
+                                  make_cluster_simulator)
 from repro.core.trace import arrivals_from_rates
 from repro.serving.request import Request, RequestPool
 
@@ -107,12 +109,15 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
               predictor=None, oracle=None,
               interval: float = ADAPT_INTERVAL, seed: int = 0,
               max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
-              solver: Optional[str] = None) -> TraceResult:
+              solver: Optional[str] = None,
+              event_core: str = "heap") -> TraceResult:
     """policy in {ipa, fa2_low, fa2_high, rim}; predictor: LSTMPredictor or
     None (reactive); oracle: OraclePredictor for the Fig.-16 'baseline'.
     ``solver`` overrides the policy's enumeration solver (``vec`` — the
     default hot path — ``brute`` or ``enum``); the vec-vs-brute pinning
-    tests replay identical traces through both."""
+    tests replay identical traces through both.  ``event_core`` selects
+    the simulator hot loop (``"heap"`` reference or ``"struct"`` — the
+    structured-array core, event-for-event identical)."""
     rates = np.asarray(rates, np.float64)
     times = arrivals_from_rates(rates, seed=seed)
 
@@ -130,10 +135,16 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
         solver_wall += sol.solve_time
     if not sol.feasible:
         raise RuntimeError(f"no feasible initial config for {policy}")
+    if event_core not in EVENT_CORES:
+        raise ValueError(f"unknown event core {event_core!r}; "
+                         f"choose from {EVENT_CORES}")
     # requests never outlive their completion event here, so the simulator
     # can recycle them through a pool instead of churning the allocator
+    # (the struct core carries no request objects and ignores the pool)
     pool = RequestPool()
-    sim = PipelineSimulator(pipe, sol.config, request_pool=pool)
+    sim_cls = PipelineSimulator if event_core == "heap" \
+        else StructPipelineSimulator
+    sim = sim_cls(pipe, sol.config, request_pool=pool)
     sim.lam_est = lam0
     records: List[IntervalRecord] = []
 
@@ -382,7 +393,8 @@ def run_cluster_trace(cluster: ClusterModel,
                       switch_budget: Optional[int] = None,
                       adaptation_delay: float = 0.0,
                       sla_weights: Optional[Sequence[float]] = None,
-                      frontier_cache="auto"
+                      frontier_cache="auto",
+                      event_core: str = "heap"
                       ) -> ClusterTraceResult:
     """Drive N per-pipeline rate traces through one ``ClusterSimulator``.
 
@@ -426,6 +438,10 @@ def run_cluster_trace(cluster: ClusterModel,
     tested).  ``None`` bypasses caching (the A/B knob); passing a
     ``FrontierCache`` instance shares it across runs of the *same* model
     objects.
+
+    ``event_core``: the simulator hot loop — ``"heap"`` (reference) or
+    ``"struct"`` (structured-array batch-pop core, event-for-event
+    identical; what BENCH_scale runs).
     """
     rates = [np.asarray(r, np.float64) for r in rates]
     if len(rates) != cluster.n_pipelines:
@@ -471,8 +487,9 @@ def run_cluster_trace(cluster: ClusterModel,
             f"no feasible initial cluster config for {policy} "
             f"within budget {cluster.cores}")
     pool = RequestPool()
-    sim = ClusterSimulator(cluster, sol.config, request_pool=pool,
-                           adaptation_delay=adaptation_delay)
+    sim = make_cluster_simulator(cluster, sol.config, event_core=event_core,
+                                 request_pool=pool,
+                                 adaptation_delay=adaptation_delay)
     for p, lam in enumerate(lam0):
         sim.set_lam_est(p, lam)
 

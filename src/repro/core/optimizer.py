@@ -984,27 +984,94 @@ def _solve_cluster_plain(cluster, frontiers, weights, budget, current, t0):
                              "cluster_knap", weights, current)
 
 
+def _prune_candidates(cands: List[_Candidate],
+                      cross_class: bool) -> List[_Candidate]:
+    """Dominance pruning for one pipeline's knapsack tab: drop every
+    candidate some other candidate *strictly* beats in value at no higher
+    knapsack cost, plus exact ``(cost, value)`` duplicates (first kept).
+
+    The strictness discipline makes pruning invisible, not merely
+    objective-preserving: in the DP a strict dominator's total beats the
+    dominated candidate's at every budget (``dp`` is monotone in budget),
+    so the dominated row could never be picked — even on ties.  In the
+    2-D exactly-k DP that argument only holds within a switch class
+    (stay/switch draw from different ``k`` rows), so callers pass
+    ``cross_class=False`` there and domination never crosses classes.
+
+    This is where overlap-aware arbitration's frontier collapse pays off:
+    ``max(old_cost, cost)`` maps every candidate at or below the serving
+    fleet's cost onto one knapsack column, and all but the best of them
+    die here instead of each burning an O(C) DP row."""
+    n = len(cands)
+    if n <= 1:
+        return cands
+    costs = np.array([c.cost for c in cands], dtype=np.int64)
+    vals = np.array([c.value for c in cands])
+    sw = np.array([c.switch for c in cands], dtype=bool)
+
+    def prefix_best(mask: np.ndarray) -> np.ndarray:
+        """Per candidate: the best value among masked candidates with
+        cost <= its cost (-inf when none)."""
+        if not mask.any():
+            return np.full(n, -np.inf)
+        order = np.argsort(costs[mask], kind="stable")
+        mc = costs[mask][order]
+        cm = np.maximum.accumulate(vals[mask][order])
+        idx = np.searchsorted(mc, costs, side="right") - 1
+        return np.where(idx >= 0, cm[np.maximum(idx, 0)], -np.inf)
+
+    if cross_class:
+        dominated = prefix_best(np.ones(n, dtype=bool)) > vals
+    else:
+        best_stay = prefix_best(~sw)
+        best_switch = prefix_best(sw)
+        dominated = np.where(sw, best_switch, best_stay) > vals
+    seen = set()
+    out = []
+    for i, c in enumerate(cands):
+        if dominated[i]:
+            continue
+        key = (c.cost, c.value) if cross_class else (c.cost, c.value,
+                                                     c.switch)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(c)
+    return out
+
+
 def _knapsack_1d(cand_tabs: List[List[_Candidate]], budget: float
                  ) -> Optional[List[_Candidate]]:
     """Exact multiple-choice knapsack over pre-valued candidates (switch
-    penalties already folded into ``value``)."""
+    penalties already folded into ``value``).  Dominated rows are pruned
+    first, and each pipeline's DP row only sweeps the budget columns its
+    prefix can actually reach (``hi``) — the flat tail beyond is one
+    broadcast fill, not per-candidate vector work."""
     if not np.isfinite(budget):
         return [max(cands, key=lambda c: c.value) for cands in cand_tabs]
+    cand_tabs = [_prune_candidates(cands, cross_class=True)
+                 for cands in cand_tabs]
     B = int(np.floor(budget + 1e-9))
     dp = np.zeros(B + 1)
     pick_tabs: List[np.ndarray] = []
+    hi = 0                               # reachable-cost bound so far
     for cands in cand_tabs:
         cur = np.full(B + 1, -np.inf)
         pick = np.full(B + 1, -1, dtype=np.int64)
+        step = max((c.cost for c in cands if c.cost <= B), default=0)
+        hi = min(B, hi + step)
         for j, c in enumerate(cands):
             if c.cost > B:
                 continue
-            cand = dp[:B + 1 - c.cost] + c.value
-            seg = cur[c.cost:]
-            sel = pick[c.cost:]
+            cand = dp[:hi + 1 - c.cost] + c.value
+            seg = cur[c.cost:hi + 1]
+            sel = pick[c.cost:hi + 1]
             better = cand > seg
             seg[better] = cand[better]
             sel[better] = j
+        if hi < B:                       # flat tail: nothing costs more
+            cur[hi + 1:] = cur[hi]
+            pick[hi + 1:] = pick[hi]
         pick_tabs.append(pick)
         dp = cur
     if not np.isfinite(dp[B]):
@@ -1024,28 +1091,41 @@ def _knapsack_2d(cand_tabs: List[List[_Candidate]], budget: float, K: int
                  ) -> Optional[List[_Candidate]]:
     """Exact DP over (switches used, cores used): ``dp[k][b]`` is the best
     prefix value using exactly ``k`` switches within ``b`` cores.  The
-    reconfiguration budget K caps changed pipelines per interval."""
+    reconfiguration budget K caps changed pipelines per interval.  Each
+    tab is dominance-pruned per switch class first, the ``k`` rows swept
+    per pipeline are capped at the prefix length, and budget columns
+    beyond the prefix's reachable cost are filled flat rather than swept
+    — all three provably change nothing, not even tie-breaks."""
     n = len(cand_tabs)
     if not np.isfinite(budget):
         return _bounded_switch_unbounded_cores(cand_tabs, K)
+    cand_tabs = [_prune_candidates(cands, cross_class=False)
+                 for cands in cand_tabs]
     B = int(np.floor(budget + 1e-9))
     dp = np.full((K + 1, B + 1), -np.inf)
     dp[0, :] = 0.0
     pick_tabs: List[np.ndarray] = []
-    for cands in cand_tabs:
+    hi = 0                               # reachable-cost bound so far
+    for i, cands in enumerate(cand_tabs):
         cur = np.full((K + 1, B + 1), -np.inf)
         pick = np.full((K + 1, B + 1), -1, dtype=np.int64)
+        step = max((c.cost for c in cands if c.cost <= B), default=0)
+        hi = min(B, hi + step)
+        kmax = min(K, i + 1)             # prefix can't switch more often
         for j, c in enumerate(cands):
             if c.cost > B:
                 continue
             dk = 1 if c.switch else 0
-            for k in range(dk, K + 1):
-                cand = dp[k - dk, :B + 1 - c.cost] + c.value
-                seg = cur[k, c.cost:]
-                sel = pick[k, c.cost:]
+            for k in range(dk, kmax + 1):
+                cand = dp[k - dk, :hi + 1 - c.cost] + c.value
+                seg = cur[k, c.cost:hi + 1]
+                sel = pick[k, c.cost:hi + 1]
                 better = cand > seg
                 seg[better] = cand[better]
                 sel[better] = j
+        if hi < B:                       # flat tail: nothing costs more
+            cur[:, hi + 1:] = cur[:, hi:hi + 1]
+            pick[:, hi + 1:] = pick[:, hi:hi + 1]
         pick_tabs.append(pick)
         dp = cur
     k_best = int(np.argmax(dp[:, B]))

@@ -879,6 +879,621 @@ class ClusterSimulator:
             self.now = t_end
 
 
+# ---------------------------------------------------------------------------
+# structured-array event core
+#
+# The heapq core above pays per-event python on every arrival: a string-kind
+# _handle dispatch, a per-request queue append, a Request object, and (under
+# load) a _try_dispatch call that usually changes nothing.  At BENCH_scale
+# (tens of thousands of arrivals per decision window) that per-arrival python
+# IS the wall time — profiling shows the heap's C ops are <10% of it.  The
+# structured core below keeps the exact event semantics but stores arrivals
+# and stage queues as parallel numpy columns and delivers whole *runs* of
+# arrivals (every injected arrival up to the next heap event) in vectorized
+# bulk, computing analytically the first arrival that could change simulator
+# state (fill a batch, arm a timeout, free a replica at a wake tie, or cross
+# the §4.5 drop threshold) and handing only *that* one to the exact
+# per-event path.  Every run it delivers is therefore event-for-event
+# identical to the heapq core — the equivalence suite pins completed /
+# dropped / latency streams / events_processed / reconfig_log bit-identical.
+# ---------------------------------------------------------------------------
+
+_EV_DONE, _EV_TIMEOUT, _EV_WAKE, _EV_APPLY = 0, 1, 2, 3
+_KIND_IDS = {"done": _EV_DONE, "timeout": _EV_TIMEOUT,
+             "wake": _EV_WAKE, "apply": _EV_APPLY}
+
+
+class _EventColumns:
+    """Pending derived events as parallel columns (time / kind / payload)
+    indexed by slot, with a ``(time, seq, slot)`` heap over the slots and
+    batch-pop of same-timestamp events.
+
+    The heap tuples carry only scalars — comparisons never touch payload
+    objects — and ``pop_batch`` drains every event sharing the head
+    timestamp in one call (seq order, i.e. push order, preserved), so the
+    run loop crosses the python/numpy boundary once per *timestamp*, not
+    once per event."""
+
+    __slots__ = ("kind", "pay", "_heap", "_free", "_seq")
+
+    def __init__(self, cap: int = 256):
+        self.kind = np.zeros(cap, dtype=np.int8)
+        self.pay: List[object] = [None] * cap
+        self._free = list(range(cap - 1, -1, -1))
+        self._heap: List[Tuple[float, int, int]] = []
+        self._seq = itertools.count()
+
+    def __len__(self) -> int:
+        return len(self._heap)
+
+    def push(self, t: float, kind: int, payload) -> None:
+        free = self._free
+        if not free:
+            cap = len(self.pay)
+            grown = np.zeros(2 * cap, dtype=np.int8)
+            grown[:cap] = self.kind
+            self.kind = grown
+            self.pay.extend([None] * cap)
+            free.extend(range(2 * cap - 1, cap - 1, -1))
+        slot = free.pop()
+        self.kind[slot] = kind
+        self.pay[slot] = payload
+        heapq.heappush(self._heap, (t, next(self._seq), slot))
+
+    def head_time(self) -> float:
+        h = self._heap
+        return h[0][0] if h else _INF
+
+    def pop_batch(self) -> Tuple[float, List[int], List[object]]:
+        """Pop every event sharing the head timestamp, in seq order."""
+        h = self._heap
+        pop = heapq.heappop
+        t0, _, slot = pop(h)
+        kinds = [int(self.kind[slot])]
+        pays = [self.pay[slot]]
+        self.pay[slot] = None
+        self._free.append(slot)
+        while h and h[0][0] == t0:
+            _, _, slot = pop(h)
+            kinds.append(int(self.kind[slot]))
+            pays.append(self.pay[slot])
+            self.pay[slot] = None
+            self._free.append(slot)
+        return t0, kinds, pays
+
+
+class _ArrayStageQueue:
+    """The struct core's stage queue: growable float64 parallel columns
+    (absolute arrival time, stage-enter time) with a logical front pointer
+    — no per-request python objects.  Batch pops, §4.5 drop scans and
+    completion accounting all run as numpy slice ops."""
+
+    __slots__ = ("_arr", "_enter", "head", "n", "min_arr", "sorted_fifo",
+                 "fifo_ok")
+
+    def __init__(self, cap: int = 64, sorted_fifo: bool = False):
+        self._arr = np.empty(cap, dtype=np.float64)
+        self._enter = np.empty(cap, dtype=np.float64)
+        self.head = 0
+        self.n = 0
+        self.min_arr = _INF
+        # first-stage queues normally receive ascending arrival times
+        # (sorted injections + FIFO pops), so their drop scan is a prefix
+        # search and min_arr is exact rather than a conservative bound.
+        # ``fifo_ok`` tracks whether that holds *right now*: a stale
+        # arrival injected after the clock passed it (a later run_until
+        # delivering times older than what's already queued) breaks the
+        # ascending order, degrading the queue to the masked scan until
+        # it next empties.
+        self.sorted_fifo = sorted_fifo
+        self.fifo_ok = sorted_fifo
+
+    def __len__(self) -> int:
+        return self.n - self.head
+
+    def _room(self, k: int) -> None:
+        cap = self._arr.size
+        if self.n + k <= cap:
+            return
+        live = self.n - self.head
+        new_cap = max(2 * cap, live + k)
+        na = np.empty(new_cap, dtype=np.float64)
+        ne = np.empty(new_cap, dtype=np.float64)
+        na[:live] = self._arr[self.head:self.n]
+        ne[:live] = self._enter[self.head:self.n]
+        self._arr = na
+        self._enter = ne
+        self.head = 0
+        self.n = live
+
+    def push_scalar(self, arrival: float, enter: float) -> None:
+        self._room(1)
+        n = self.n
+        if self.fifo_ok and n > self.head and arrival < self._arr[n - 1]:
+            self.fifo_ok = False
+        self._arr[n] = arrival
+        self._enter[n] = enter
+        self.n = n + 1
+        if arrival < self.min_arr:
+            self.min_arr = arrival
+
+    def push_bulk(self, arrivals: np.ndarray, enter) -> None:
+        """Append a block of arrivals; ``enter`` may be a scalar (upstream
+        handoff: the whole batch enters now) or a parallel array (bulk
+        injection of stale + fresh arrivals).  A sorted_fifo queue only
+        ever receives ascending blocks, so the min is the first element;
+        handoff batches popped from a non-first stage can be out of order
+        (completions overtake) and need the full scan."""
+        k = arrivals.size
+        self._room(k)
+        n = self.n
+        if self.fifo_ok and n > self.head and arrivals[0] < self._arr[n - 1]:
+            self.fifo_ok = False
+        self._arr[n:n + k] = arrivals
+        self._enter[n:n + k] = enter
+        self.n = n + k
+        m = float(arrivals[0]) if self.sorted_fifo else float(arrivals.min())
+        if m < self.min_arr:
+            self.min_arr = m
+
+    def head_enter(self) -> float:
+        return self._enter[self.head]
+
+    def head_arrival(self) -> float:
+        return self._arr[self.head]
+
+    def pop_batch(self, k: int) -> np.ndarray:
+        h = self.head
+        e = h + k
+        arrs = self._arr[h:e].copy()
+        self.head = e
+        if e == self.n:
+            self.min_arr = _INF
+            self.head = self.n = 0
+            self.fifo_ok = self.sorted_fifo
+        elif e >= 4096 and 2 * e >= self.n:
+            live = self.n - e
+            self._arr[:live] = self._arr[e:self.n].copy()
+            self._enter[:live] = self._enter[e:self.n].copy()
+            self.head = 0
+            self.n = live
+        return arrs
+
+    def drop_expired(self, now: float, threshold: float) -> int:
+        """Drop every queued request older than ``threshold``; returns the
+        count (the struct core keeps no per-request objects to return).
+        Same tightened-bound semantics as ``_StageQueue.drop_expired`` on
+        both paths: while ``fifo_ok`` holds, the prefix search lands on
+        the identical drop set and the identical tightened ``min_arr``;
+        a queue de-ordered by stale injections takes the masked scan."""
+        h, t = self.head, self.n
+        if h == t:
+            self.min_arr = _INF
+            self.fifo_ok = self.sorted_fifo
+            return 0
+        arr = self._arr
+        if self.fifo_ok:
+            # expired entries form a prefix of the ascending column; find
+            # the cutoff by binary search, then settle the rounding
+            # boundary with the reference's exact `now - a > thr` test
+            j = h + int(arr[h:t].searchsorted(now - threshold, side="left"))
+            while j < t and now - arr[j] > threshold:
+                j += 1
+            while j > h and not (now - arr[j - 1] > threshold):
+                j -= 1
+            if j == t:
+                self.min_arr = _INF
+                self.head = self.n = 0
+                self.fifo_ok = self.sorted_fifo
+            else:
+                self.min_arr = float(arr[j])
+                self.head = j
+            return j - h
+        live = arr[h:t]
+        oldest = float(live.min())
+        if now - oldest <= threshold:
+            self.min_arr = oldest        # tightened bound, nothing expired
+            return 0
+        keep = (now - live) <= threshold
+        kept = live[keep]
+        kept_enter = self._enter[h:t][keep]
+        k = kept.size
+        self._arr[:k] = kept
+        self._enter[:k] = kept_enter
+        self.head = 0
+        self.n = k
+        if k:
+            self.min_arr = float(kept.min())
+        else:
+            self.min_arr = _INF
+            self.fifo_ok = self.sorted_fifo
+        return (t - h) - k
+
+
+class _StructCore:
+    """Mixin implementing the structured-array event core (see the section
+    comment above).  Combine with ``ClusterSimulator`` /
+    ``PipelineSimulator`` via ``StructClusterSimulator`` /
+    ``StructPipelineSimulator``.
+
+    Limitations (by design — the hot path carries no request objects):
+    per-request bookkeeping is skipped: ``record_timeline`` is rejected, an
+    attached ``request_pool`` is ignored (nothing is acquired or released),
+    and ``inject``-ed ``Request`` objects contribute only their arrival
+    timestamp (``done``/``dropped_at`` are never written back).  All
+    aggregate metrics — completed/dropped/arrived, latency streams,
+    ``events_processed``, ``reconfig_log``, peaks — are bit-identical to
+    the heapq core."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        if self.record_timeline:
+            raise ValueError(
+                "the struct event core keeps no per-request objects; "
+                "use the heapq core for record_timeline")
+        self._pool = None                # never acquire/release requests
+        firsts = set(self._first)
+        self.queues = [_ArrayStageQueue(sorted_fifo=s in firsts)
+                       for s in range(self.n_stages)]
+        self._evq = _EventColumns()
+        # per-pipeline injected-arrival buffers (arrivals only ever target
+        # a pipeline's first stage, so the global merge the heapq core
+        # performs is deferred to the trigger heap below)
+        P = self.n_pipelines
+        self._pt = [np.empty(256, dtype=np.float64) for _ in range(P)]
+        self._pi = [0] * P               # consumed-prefix cursor
+        self._pn = [0] * P               # logical end
+        self._p_unsorted = [False] * P
+        # lazy-delivery trigger state: per pipeline, the buffer index of
+        # the first arrival needing the exact per-event path (see
+        # _first_trigger) and a version counter invalidating stale trigger
+        # heap entries; _now0 is the clock at run_until entry (the floor
+        # for stage-enter times of stale injections)
+        self._next_k = [0] * P
+        self._trig_ver = [0] * P
+        self._trigh: List[Tuple[float, int, int]] = []
+        self._now0 = 0.0
+        # inj_pipe[s]: pipeline index when s is its pipeline's first
+        # (injection-receiving) stage, else -1
+        ip = [-1] * self.n_stages
+        for p in range(P):
+            ip[self._first[p]] = p
+        self._inj_pipe = ip
+
+    # -- event push (string kinds arrive from shared control-plane code) --
+    def _push(self, t: float, kind: str, payload) -> None:
+        self._evq.push(t, _KIND_IDS[kind], payload)
+
+    # -- injection ----------------------------------------------------------
+    def _p_room(self, p: int, k: int) -> None:
+        buf = self._pt[p]
+        cap = buf.size
+        if self._pn[p] + k <= cap:
+            return
+        i, n = self._pi[p], self._pn[p]
+        live = n - i
+        nt = np.empty(max(2 * cap, live + k), dtype=np.float64)
+        nt[:live] = buf[i:n]
+        self._pt[p] = nt
+        self._pi[p] = 0
+        self._pn[p] = live
+
+    def inject(self, req: Request, pipeline: int = 0) -> None:
+        self.metrics_by_pipe[pipeline].arrived += 1
+        self._p_room(pipeline, 1)
+        t = float(req.arrival)
+        n = self._pn[pipeline]
+        if n and t < self._pt[pipeline][n - 1]:
+            self._p_unsorted[pipeline] = True
+        self._pt[pipeline][n] = t
+        self._pn[pipeline] = n + 1
+
+    def inject_arrivals(self, times: Sequence[float],
+                        pipeline: int = 0) -> None:
+        times = np.asarray(times, dtype=np.float64)
+        k = times.size
+        if k == 0:
+            return
+        self.metrics_by_pipe[pipeline].arrived += k
+        self._p_room(pipeline, k)
+        n = self._pn[pipeline]
+        buf = self._pt[pipeline]
+        if (n and times[0] < buf[n - 1]) or \
+                (k > 1 and bool(np.any(times[1:] < times[:-1]))):
+            self._p_unsorted[pipeline] = True
+        buf[n:n + k] = times
+        self._pn[pipeline] = n + k
+
+    # -- the exact per-event paths (mirrors of the heapq core) -------------
+    def _arrive_one(self, s: int, t: float) -> None:
+        """Deliver one arrival through the exact heapq-core arrive path."""
+        q = self.queues[s]
+        q.push_scalar(t, self.now)
+        d = q.n - q.head
+        if d > self.peak_queue_depth:
+            self.peak_queue_depth = d
+        if (d >= self._batch_of[s]
+                or self._timeout_at[s] == _INF
+                or self.now - q.min_arr > self._drop_thr_s[s]):
+            self._try_dispatch(s)
+
+    def _arrive_batch(self, s: int, arrs: np.ndarray) -> None:
+        """Synchronous upstream handoff (the heapq core's push_many path)."""
+        q = self.queues[s]
+        q.push_bulk(arrs, self.now)
+        d = q.n - q.head
+        if d > self.peak_queue_depth:
+            self.peak_queue_depth = d
+        if (d >= self._batch_of[s]
+                or self._timeout_at[s] == _INF
+                or self.now - q.min_arr > self._drop_thr_s[s]):
+            self._try_dispatch(s)
+
+    def _try_dispatch(self, s: int) -> None:
+        q = self.queues[s]
+        now = self.now
+        thr = self._drop_thr_s[s]
+        if now - q.min_arr > thr:
+            k_dropped = q.drop_expired(now, thr)
+            if k_dropped:
+                self.metrics_by_pipe[self._pipe_of[s]].dropped += k_dropped
+                self._bump(s)
+        nq = q.n - q.head
+        if not nq:
+            return
+        batch_sz = self.configs[s].batch
+        free = self.free_at[s]
+        limit = now + _EPS
+        tab = self._lat_tab[s]
+        tab_n = len(tab)
+        evq = self._evq
+        gen = self._gen
+        while nq:
+            if nq < batch_sz:
+                deadline = q.head_enter() + self._wait_bounds()[s]
+                if now < deadline - _EPS:
+                    self._schedule_timeout(s, deadline)
+                    return
+                k = nq
+            else:
+                k = batch_sz
+            nf = len(free)
+            if nf == 0:
+                self._schedule_wake(s, q.head_arrival() + thr)
+                return
+            if nf > _NP_SCAN_MIN:
+                arr = np.asarray(free)
+                avail = (arr <= limit).nonzero()[0]
+                n_avail = avail.size
+                if n_avail == 0:
+                    self._schedule_wake(s, float(arr.min()))
+                    return
+                rep = int(avail[self.rr[s] % n_avail])
+            else:
+                avail = [i for i, t in enumerate(free) if t <= limit]
+                n_avail = len(avail)
+                if n_avail == 0:
+                    self._schedule_wake(s, min(free))
+                    return
+                rep = avail[self.rr[s] % n_avail]
+            arrs = q.pop_batch(k)
+            nq -= k
+            self.rr[s] += 1
+            done_t = now + (tab[k] if k < tab_n
+                            else self._stage_latency(s, k))
+            free[rep] = done_t
+            self.in_service += k
+            evq.push(done_t, _EV_DONE, (s, arrs))
+            gen[s] += 1                  # inlined _bump (lazy cancel)
+            self._timeout_at[s] = _INF
+
+    def _handle_ev(self, kind: int, payload) -> None:
+        if kind == _EV_DONE:
+            s, arrs = payload
+            self.in_service -= arrs.size
+            nxt = self._next[s]
+            if nxt >= 0:
+                self._arrive_batch(nxt, arrs)
+            else:
+                m = self.metrics_by_pipe[self._pipe_of[s]]
+                m.completed += arrs.size
+                m._lat.extend(self.now - arrs)   # vectorized per-batch
+            q = self.queues[s]
+            if q.n > q.head:
+                self._try_dispatch(s)
+        elif kind == _EV_TIMEOUT:
+            s, gen = payload
+            if self._timeout_at[s] <= self.now + _EPS:
+                self._timeout_at[s] = _INF
+            if gen == self._gen[s]:
+                q = self.queues[s]
+                if q.n > q.head:
+                    self._try_dispatch(s)
+        elif kind == _EV_WAKE:
+            s = payload
+            if self._wake_at[s] <= self.now + _EPS:
+                self._wake_at[s] = _INF
+            q = self.queues[s]
+            if q.n > q.head:
+                self._try_dispatch(s)
+        else:                            # _EV_APPLY
+            p, gen = payload
+            if gen == self._pending_gen[p] and \
+                    self._pending_cfg[p] is not None:
+                cfg = self._pending_cfg[p]
+                self._pending_cfg[p] = None
+                self._apply_pipeline_config(p, cfg)
+
+    # -- lazy bulk arrival delivery ----------------------------------------
+    #
+    # Injected arrivals only ever target a pipeline's first stage, and an
+    # arrival that merely appends to its stage queue commutes with every
+    # event touching *other* stages.  So instead of merging arrivals into
+    # the global event order (the heapq core's loop), each pipeline's
+    # buffer is delivered lazily: `_first_trigger` classifies the first
+    # pending arrival that the heapq core would do anything for beyond a
+    # queue append; those *triggers* are sequenced against the event heap
+    # (a (time, pipeline, version) heap with lazy invalidation), while the
+    # pure appends before them land as one slice op per stage — `_sync` —
+    # only when an event or trigger actually touches that stage.
+    def _first_trigger(self, s: int, buf: np.ndarray, i: int, n: int) -> int:
+        """Absolute index in ``[i, n]`` of the first pending arrival in
+        ``buf[i:n]`` (one injection stage's buffer, ascending) needing the
+        exact per-event path — fill the forming batch (dispatch), find no
+        live timeout (arm one), tie with the armed wake's replica-free
+        time, or cross the §4.5 drop threshold ``min_arr + thr``; ``n`` if
+        every pending arrival is a pure append."""
+        q = self.queues[s]
+        wake = self._wake_at[s]
+        if wake != _INF:
+            # no replica frees before the wake fires; arrivals only queue
+            # (dispatch attempts are provable no-ops).  Near the wake
+            # instant a replica may tie with an arrival, so route that
+            # boundary through the exact path.
+            k = i + int(buf[i:n].searchsorted(wake - 1e-9, side="left"))
+        elif self._timeout_at[s] != _INF:
+            # forming batch with a live timeout: appends are pure while
+            # the queue stays strictly below the batch size
+            k = i + self._batch_of[s] - 1 - (q.n - q.head)
+            if k < i:
+                k = i
+            elif k > n:
+                k = n
+        else:
+            k = i                        # next arrival arms/dispatches
+        if k > i:
+            # §4.5 drop trigger: the heapq core consults
+            # now - min_arr > thr at each arrival, with now there equal to
+            # max(run-entry clock, arrival time) and min_arr the
+            # conservative bound over queued + pending arrivals
+            m_eff = q.min_arr
+            t0 = buf[i]
+            if t0 < m_eff:
+                m_eff = t0
+            t_trig = m_eff + self._drop_thr_s[s]
+            if self._now0 > t_trig:
+                k = i
+            elif buf[k - 1] > t_trig:    # only search when drops imminent
+                kd = i + int(buf[i:n].searchsorted(t_trig, side="right"))
+                if kd < k:
+                    k = kd
+        return k
+
+    def _recompute_trigger(self, p: int) -> None:
+        """Reclassify pipeline ``p``'s next trigger after anything touched
+        its injection stage's state (dispatch, drop, timeout/wake marker,
+        config apply) and push the fresh entry; the version bump
+        invalidates every stale heap entry for ``p``."""
+        ver = self._trig_ver[p] + 1
+        self._trig_ver[p] = ver
+        i, n = self._pi[p], self._pn[p]
+        if i >= n:
+            self._next_k[p] = n
+            return
+        buf = self._pt[p]
+        k = self._first_trigger(self._first[p], buf, i, n)
+        self._next_k[p] = k
+        if k < n:
+            heapq.heappush(self._trigh, (buf[k], p, ver))
+
+    def _sync(self, p: int, tau: float) -> int:
+        """Deliver pipeline ``p``'s pending pure-append arrivals with
+        ``t <= tau`` as one queue-column slice op.  Appends never reach
+        past ``_next_k`` (the next trigger), so no classification can be
+        violated.  Returns the number delivered."""
+        i = self._pi[p]
+        lim_k = self._next_k[p]
+        if i >= lim_k:
+            return 0
+        buf = self._pt[p]
+        if buf[i] > tau:
+            return 0
+        j = i + int(buf[i:lim_k].searchsorted(tau, side="right"))
+        vals = buf[i:j]
+        now0 = self._now0
+        # stage-enter is the arrival's own instant, except stale
+        # (past-time) injections which enter at the run-entry clock
+        enter = np.maximum(vals, now0) if now0 > vals[0] else vals
+        q = self.queues[self._first[p]]
+        q.push_bulk(vals, enter)
+        d = q.n - q.head
+        if d > self.peak_queue_depth:
+            self.peak_queue_depth = d
+        self._pi[p] = j
+        return j - i
+
+    def run_until(self, t_end: float) -> None:
+        P = self.n_pipelines
+        for p in range(P):
+            if self._p_unsorted[p]:
+                self._pt[p][self._pi[p]:self._pn[p]].sort(kind="stable")
+                self._p_unsorted[p] = False
+        self._now0 = self.now
+        trigh: List[Tuple[float, int, int]] = []
+        self._trigh = trigh
+        for p in range(P):
+            self._recompute_trigger(p)
+        evq = self._evq
+        heap = evq._heap
+        trig_ver = self._trig_ver
+        first = self._first
+        inj_pipe = self._inj_pipe
+        handle = self._handle_ev
+        n_ev = 0
+        while True:
+            while trigh and trigh[0][2] != trig_ver[trigh[0][1]]:
+                heapq.heappop(trigh)
+            t_trig = trigh[0][0] if trigh else _INF
+            t_head = heap[0][0] if heap else _INF
+            # arrivals win ties against events, exactly like the heapq core
+            if t_trig <= t_head and t_trig <= t_end:
+                t, p, _ = heapq.heappop(trigh)
+                n_ev += self._sync(p, t) + 1
+                tf = float(t)
+                if tf > self.now:
+                    self.now = tf
+                self._pi[p] = self._next_k[p] + 1
+                self._arrive_one(first[p], tf)
+                self._recompute_trigger(p)
+                continue
+            if t_head <= t_end:
+                t, kinds, pays = evq.pop_batch()
+                if t > self.now:
+                    self.now = t
+                for kd, pay in zip(kinds, pays):
+                    if kd == _EV_DONE or kd == _EV_TIMEOUT:
+                        s = pay[0]
+                    elif kd == _EV_WAKE:
+                        s = pay
+                    else:
+                        s = first[pay[0]]
+                    p = inj_pipe[s]
+                    if p >= 0:
+                        # the event touches an injection stage: its pending
+                        # appends up to t must land first, and its trigger
+                        # classification is stale afterwards
+                        n_ev += self._sync(p, t)
+                        handle(kd, pay)
+                        self._recompute_trigger(p)
+                    else:
+                        handle(kd, pay)
+                n_ev += len(kinds)
+                continue
+            break
+        for p in range(P):
+            n_ev += self._sync(p, t_end)
+            i = self._pi[p]
+            if i > 4096 and 2 * i >= self._pn[p]:
+                n = self._pn[p]
+                live = n - i
+                self._pt[p][:live] = self._pt[p][i:n].copy()
+                self._pi[p] = 0
+                self._pn[p] = live
+        self.events_processed += n_ev
+        if t_end > self.now:             # never rewind the event clock
+            self.now = t_end
+
+
 class PipelineSimulator(ClusterSimulator):
     """The N=1 special case: one pipeline, unbounded core budget, the
     original single-pipeline API.  Shares every event-machinery code path
@@ -914,3 +1529,30 @@ class PipelineSimulator(ClusterSimulator):
 
     def reconfigure(self, config: PipelineConfig) -> None:  # type: ignore[override]
         self.reconfigure_pipeline(0, config)
+
+
+class StructClusterSimulator(_StructCore, ClusterSimulator):
+    """``ClusterSimulator`` on the structured-array event core."""
+
+
+class StructPipelineSimulator(_StructCore, PipelineSimulator):
+    """``PipelineSimulator`` on the structured-array event core."""
+
+
+EVENT_CORES = ("heap", "struct")
+
+
+def make_cluster_simulator(cluster, config, event_core: str = "heap", **kw):
+    """Build a cluster simulator on the chosen event core.
+
+    ``"heap"`` is the per-event reference core (full per-request
+    bookkeeping: timelines, pools, injected-object writeback); ``"struct"``
+    is the structured-array bulk core — bit-identical aggregate results,
+    several times the throughput at production scale (see
+    ``benchmarks/bench_scale.py``)."""
+    if event_core == "heap":
+        return ClusterSimulator(cluster, config, **kw)
+    if event_core == "struct":
+        return StructClusterSimulator(cluster, config, **kw)
+    raise ValueError(f"unknown event core {event_core!r}; "
+                     f"expected one of {EVENT_CORES}")

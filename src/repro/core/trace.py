@@ -6,6 +6,14 @@ days of the trace.  The archive is not available offline, so we synthesize a
 statistically matched stand-in: a diurnal sinusoid + AR(1) noise +
 Poisson-seeded exponential-decay bursts, calibrated to the paper's plotted
 RPS ranges (~5-40 RPS).  Excerpt generators reproduce the four shapes.
+
+Production-scale extensions (the BENCH_scale scenario): ``TraceConfig.scale``
+multiplies the whole synthesized rate curve, lifting a paper-shaped trace
+into the thousands-of-RPS regime without changing its shape, and
+``scale_excerpt`` generates the two extra stress shapes that regime needs —
+``heavy_tailed`` (Pareto-amplitude burst storm: most bursts are small, a
+few are enormous) and ``flash_crowd`` (a coordinated step to a multiple of
+base load with a sharp ramp and slow decay).
 """
 from __future__ import annotations
 
@@ -14,9 +22,17 @@ from typing import Dict
 
 import numpy as np
 
+try:                                     # vectorized AR(1) (see _ar1_noise)
+    from scipy.signal import lfilter as _lfilter
+except ImportError:                      # pragma: no cover - scipy is baked in
+    _lfilter = None
 
-@dataclasses.dataclass
+
+@dataclasses.dataclass(frozen=True)
 class TraceConfig:
+    """Frozen (hashable) so caches can key on the *full* configuration —
+    keying on ``seed`` alone silently returned the first-seen config's
+    trace for any same-seed config (the PR 6 cache-collision fix)."""
     seed: int = 0
     base_rps: float = 14.0
     diurnal_amp: float = 6.0
@@ -25,6 +41,29 @@ class TraceConfig:
     burst_rate_per_hour: float = 1.2
     burst_amp: float = 18.0
     burst_decay_s: float = 90.0
+    # multiplies the final clipped rate curve: shape-preserving lift into
+    # the production regime (scale=1.0 is bit-identical to the pre-knob
+    # synthesizer)
+    scale: float = 1.0
+
+
+def _ar1_noise(eps: np.ndarray, rho: float) -> np.ndarray:
+    """AR(1) recurrence ``acc = rho * acc + eps[i]`` over the whole array.
+
+    Runs as one C-level IIR filter pass (``scipy.signal.lfilter`` with
+    transfer function 1 / (1 - rho z^-1)) — bit-identical to the python
+    loop it replaced (same fused multiply-add per step in float64, pinned
+    by ``tests/test_trace.py``), and the dominant cost of synthesizing
+    21-day predictor traces and 100-pipeline BENCH_scale workloads.
+    """
+    if _lfilter is not None:
+        return _lfilter([1.0], [1.0, -rho], eps)
+    noise = np.empty(len(eps))           # pragma: no cover - scipy absent
+    acc = 0.0
+    for i in range(len(eps)):
+        acc = rho * acc + eps[i]
+        noise[i] = acc
+    return noise
 
 
 def synth_trace(seconds: int, cfg: TraceConfig = TraceConfig()) -> np.ndarray:
@@ -33,13 +72,9 @@ def synth_trace(seconds: int, cfg: TraceConfig = TraceConfig()) -> np.ndarray:
     t = np.arange(seconds, dtype=np.float64)
     diurnal = cfg.base_rps + cfg.diurnal_amp * np.sin(2 * np.pi * t / 86_400.0
                                                       - np.pi / 2)
-    # AR(1) noise
+    # AR(1) noise, vectorized (one lfilter pass instead of a python loop)
     eps = rng.standard_normal(seconds) * cfg.noise_sigma * np.sqrt(1 - cfg.noise_rho ** 2)
-    noise = np.empty(seconds)
-    acc = 0.0
-    for i in range(seconds):
-        acc = cfg.noise_rho * acc + eps[i]
-        noise[i] = acc
+    noise = _ar1_noise(eps, cfg.noise_rho)
     # bursts
     burst = np.zeros(seconds)
     n_bursts = rng.poisson(cfg.burst_rate_per_hour * seconds / 3600.0)
@@ -49,7 +84,10 @@ def synth_trace(seconds: int, cfg: TraceConfig = TraceConfig()) -> np.ndarray:
         dur = int(6 * cfg.burst_decay_s)
         idx = np.arange(s0, min(s0 + dur, seconds))
         burst[idx] += amp * np.exp(-(idx - s0) / cfg.burst_decay_s)
-    return np.clip(diurnal + noise + burst, 0.5, None)
+    rates = np.clip(diurnal + noise + burst, 0.5, None)
+    if cfg.scale != 1.0:
+        rates = rates * cfg.scale
+    return rates
 
 
 def make_days(days: int = 21, cfg: TraceConfig = TraceConfig()) -> np.ndarray:
@@ -67,14 +105,15 @@ def make_days(days: int = 21, cfg: TraceConfig = TraceConfig()) -> np.ndarray:
 # ---------------------------------------------------------------------------
 TRAIN_DAYS = 14
 TOTAL_DAYS = 21
-_trace_cache: Dict[int, np.ndarray] = {}
+# keyed on the FULL TraceConfig (frozen dataclass hash) — two same-seed
+# configs with different shape parameters must never share an entry
+_trace_cache: Dict[TraceConfig, np.ndarray] = {}
 
 
 def full_trace(cfg: TraceConfig = TraceConfig()) -> np.ndarray:
-    key = cfg.seed
-    if key not in _trace_cache:
-        _trace_cache[key] = make_days(TOTAL_DAYS, cfg)
-    return _trace_cache[key]
+    if cfg not in _trace_cache:
+        _trace_cache[cfg] = make_days(TOTAL_DAYS, cfg)
+    return _trace_cache[cfg]
 
 
 def train_region(cfg: TraceConfig = TraceConfig()) -> np.ndarray:
@@ -116,6 +155,72 @@ def excerpt(kind: str, seconds: int = 600,
 
 
 EXCERPTS = ("bursty", "steady_low", "steady_high", "fluctuating")
+
+
+# ---------------------------------------------------------------------------
+# production-scale stress excerpts (BENCH_scale)
+#
+# The Fig.-7 shapes cover the paper's 5-40 RPS regime.  A cluster serving
+# millions of users additionally sees (a) heavy-tailed burst storms — many
+# small spikes, a few enormous ones, the classic self-similar-traffic
+# signature — and (b) flash crowds: a coordinated step to a multiple of
+# base load (breaking news, a sale going live) with a sharp ramp and a slow
+# decay.  These are synthesized directly (not mined from the 21-day trace)
+# so the bench controls their magnitude exactly.
+# ---------------------------------------------------------------------------
+SCALE_EXCERPTS = ("heavy_tailed", "flash_crowd")
+
+
+def scale_excerpt(kind: str, seconds: int = 600,
+                  cfg: TraceConfig = TraceConfig()) -> np.ndarray:
+    """Per-second RPS for one production-scale stress shape.
+
+    ``heavy_tailed``: base load plus Poisson-seeded bursts whose amplitudes
+    are Pareto-distributed (tail index 1.5): the expected largest burst in a
+    window grows with the window, so capacity planning off the mean fails —
+    exactly the regime adaptive reconfiguration is for.
+
+    ``flash_crowd``: steady base load until a crowd lands mid-window — a
+    few-second ramp to ``burst_amp``x base, a plateau, then exponential
+    decay with ``burst_decay_s``.  One event per window, deterministic in
+    ``cfg.seed``.
+
+    Both respect ``cfg.scale`` exactly like ``synth_trace``.
+    """
+    rng = np.random.default_rng(cfg.seed)
+    t = np.arange(seconds, dtype=np.float64)
+    base = cfg.base_rps + cfg.noise_sigma * _ar1_noise(
+        rng.standard_normal(seconds) * np.sqrt(1 - cfg.noise_rho ** 2),
+        cfg.noise_rho)
+    if kind == "heavy_tailed":
+        rates = np.array(base)
+        n_bursts = max(int(rng.poisson(
+            max(cfg.burst_rate_per_hour, 6.0) * seconds / 3600.0)), 1)
+        # Pareto(1.5) amplitudes relative to burst_amp: median ~1.6x, the
+        # occasional draw 10-50x — the heavy tail is the point
+        amps = cfg.burst_amp * (1.0 + rng.pareto(1.5, n_bursts))
+        starts = rng.integers(0, seconds, n_bursts)
+        for s0, amp in zip(starts, amps):
+            dur = int(4 * cfg.burst_decay_s)
+            idx = np.arange(s0, min(s0 + dur, seconds))
+            rates[idx] += amp * np.exp(-(idx - s0) / cfg.burst_decay_s)
+    elif kind == "flash_crowd":
+        rates = np.array(base)
+        s0 = int(rng.integers(seconds // 4, seconds // 2))
+        ramp_s = max(int(rng.integers(3, 9)), 1)
+        plateau_s = int(cfg.burst_decay_s)
+        peak = cfg.burst_amp * max(cfg.base_rps, 1.0)
+        ramp = np.minimum((t - s0) / ramp_s, 1.0)
+        hold = np.where(t < s0 + ramp_s + plateau_s, 1.0,
+                        np.exp(-(t - s0 - ramp_s - plateau_s)
+                               / cfg.burst_decay_s))
+        rates += np.where(t >= s0, peak * ramp * hold, 0.0)
+    else:
+        raise ValueError(kind)
+    rates = np.clip(rates, 0.5, None)
+    if cfg.scale != 1.0:
+        rates = rates * cfg.scale
+    return rates
 
 
 def arrivals_from_rates(rates: np.ndarray, seed: int = 0) -> np.ndarray:

@@ -1,0 +1,149 @@
+"""Adversarial audit of the bulk-injection fast path and the request
+pool at scale-bench sizes: exact window-boundary arrivals, exact-tie
+timestamps, empty windows, stale (behind-the-clock) injections, mixed
+scalar/bulk streams, and pool recycling must all leave the observable
+simulation — metrics, latency streams, event counts — bit-identical to
+the plain per-request path, on both event cores."""
+import numpy as np
+import pytest
+
+from repro.core.pipeline import PipelineConfig, StageConfig
+from repro.core.simulator import PipelineSimulator, StructPipelineSimulator
+from repro.serving.request import Request, RequestPool
+
+from test_simulator_equivalence import two_stage
+from test_simulator_struct import assert_same, full_snapshot
+
+
+def _config():
+    return PipelineConfig((StageConfig("a0", 4, 2), StageConfig("b0", 2, 2)))
+
+
+def _adversarial_windows(rng):
+    """Window plan with every boundary pathology the fast path special-
+    cases: arrivals exactly at window edges, duplicates of the edge,
+    runs of exact ties, empty windows, and occasional stale arrivals
+    timestamped before the already-run clock."""
+    windows = []
+    for w in range(6):
+        t0, t1 = 2.0 * w, 2.0 * (w + 1)
+        roll = rng.random()
+        if roll < 0.2:
+            ts = np.empty(0)
+        else:
+            ts = np.sort(t0 + (t1 - t0) * rng.random(int(rng.integers(1, 60))))
+            ts = np.concatenate([ts, [t1, t1]])      # exact right-edge ties
+            if roll < 0.5:
+                ts = np.concatenate([[t0], ts])      # exact left edge
+            if ts.size > 6:
+                ts[2] = ts[1]                        # interior exact tie
+            if w >= 2 and roll < 0.35:
+                ts = np.concatenate([[t0 - 1.0], ts])  # stale arrival
+        windows.append((np.sort(ts), t1))
+    return windows
+
+
+def _drive(sim, windows, bulk):
+    for ts, t1 in windows:
+        if bulk:
+            sim.inject_arrivals(ts)
+        else:
+            for t in ts:
+                sim.inject(Request(arrival=float(t), sla=sim.sla_of[0]), 0)
+        sim.run_until(t1)
+    sim.run_until(windows[-1][1] + 30.0)             # drain
+
+
+@pytest.mark.parametrize("seed", range(10))
+def test_bulk_scalar_and_struct_agree_on_adversarial_boundaries(seed):
+    rng = np.random.default_rng(seed)
+    windows = _adversarial_windows(rng)
+    pipe = two_stage()
+    sims = []
+    for cls, bulk in ((PipelineSimulator, False),
+                      (PipelineSimulator, True),
+                      (StructPipelineSimulator, True)):
+        sim = cls(pipe, _config())
+        _drive(sim, windows, bulk)
+        sims.append(sim)
+    assert_same(sims[0], sims[1])
+    assert_same(sims[0], sims[2])
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_pool_recycling_is_invisible_and_conserves(seed):
+    """A pooled replay must match a pool-less one exactly, and at
+    quiescence every pooled request is back on the free list with
+    ``allocated + reused`` covering every arrival."""
+    rng = np.random.default_rng(100 + seed)
+    windows = _adversarial_windows(rng)
+    total = sum(ts.size for ts, _ in windows)
+    pool = RequestPool()
+    plain = PipelineSimulator(two_stage(), _config())
+    pooled = PipelineSimulator(two_stage(), _config(), request_pool=pool)
+    for sim in (plain, pooled):
+        _drive(sim, windows, bulk=True)
+    assert_same(plain, pooled)
+    assert pool.allocated + pool.reused == total
+    assert len(pool._free) == pool.allocated         # all returned
+    m = pooled.metrics
+    assert m.completed + m.dropped == m.arrived == total
+
+
+def test_acquire_many_matches_sequential_acquires():
+    """Bulk acquisition recycles the same number of requests and stamps
+    ids in arrival order, exactly as a loop of ``acquire`` calls."""
+    seq, bulk = RequestPool(), RequestPool()
+    for pool in (seq, bulk):
+        pool.release_many([Request(arrival=0.0) for _ in range(3)])
+    ts = [0.5, 1.0, 1.0, 2.5, 3.0]
+    a = [seq.acquire(t, sla=1.0) for t in ts]
+    b = bulk.acquire_many(ts, sla=1.0)
+    assert [r.arrival for r in a] == [r.arrival for r in b] == ts
+    assert all(r.sla == 1.0 for r in b)
+    assert (seq.allocated, seq.reused) == (bulk.allocated, bulk.reused) \
+        == (2, 3)
+    for reqs in (a, b):                   # fresh ids, stamped in order
+        ids = [r.req_id for r in reqs]
+        assert ids == sorted(ids) and len(set(ids)) == len(ids)
+
+
+def test_exact_boundary_injection_keeps_sorted_fast_path():
+    """``ts[0] == col[-1]`` is still sorted — the fast path must not
+    degrade to the sort, and a shuffled injection of the same times must
+    take the slow path yet land on the identical simulation."""
+    pipe = two_stage()
+    fast = PipelineSimulator(pipe, _config())
+    fast.inject_arrivals(np.array([0.1, 0.4, 0.7]))
+    fast.inject_arrivals(np.array([0.7, 0.9]))       # exact boundary tie
+    assert fast._inj_sorted
+    slow = PipelineSimulator(pipe, _config())
+    slow.inject_arrivals(np.array([0.7, 0.1, 0.9, 0.4, 0.7]))
+    assert not slow._inj_sorted
+    for sim in (fast, slow):
+        sim.run_until(20.0)
+    # equal-time FIFO differs between the two injection orders only in
+    # which tied request is which — aggregate observables must agree
+    fa, sa = full_snapshot(fast), full_snapshot(slow)
+    assert fa == sa
+
+
+@pytest.mark.parametrize("event_core", ["heap", "struct"])
+def test_scale_window_with_heavy_ties(event_core):
+    """One bench-sized window (>10k arrivals, long runs of exact ties)
+    through the pooled bulk path: conservation plus pool quiescence."""
+    rng = np.random.default_rng(7)
+    base = np.sort(10.0 * rng.random(12_000))
+    ts = np.sort(np.concatenate([base, base[::97], base[::101]]))
+    pool = RequestPool() if event_core == "heap" else None
+    cls = PipelineSimulator if event_core == "heap" \
+        else StructPipelineSimulator
+    sim = cls(two_stage(), _config(), request_pool=pool)
+    sim.inject_arrivals(ts)
+    sim.run_until(60.0)
+    m = sim.metrics
+    assert m.arrived == ts.size
+    assert m.completed + m.dropped == ts.size
+    if pool is not None:
+        assert pool.allocated + pool.reused == ts.size
+        assert len(pool._free) == pool.allocated

@@ -1,0 +1,176 @@
+"""Dominance pruning in the cluster knapsack must be *invisible*: the
+pruned DP has to return the exact same chosen candidates — same objects,
+same tie-breaks — as the dense unpruned DP, not merely the same objective.
+The reference implementations below are the pre-pruning dense DPs,
+kept verbatim as oracles.  Tabs are generated with discrete values and
+overlap-collapsed costs so exact (cost, value) ties actually occur.
+"""
+import numpy as np
+import pytest
+
+from repro.core.optimizer import (_Candidate, _knapsack_1d, _knapsack_2d,
+                                  _prune_candidates)
+
+
+# ---------------------------------------------------------------------------
+# reference oracles: the dense DPs before pruning/column-capping
+# ---------------------------------------------------------------------------
+def _ref_knap_1d(cand_tabs, budget):
+    if not np.isfinite(budget):
+        return [max(cands, key=lambda c: c.value) for cands in cand_tabs]
+    B = int(np.floor(budget + 1e-9))
+    dp = np.zeros(B + 1)
+    pick_tabs = []
+    for cands in cand_tabs:
+        cur = np.full(B + 1, -np.inf)
+        pick = np.full(B + 1, -1, dtype=np.int64)
+        for j, c in enumerate(cands):
+            if c.cost > B:
+                continue
+            cand = dp[:B + 1 - c.cost] + c.value
+            seg = cur[c.cost:]
+            sel = pick[c.cost:]
+            better = cand > seg
+            seg[better] = cand[better]
+            sel[better] = j
+        pick_tabs.append(pick)
+        dp = cur
+    if not np.isfinite(dp[B]):
+        return None
+    b = B
+    chosen_rev = []
+    for cands, pick in zip(reversed(cand_tabs), reversed(pick_tabs)):
+        j = int(pick[b])
+        if j < 0:
+            return None
+        chosen_rev.append(cands[j])
+        b -= cands[j].cost
+    return list(reversed(chosen_rev))
+
+
+def _ref_knap_2d(cand_tabs, budget, K):
+    B = int(np.floor(budget + 1e-9))
+    dp = np.full((K + 1, B + 1), -np.inf)
+    dp[0, :] = 0.0
+    pick_tabs = []
+    for cands in cand_tabs:
+        cur = np.full((K + 1, B + 1), -np.inf)
+        pick = np.full((K + 1, B + 1), -1, dtype=np.int64)
+        for j, c in enumerate(cands):
+            if c.cost > B:
+                continue
+            dk = 1 if c.switch else 0
+            for k in range(dk, K + 1):
+                cand = dp[k - dk, :B + 1 - c.cost] + c.value
+                seg = cur[k, c.cost:]
+                sel = pick[k, c.cost:]
+                better = cand > seg
+                seg[better] = cand[better]
+                sel[better] = j
+        pick_tabs.append(pick)
+        dp = cur
+    k_best = int(np.argmax(dp[:, B]))
+    if not np.isfinite(dp[k_best, B]):
+        return None
+    k, b = k_best, B
+    chosen_rev = []
+    for cands, pick in zip(reversed(cand_tabs), reversed(pick_tabs)):
+        j = int(pick[k, b])
+        if j < 0:
+            return None
+        chosen_rev.append(cands[j])
+        b -= cands[j].cost
+        k -= 1 if cands[j].switch else 0
+    return list(reversed(chosen_rev))
+
+
+# ---------------------------------------------------------------------------
+# tab generator: discrete values (exact ties), overlap cost collapse,
+# occasional stay-free pipelines (forced switches / infeasibility)
+# ---------------------------------------------------------------------------
+def _rand_tabs(rng, n_pipes):
+    tabs = []
+    for _ in range(n_pipes):
+        ncand = int(rng.integers(2, 14))
+        old = int(rng.integers(0, 8)) if rng.random() < 0.5 else 0
+        tab = []
+        for _ in range(ncand):
+            cost = max(int(rng.integers(1, 12)), old)
+            value = float(rng.integers(0, 8)) * 0.5   # discrete => ties
+            tab.append(_Candidate(cost, value - 0.25, True, None))
+        if rng.random() < 0.8:                        # free stay candidate
+            tab.append(_Candidate(max(int(rng.integers(1, 10)), old),
+                                  float(rng.integers(0, 8)) * 0.5,
+                                  False, None))
+        tabs.append(tab)
+    return tabs
+
+
+def _same_choice(a, b):
+    if a is None or b is None:
+        assert a is None and b is None
+        return
+    assert len(a) == len(b)
+    for x, y in zip(a, b):
+        assert x is y, (x, y)             # the very same candidate object
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_knapsack_1d_bit_identical_to_unpruned(seed):
+    rng = np.random.default_rng(seed)
+    tabs = _rand_tabs(rng, int(rng.integers(1, 6)))
+    for budget in (float(rng.integers(3, 50)), np.inf):
+        _same_choice(_knapsack_1d(tabs, budget), _ref_knap_1d(tabs, budget))
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_knapsack_2d_bit_identical_to_unpruned(seed):
+    rng = np.random.default_rng(1000 + seed)
+    tabs = _rand_tabs(rng, int(rng.integers(1, 6)))
+    budget = float(rng.integers(3, 50))
+    for K in (0, 1, int(rng.integers(1, len(tabs) + 1))):
+        _same_choice(_knapsack_2d(tabs, budget, K),
+                     _ref_knap_2d(tabs, budget, K))
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_prune_invariants(seed):
+    """Survivors keep original order; every dropped candidate is strictly
+    beaten (or exactly duplicated earlier) by a survivor whose switch
+    class may substitute for it under the given mode."""
+    rng = np.random.default_rng(2000 + seed)
+    (tab,) = _rand_tabs(rng, 1)
+    for cross in (True, False):
+        kept = _prune_candidates(tab, cross_class=cross)
+        idx = [tab.index(k) for k in kept]
+        assert idx == sorted(idx)         # original order preserved
+        kept_set = {id(k) for k in kept}
+        for i, c in enumerate(tab):
+            if id(c) in kept_set:
+                continue
+            subs = [d for d in kept
+                    if cross or d.switch == c.switch]
+            assert any(
+                (d.cost <= c.cost and d.value > c.value) or
+                (d.cost == c.cost and d.value == c.value
+                 and tab.index(d) < i)
+                for d in subs), (c, kept)
+
+
+def test_prune_keeps_first_on_exact_tie():
+    a = _Candidate(4, 1.0, True, None)
+    b = _Candidate(4, 1.0, True, None)
+    c = _Candidate(4, 1.0, False, None)
+    kept = _prune_candidates([a, b, c], cross_class=True)
+    assert len(kept) == 1 and kept[0] is a
+    kept = _prune_candidates([a, b, c], cross_class=False)
+    assert len(kept) == 2 and kept[0] is a and kept[1] is c
+
+
+def test_prune_never_lets_switch_dominate_stay_in_class_mode():
+    stay = _Candidate(9, 0.0, False, None)
+    sw = _Candidate(1, 99.0, True, None)
+    kept = _prune_candidates([sw, stay], cross_class=False)
+    assert stay in kept                   # stays survive for the k-dim
+    kept = _prune_candidates([sw, stay], cross_class=True)
+    assert stay not in kept               # 1-D: strictly dominated

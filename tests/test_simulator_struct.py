@@ -1,0 +1,181 @@
+"""The structured-array event core must be *event-for-event identical* to
+the heapq reference core: same completed/dropped/arrived counts, the exact
+same latency streams (bit-identical float64), the same
+``events_processed``, reconfig log, peak depths and residual queue state —
+on golden traces, the shared equivalence scenarios, and randomized bursty
+cluster traces with mid-window ``adaptation_delay > 0`` transitions."""
+import numpy as np
+import pytest
+
+from repro.core.cluster import ClusterModel, ClusterConfig
+from repro.core.pipeline import (ModelVariant, PipelineModel, PipelineConfig,
+                                 StageConfig, StageModel)
+from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
+                                  StructClusterSimulator,
+                                  StructPipelineSimulator,
+                                  make_cluster_simulator, EVENT_CORES)
+from repro.serving.request import Request
+
+from test_simulator_equivalence import two_stage, EQUIV_TRACES
+
+
+# ---------------------------------------------------------------------------
+# exhaustive state snapshot: everything observable the cores must agree on
+# ---------------------------------------------------------------------------
+def full_snapshot(sim):
+    return dict(
+        per_pipe=[(m.arrived, m.completed, m.dropped,
+                   tuple(np.asarray(m._lat.view()).tolist()))
+                  for m in sim.metrics_by_pipe],
+        events=sim.events_processed,
+        reconfig=list(sim.reconfig_log),
+        peak_depth=sim.peak_queue_depth,
+        peak_cores=sim.peak_serving_cores,
+        now=sim.now,
+        queued=sim.queued,
+        in_service=sim.in_service,
+    )
+
+
+def assert_same(heap_sim, struct_sim):
+    a, b = full_snapshot(heap_sim), full_snapshot(struct_sim)
+    for key in a:
+        assert a[key] == b[key], f"struct core diverges on {key}"
+
+
+# ---------------------------------------------------------------------------
+# single-pipeline: the shared equivalence traces, replayed on both cores
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("trace_name", sorted(EQUIV_TRACES))
+def test_pipeline_equiv_traces(trace_name):
+    config, arrivals, horizon = EQUIV_TRACES[trace_name]
+    pipe = two_stage()
+    sims = []
+    for cls in (PipelineSimulator, StructPipelineSimulator):
+        sim = cls(pipe, config)
+        sim.inject_arrivals(np.asarray(arrivals, dtype=np.float64))
+        sim.run_until(horizon)
+        sims.append(sim)
+    assert_same(*sims)
+
+
+# ---------------------------------------------------------------------------
+# randomized bursty cluster traces with mid-run reconfigurations
+# ---------------------------------------------------------------------------
+def _rand_pipe(rng, name):
+    stages = []
+    for j in range(int(rng.integers(1, 4))):
+        l1 = 0.01 + 0.08 * rng.random()
+        variants = tuple(
+            ModelVariant(f"{name}_s{j}_{v}", 50.0 + 10 * v, 1 + v,
+                         (0.0, l1 * sc * 0.7, l1 * sc * 0.3))
+            for v, sc in enumerate((1.0, 1.7, 2.9)))
+        stages.append(StageModel(f"{name}_s{j}", variants,
+                                 sla=l1 * (4 + 6 * rng.random()),
+                                 batch_choices=(1, 2, 4, 8)))
+    return PipelineModel(name, tuple(stages))
+
+
+def _rand_cfg(rng, pipe):
+    return PipelineConfig(tuple(
+        StageConfig(st.variants[int(rng.integers(len(st.variants)))].name,
+                    int(rng.choice([1, 2, 4, 8])),
+                    int(rng.integers(1, 4)))
+        for st in pipe.stages))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_cluster_random_bursty_with_transitions(seed):
+    """Both cores step through four 10 s windows of bursty traffic (exact
+    arrival-time ties included), a mid-run reconfigure + ``set_lam_est``
+    at windows 1 and 3, and an ``adaptation_delay`` that lands the config
+    apply *inside* a later window — then drain."""
+    rng = np.random.default_rng(seed)
+    n_pipes = int(rng.integers(1, 4))
+    pipes = tuple(_rand_pipe(rng, f"p{i}") for i in range(n_pipes))
+    cluster = ClusterModel("fz", pipes, 9999.0)
+    cc = ClusterConfig(tuple(_rand_cfg(rng, p) for p in pipes))
+    delay = float(rng.choice([0.0, 1.5, 8.0]))
+
+    plans = []
+    for w in range(4):
+        winj = []
+        for p in range(n_pipes):
+            lam = rng.choice([2.0, 30.0, 300.0])
+            ts = np.sort(10.0 * w + 10.0 * rng.random(rng.poisson(lam * 10.0)))
+            if ts.size > 4:              # exact-tie arrivals
+                ts[1] = ts[0]
+                ts[ts.size // 2] = ts[ts.size // 2 - 1]
+            winj.append(ts)
+        plans.append(winj)
+
+    sims = []
+    for cls in (ClusterSimulator, StructClusterSimulator):
+        sim = cls(cluster, cc, adaptation_delay=delay)
+        for w, winj in enumerate(plans):
+            for p, ts in enumerate(winj):
+                if (seed + 3 * w + 7 * p) % 3:
+                    sim.inject_arrivals(ts, p)
+                else:                    # scalar-inject path
+                    for t in ts:
+                        sim.inject(Request(arrival=float(t)), p)
+            if w in (1, 3):
+                r2 = np.random.default_rng(seed * 1000 + w)
+                pidx = int(r2.integers(n_pipes))
+                sim.reconfigure_pipeline(pidx, _rand_cfg(r2, pipes[pidx]))
+                sim.set_lam_est(pidx, float(2.0 + 40.0 * r2.random()))
+            sim.run_until(10.0 * (w + 1))
+        sim.run_until(60.0)
+        sims.append(sim)
+    assert_same(*sims)
+    if delay > 0.0 and sims[0].reconfig_log:
+        # the transition landed mid-window: both cores logged the request
+        # at the window edge with the apply at the delayed instant
+        assert all(t in (10.0, 30.0) and t_apply == t + delay
+                   for t, _p, t_apply in sims[0].reconfig_log)
+
+
+# ---------------------------------------------------------------------------
+# struct-core contract details
+# ---------------------------------------------------------------------------
+def test_factory_builds_both_cores_and_rejects_unknown():
+    pipe = two_stage()
+    cc = ClusterConfig((PipelineConfig((StageConfig("a0", 4, 1),
+                                        StageConfig("b0", 2, 1))),))
+    from repro.core.cluster import single
+    cluster = single(pipe)
+    assert EVENT_CORES == ("heap", "struct")
+    assert isinstance(make_cluster_simulator(cluster, cc),
+                      ClusterSimulator)
+    assert isinstance(make_cluster_simulator(cluster, cc,
+                                             event_core="struct"),
+                      StructClusterSimulator)
+    with pytest.raises(ValueError, match="unknown event core"):
+        make_cluster_simulator(cluster, cc, event_core="vectorized")
+
+
+def test_struct_core_rejects_record_timeline():
+    pipe = two_stage()
+    config = PipelineConfig((StageConfig("a0", 4, 1),
+                             StageConfig("b0", 2, 1)))
+    with pytest.raises(ValueError, match="record_timeline"):
+        StructPipelineSimulator(pipe, config, record_timeline=True)
+
+
+def test_struct_core_handles_unsorted_and_stale_injections():
+    """Out-of-order bulk injections are sorted lazily; arrivals timestamped
+    before the current clock enter their stage at the clock, exactly like
+    the reference core."""
+    pipe = two_stage()
+    config = PipelineConfig((StageConfig("a0", 4, 1),
+                             StageConfig("b0", 2, 1)))
+    sims = []
+    for cls in (PipelineSimulator, StructPipelineSimulator):
+        sim = cls(pipe, config)
+        sim.inject_arrivals(np.array([0.5, 0.1, 0.9, 0.3]))
+        sim.run_until(2.0)
+        sim.inject_arrivals(np.array([1.0, 1.7, 2.5]))  # 1.0, 1.7 stale
+        sim.run_until(20.0)
+        sims.append(sim)
+    assert_same(*sims)
+    assert sims[1].metrics.completed + sims[1].metrics.dropped == 7

@@ -1,0 +1,126 @@
+"""Trace synthesizer: cache-collision regression, vectorized AR(1)
+bit-identity, the production-scale knob and the scale stress excerpts."""
+import numpy as np
+import pytest
+
+from repro.core import trace as TR
+
+
+# ---------------------------------------------------------------------------
+# the PR 6 cache-collision fix: full_trace memoized on cfg.seed only, so two
+# same-seed configs with different shape parameters silently shared a trace
+# ---------------------------------------------------------------------------
+def test_full_trace_cache_keyed_on_full_config():
+    a = TR.TraceConfig(seed=123, base_rps=10.0)
+    b = TR.TraceConfig(seed=123, base_rps=40.0, burst_amp=60.0)
+    ta = TR.full_trace(a)
+    tb = TR.full_trace(b)
+    assert not np.array_equal(ta, tb)
+    # and the second lookup comes straight from the synthesizer, not a
+    # stale entry for the first config (the original bug)
+    np.testing.assert_array_equal(tb, TR.make_days(TR.TOTAL_DAYS, b))
+    # the cache still caches: identical config objects hit the same entry
+    assert TR.full_trace(TR.TraceConfig(seed=123, base_rps=10.0)) is ta
+
+
+def test_trace_config_is_frozen_and_hashable():
+    cfg = TR.TraceConfig(seed=5)
+    assert hash(cfg) == hash(TR.TraceConfig(seed=5))
+    with pytest.raises(dataclasses_FrozenError):
+        cfg.seed = 6
+
+
+# dataclasses raises FrozenInstanceError
+import dataclasses  # noqa: E402
+
+dataclasses_FrozenError = dataclasses.FrozenInstanceError
+
+
+# ---------------------------------------------------------------------------
+# vectorized AR(1): bit-identical to the per-second python loop
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,rho", [(0, 0.95), (7, 0.5), (42, 0.999)])
+def test_ar1_noise_bit_identical_to_loop(seed, rho):
+    rng = np.random.default_rng(seed)
+    eps = rng.standard_normal(50_000) * 1.6 * np.sqrt(1 - rho ** 2)
+    acc = 0.0
+    ref = np.empty(len(eps))
+    for i in range(len(eps)):
+        acc = rho * acc + eps[i]
+        ref[i] = acc
+    np.testing.assert_array_equal(TR._ar1_noise(eps, rho), ref)
+
+
+def test_synth_trace_deterministic_and_positive():
+    cfg = TR.TraceConfig(seed=9)
+    a = TR.synth_trace(3600, cfg)
+    b = TR.synth_trace(3600, cfg)
+    np.testing.assert_array_equal(a, b)
+    assert np.all(a >= 0.5)
+
+
+# ---------------------------------------------------------------------------
+# the scale knob: shape-preserving lift into the thousands-of-RPS regime
+# ---------------------------------------------------------------------------
+def test_scale_knob_multiplies_the_whole_curve():
+    base = TR.synth_trace(1200, TR.TraceConfig(seed=3))
+    scaled = TR.synth_trace(1200, TR.TraceConfig(seed=3, scale=50.0))
+    np.testing.assert_allclose(scaled, base * 50.0, rtol=1e-12)
+    assert scaled.mean() > 400.0          # production regime
+
+
+def test_scale_default_is_identity():
+    cfg = TR.TraceConfig(seed=4)
+    assert cfg.scale == 1.0
+    np.testing.assert_array_equal(TR.synth_trace(600, cfg),
+                                  TR.synth_trace(600, TR.TraceConfig(seed=4,
+                                                                     scale=1.0)))
+
+
+# ---------------------------------------------------------------------------
+# production-scale stress excerpts
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("kind", TR.SCALE_EXCERPTS)
+def test_scale_excerpts_deterministic(kind):
+    cfg = TR.TraceConfig(seed=11)
+    a = TR.scale_excerpt(kind, 600, cfg)
+    b = TR.scale_excerpt(kind, 600, cfg)
+    np.testing.assert_array_equal(a, b)
+    assert len(a) == 600 and np.all(a >= 0.5)
+
+
+def test_heavy_tailed_excerpt_has_a_heavy_tail():
+    """The max burst must tower over the median rate — the Pareto
+    amplitudes are the point of the shape."""
+    r = TR.scale_excerpt("heavy_tailed", 600, TR.TraceConfig(seed=9))
+    assert r.max() > 4.0 * np.median(r)
+    # and across seeds the shape always spikes well past the median
+    ratios = [TR.scale_excerpt("heavy_tailed", 600,
+                               TR.TraceConfig(seed=s)).max()
+              / np.median(TR.scale_excerpt("heavy_tailed", 600,
+                                           TR.TraceConfig(seed=s)))
+              for s in range(6)]
+    assert min(ratios) > 2.0
+
+
+def test_flash_crowd_excerpt_steps_then_decays():
+    cfg = TR.TraceConfig(seed=8, base_rps=10.0, burst_amp=12.0)
+    r = TR.scale_excerpt("flash_crowd", 600, cfg)
+    peak_i = int(np.argmax(r))
+    # quiet before the crowd lands, a towering peak, decay after
+    assert r[:max(peak_i - 60, 1)].max() < r[peak_i] / 3.0
+    assert r[peak_i] > 5.0 * cfg.base_rps
+    tail = r[min(peak_i + 300, 599):]
+    assert tail.mean() < r[peak_i] / 2.0
+
+
+def test_scale_excerpt_respects_scale_knob():
+    a = TR.scale_excerpt("flash_crowd", 300, TR.TraceConfig(seed=1))
+    b = TR.scale_excerpt("flash_crowd", 300, TR.TraceConfig(seed=1,
+                                                            scale=10.0))
+    np.testing.assert_allclose(b, a * 10.0, rtol=1e-12)
+
+
+def test_scale_excerpt_rejects_unknown_kind():
+    with pytest.raises(ValueError):
+        TR.scale_excerpt("nope", 100)
