@@ -14,7 +14,10 @@
 # scale scenario (bench_scale --smoke: 50 pipelines at C=512 — struct
 # event core ev/s floor + speedup over the heapq core with identical
 # metrics, and a per-solve wall ceiling on every solve_cluster planning
-# mode).  Slow tests (LSTM training, jax decode loops) stay opt-in via
+# mode), and on the sweep harness (sweep --smoke: a tiny grid must hash
+# identically at nproc=1 and nproc=4, and on >=4-CPU hosts the 4-worker
+# pass must clear a 2x speedup floor — skipped, never faked, below
+# that).  Slow tests (LSTM training, jax decode loops) stay opt-in via
 # `pytest -m slow`.  The doc-link checker fails if README.md /
 # docs/ARCHITECTURE.md reference a file or symbol that no longer exists.
 set -euo pipefail
@@ -26,4 +29,5 @@ python -m pytest -x -q
 python benchmarks/bench_simulator.py --smoke
 python benchmarks/bench_cluster.py --smoke
 python benchmarks/bench_scale.py --smoke
+python benchmarks/sweep.py --smoke
 bash scripts/check_docs.sh

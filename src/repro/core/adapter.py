@@ -28,6 +28,7 @@ the adaptation window before the new one takes effect.
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Callable, Dict, List, Optional, Sequence
 
 import numpy as np
@@ -40,7 +41,7 @@ from repro.core.pipeline import PipelineConfig, PipelineModel
 from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
                                   StructPipelineSimulator, EVENT_CORES,
                                   make_cluster_simulator)
-from repro.core.trace import arrivals_from_rates
+from repro.core.trace import SeedLike, arrivals_from_rates
 from repro.serving.request import Request, RequestPool
 
 ADAPT_INTERVAL = 10.0       # paper §5.3: 8 s adaptation + 2 s decision
@@ -368,6 +369,26 @@ def _staged_admission(cluster, mixed: ClusterConfig,
     return ClusterConfig(tuple(chosen)), flags
 
 
+def _pipeline_seeds(seed: SeedLike, n: int) -> List:
+    """Per-pipeline arrival-stream seeds for ``run_cluster_trace``.
+
+    A ``np.random.SeedSequence`` derives one child per pipeline —
+    collision-free by construction, the hygiene the sweep harness relies
+    on when thousands of cells each need N independent streams.  The
+    children are built statelessly (entropy + extended spawn_key, exactly
+    what ``spawn`` would produce on a fresh sequence) rather than via
+    ``seed.spawn(n)``, whose internal counter would make a second run
+    with the *same object* silently use different streams.  A plain int
+    keeps the legacy ``seed + 1000003 * i`` arithmetic bit-for-bit (the
+    golden cluster traces are pinned to those exact streams).
+    """
+    if isinstance(seed, np.random.SeedSequence):
+        return [np.random.SeedSequence(
+            entropy=seed.entropy,
+            spawn_key=tuple(seed.spawn_key) + (i,)) for i in range(n)]
+    return [seed + 1000003 * i for i in range(n)]
+
+
 def _decide_cluster(cluster, lams, policy, obj, max_replicas,
                     ipa_kwargs=None, cache=None):
     try:
@@ -384,7 +405,7 @@ def run_cluster_trace(cluster: ClusterModel,
                       rates: Sequence[np.ndarray],
                       policy: str = "ipa",
                       obj: Optional[OPT.Objective] = None,
-                      interval: float = ADAPT_INTERVAL, seed: int = 0,
+                      interval: float = ADAPT_INTERVAL, seed: SeedLike = 0,
                       max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
                       predictors: Optional[Sequence] = None,
                       oracles: Optional[Sequence] = None,
@@ -457,8 +478,8 @@ def run_cluster_trace(cluster: ClusterModel,
         raise ValueError("switch_cost/switch_budget/sla_weights apply to "
                          "the joint 'ipa' policy only")
     horizon = max(len(r) for r in rates)
-    times = [arrivals_from_rates(r, seed=seed + 1000003 * i)
-             for i, r in enumerate(rates)]
+    times = [arrivals_from_rates(r, seed=s)
+             for r, s in zip(rates, _pipeline_seeds(seed, len(rates)))]
     ipa_kwargs = {"switch_cost": switch_cost, "switch_budget": switch_budget,
                   "sla_weights": sla_weights,
                   # §5.3 windows in play: plan against max(old, new) so a
@@ -603,3 +624,91 @@ def run_cluster_trace(cluster: ClusterModel,
                               frontier_cache_stats=(
                                   cache.stats if cache is not None
                                   else None))
+
+
+def run_cell(cluster: ClusterModel, rates: Sequence[np.ndarray],
+             policy: str = "ipa",
+             obj: Optional[OPT.Objective] = None,
+             seed: SeedLike = 0,
+             interval: float = ADAPT_INTERVAL,
+             max_replicas: int = OPT.DEFAULT_MAX_REPLICAS,
+             switch_cost: float = 0.0,
+             switch_budget: Optional[int] = None,
+             adaptation_delay: float = 0.0,
+             demand_mode: str = "reactive",
+             frontier_cache="auto",
+             event_core: str = "heap") -> Dict:
+    """One sweep cell: a full policy-trace run compacted to a JSON-ready
+    record (the unit of work ``benchmarks/sweep.py`` fans out across
+    worker processes).
+
+    Wraps ``run_cluster_trace`` and flattens its result to plain python
+    scalars/lists — no numpy arrays, no config objects — so the record
+    pickles cheaply across the process boundary and serializes straight
+    into a result shard.  Besides the headline metrics it carries the
+    per-phase wall breakdown (``solver_wall_s`` from the trace result vs
+    ``sim_wall_s`` = remaining wall) and the ``FrontierCache`` hit/miss
+    stats — the *delta* attributable to this cell when the caller passes
+    a warm per-worker cache instance — so straggler cells and cache-cold
+    policies are diagnosable from the sweep JSON alone.
+
+    Every field except the ``*wall_s`` timings (and the cache stats,
+    which depend on what a warm cache saw before this cell) is a pure
+    function of the inputs; the sweep's nproc-invariance hash is taken
+    over exactly that deterministic remainder.
+    """
+    o = obj or OPT.Objective()
+    cache = frontier_cache
+    snap = cache.stats_snapshot() \
+        if isinstance(cache, OPT.FrontierCache) else None
+    t0 = time.perf_counter()
+    res = run_cluster_trace(cluster, rates, policy=policy, obj=o, seed=seed,
+                            interval=interval, max_replicas=max_replicas,
+                            switch_cost=switch_cost,
+                            switch_budget=switch_budget,
+                            adaptation_delay=adaptation_delay,
+                            demand_mode=demand_mode,
+                            frontier_cache=cache, event_core=event_core)
+    wall = time.perf_counter() - t0
+    horizon = max(len(r) for r in rates)
+    lat = np.concatenate([r.latencies for r in res.per_pipeline]) \
+        if any(len(r.latencies) for r in res.per_pipeline) \
+        else np.empty(0)
+    late = sum(int(np.sum(r.latencies > r.sla)) for r in res.per_pipeline)
+    arrived = res.arrived
+    return {
+        "policy": policy,
+        "budget": float(cluster.cores),
+        "horizon_s": int(horizon),
+        "mean_pas": round(res.mean_pas, 6),
+        "mean_cost": round(res.mean_cost, 6),
+        "mean_objective": round(res.mean_objective(o), 6),
+        "arrived": arrived,
+        "completed": res.completed,
+        "dropped": res.dropped,
+        "sla_violation_rate": round((late + res.dropped) / arrived, 6)
+        if arrived else 0.0,
+        "p50_latency": round(float(np.percentile(lat, 50)), 6)
+        if len(lat) else None,
+        "p99_latency": round(float(np.percentile(lat, 99)), 6)
+        if len(lat) else None,
+        "n_reconfigs": res.n_reconfigs,
+        "reconfigs_per_hour": round(res.n_reconfigs * 3600.0 / horizon, 3)
+        if horizon else 0.0,
+        "peak_serving_cores": round(res.peak_serving_cores, 6),
+        "sim_events": res.sim_events,
+        "peak_queue_depth": res.peak_queue_depth,
+        "per_pipeline": [
+            {"pipeline": pipe.name,
+             "mean_pas": round(r.mean_pas, 6),
+             "mean_cost": round(r.mean_cost, 6),
+             "completed": r.completed, "dropped": r.dropped}
+            for pipe, r in zip(cluster.pipelines, res.per_pipeline)],
+        # wall-clock + warm-cache diagnostics: excluded from the sweep's
+        # determinism hash (see study.strip_volatile)
+        "wall_s": round(wall, 4),
+        "solver_wall_s": round(res.solver_wall_s, 4),
+        "sim_wall_s": round(wall - res.solver_wall_s, 4),
+        "frontier_cache": (cache.stats_since(snap) if snap is not None
+                           else res.frontier_cache_stats),
+    }

@@ -613,6 +613,23 @@ class FrontierCache:
     def clear(self) -> None:
         self._tab.clear()
 
+    # --- pickling -------------------------------------------------------
+    # ``__slots__`` classes need explicit state hooks; the sweep harness
+    # ships warm caches across process boundaries (and its tests pin the
+    # round-trip), so keep this an API promise rather than an accident.
+    # Entries are value objects (frozen model dataclasses -> FrontierPoint
+    # lists), so the whole table pickles as-is.
+    def __getstate__(self):
+        return {"quantize": self.quantize, "max_entries": self.max_entries,
+                "hits": self.hits, "misses": self.misses, "tab": self._tab}
+
+    def __setstate__(self, state):
+        self.quantize = state["quantize"]
+        self.max_entries = state["max_entries"]
+        self.hits = state["hits"]
+        self.misses = state["misses"]
+        self._tab = state["tab"]
+
     @property
     def stats(self) -> dict:
         """Hit/miss counters for bench observability."""
@@ -620,6 +637,24 @@ class FrontierCache:
         return {"hits": self.hits, "misses": self.misses,
                 "entries": len(self._tab),
                 "hit_rate": round(self.hits / total, 4) if total else 0.0}
+
+    def stats_snapshot(self) -> Tuple[int, int]:
+        """Opaque counter snapshot for ``stats_since`` (hits, misses)."""
+        return (self.hits, self.misses)
+
+    def stats_since(self, snapshot: Tuple[int, int]) -> dict:
+        """Hit/miss delta since a ``stats_snapshot()``.
+
+        The sweep harness keeps one warm cache per worker process across
+        all the cells that worker drains, so the *cumulative* ``stats``
+        conflate every cell the worker has seen; the per-cell delta is
+        what makes a cache-cold policy diagnosable from its own record.
+        """
+        h0, m0 = snapshot
+        dh, dm = self.hits - h0, self.misses - m0
+        total = dh + dm
+        return {"hits": dh, "misses": dm, "entries": len(self._tab),
+                "hit_rate": round(dh / total, 4) if total else 0.0}
 
 
 def _frontier(pipe: PipelineModel, arrival: float, obj: Objective,

@@ -18,9 +18,16 @@ base load with a sharp ramp and slow decay).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from collections import OrderedDict
+from typing import Union
 
 import numpy as np
+
+# seeds accepted everywhere a stream is created: a plain int (legacy,
+# bit-compatible), a SeedSequence (the sweep harness's collision-free
+# derivation — see ``np.random.SeedSequence.spawn``) or an already-built
+# Generator
+SeedLike = Union[int, np.random.SeedSequence, np.random.Generator]
 
 try:                                     # vectorized AR(1) (see _ar1_noise)
     from scipy.signal import lfilter as _lfilter
@@ -105,15 +112,62 @@ def make_days(days: int = 21, cfg: TraceConfig = TraceConfig()) -> np.ndarray:
 # ---------------------------------------------------------------------------
 TRAIN_DAYS = 14
 TOTAL_DAYS = 21
-# keyed on the FULL TraceConfig (frozen dataclass hash) — two same-seed
-# configs with different shape parameters must never share an entry
-_trace_cache: Dict[TraceConfig, np.ndarray] = {}
+TRACE_CACHE_MAX = 8          # full 21-day traces are ~14 MB each
+
+
+class BoundedTraceCache:
+    """LRU-bounded memo for full 21-day traces.
+
+    The pre-PR-7 module-level dict grew without limit: a thousand-cell
+    sweep touching many ``TraceConfig``s would pin one 21-day float64
+    array (~14 MB) per distinct config for the life of the process.  An
+    LRU with a small cap keeps the common case (one or two configs hit
+    repeatedly by excerpt mining / predictor training) free while making
+    eviction harmless: ``synth_trace`` is a pure function of the config,
+    so a re-miss regenerates the exact same bytes (regression-pinned in
+    ``tests/test_trace.py``).
+
+    Keyed on the FULL frozen ``TraceConfig`` — two same-seed configs with
+    different shape parameters must never share an entry (the PR 6
+    cache-collision fix).
+    """
+
+    def __init__(self, max_entries: int = TRACE_CACHE_MAX):
+        if max_entries < 1:
+            raise ValueError("max_entries must be >= 1")
+        self.max_entries = max_entries
+        self.hits = 0
+        self.misses = 0
+        self._tab: "OrderedDict[TraceConfig, np.ndarray]" = OrderedDict()
+
+    def __len__(self) -> int:
+        return len(self._tab)
+
+    def __contains__(self, cfg: TraceConfig) -> bool:
+        return cfg in self._tab
+
+    def get(self, cfg: TraceConfig, builder) -> np.ndarray:
+        arr = self._tab.get(cfg)
+        if arr is not None:
+            self.hits += 1
+            self._tab.move_to_end(cfg)
+            return arr
+        self.misses += 1
+        arr = builder(cfg)
+        while len(self._tab) >= self.max_entries:
+            self._tab.popitem(last=False)
+        self._tab[cfg] = arr
+        return arr
+
+    def clear(self) -> None:
+        self._tab.clear()
+
+
+_trace_cache = BoundedTraceCache()
 
 
 def full_trace(cfg: TraceConfig = TraceConfig()) -> np.ndarray:
-    if cfg not in _trace_cache:
-        _trace_cache[cfg] = make_days(TOTAL_DAYS, cfg)
-    return _trace_cache[cfg]
+    return _trace_cache.get(cfg, lambda c: make_days(TOTAL_DAYS, c))
 
 
 def train_region(cfg: TraceConfig = TraceConfig()) -> np.ndarray:
@@ -223,8 +277,14 @@ def scale_excerpt(kind: str, seconds: int = 600,
     return rates
 
 
-def arrivals_from_rates(rates: np.ndarray, seed: int = 0) -> np.ndarray:
-    """Poisson-sample concrete arrival timestamps from per-second rates."""
+def arrivals_from_rates(rates: np.ndarray, seed: SeedLike = 0) -> np.ndarray:
+    """Poisson-sample concrete arrival timestamps from per-second rates.
+
+    ``seed`` may be an int (legacy, bit-compatible), a
+    ``np.random.SeedSequence`` (what the sweep harness derives per cell —
+    spawned children are collision-free by construction, unlike
+    arithmetic on a base int) or a ``Generator``.
+    """
     rng = np.random.default_rng(seed)
     times = []
     for sec, lam in enumerate(rates):

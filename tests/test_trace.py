@@ -37,6 +37,46 @@ dataclasses_FrozenError = dataclasses.FrozenInstanceError
 
 
 # ---------------------------------------------------------------------------
+# PR 7: the trace cache is LRU-bounded (thousand-cell sweeps must not grow
+# memory without limit), and eviction is harmless — a re-miss regenerates
+# bit-identical bytes because synthesis is a pure function of the config
+# ---------------------------------------------------------------------------
+def test_bounded_cache_evicts_lru_and_regenerates_bitidentical():
+    cache = TR.BoundedTraceCache(max_entries=3)
+    build = lambda c: TR.synth_trace(2000, c)            # noqa: E731
+    cfgs = [TR.TraceConfig(seed=i, base_rps=8.0 + i) for i in range(5)]
+    first = {c: build(c).copy() for c in cfgs}
+    for c in cfgs[:3]:
+        cache.get(c, build)
+    assert len(cache) == 3 and cache.misses == 3
+    cache.get(cfgs[0], build)                            # refresh cfg 0
+    assert cache.hits == 1
+    cache.get(cfgs[3], build)                            # evicts cfg 1 (LRU)
+    cache.get(cfgs[4], build)                            # evicts cfg 2
+    assert len(cache) == 3
+    assert cfgs[0] in cache and cfgs[3] in cache and cfgs[4] in cache
+    assert cfgs[1] not in cache and cfgs[2] not in cache
+    # the evicted config regenerates the exact same bytes on re-miss
+    misses = cache.misses
+    again = cache.get(cfgs[1], build)
+    assert cache.misses == misses + 1
+    np.testing.assert_array_equal(again, first[cfgs[1]])
+
+
+def test_full_trace_respects_cache_bound(monkeypatch):
+    monkeypatch.setattr(TR, "_trace_cache", TR.BoundedTraceCache(2))
+    cfgs = [TR.TraceConfig(seed=900 + i) for i in range(3)]
+    traces = [TR.full_trace(c).copy() for c in cfgs]
+    assert len(TR._trace_cache) == 2                     # cfg 0 evicted
+    np.testing.assert_array_equal(TR.full_trace(cfgs[0]), traces[0])
+
+
+def test_bounded_cache_rejects_nonpositive_cap():
+    with pytest.raises(ValueError):
+        TR.BoundedTraceCache(max_entries=0)
+
+
+# ---------------------------------------------------------------------------
 # vectorized AR(1): bit-identical to the per-second python loop
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("seed,rho", [(0, 0.95), (7, 0.5), (42, 0.999)])
