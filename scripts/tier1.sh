@@ -10,7 +10,10 @@
 # §5.3 adaptation window modeled, the hysteresis run must reconfigure no
 # more often than the no-hysteresis run at equal-or-better realized PAS
 # (bench_cluster --smoke runs both gates, plus the transition-overlap
-# invariant: serving cost <= C at every instant), and on the production-
+# invariant: serving cost <= C at every instant, plus the dag scenario:
+# the video_fanout DAG plan must never lose to its linearized chain at
+# the chain's own budget and must strictly win at some rate, with both
+# event cores replaying each plan bit-identically), and on the production-
 # scale scenario (bench_scale --smoke: 50 pipelines at C=512 — struct
 # event core ev/s floor + speedup over the heapq core with identical
 # metrics, and a per-solve wall ceiling on every solve_cluster planning

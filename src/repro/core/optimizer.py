@@ -180,14 +180,26 @@ class Solution:
 def _mk_solution(pipe, opts, picks, obj: Objective, arrival, t0, solver):
     stages = []
     accs = []
+    lats = []
     lat = cost = bat = 0.0
     for o, j, st in zip(opts, picks, pipe.stages):
         stages.append(StageConfig(o.names[j], int(o.batches[j]),
                                   int(o.replicas[j])))
         accs.append(o.acc[j])
+        lats.append(o.lat[j])
         lat += o.lat[j]
         cost += o.cost[j]
         bat += o.batches[j]
+    if not pipe.is_chain:
+        # critical-path latency: max over source->sink paths of the
+        # per-stage sums (parallel branches overlap, they don't serialize)
+        lat = -np.inf
+        for path in pipe.paths():
+            t = 0.0
+            for i in path:
+                t += lats[i]
+            if t > lat:
+                lat = t
     acc_val = (ACC.pas(accs) if obj.metric == "pas"
                else sum(_acc_term(o, obj.metric)[j] for o, j in zip(opts, picks)))
     objective = obj.alpha * acc_val - obj.beta * cost - obj.delta * bat
@@ -205,7 +217,8 @@ def _infeasible(t0, solver):
 # exact enumeration (numpy broadcast — the hot path)
 # ---------------------------------------------------------------------------
 def _broadcast_eval(opts: List[StageOptions], obj: Objective, sla: float,
-                    stage0_fastest: bool = True):
+                    stage0_fastest: bool = True,
+                    paths: Optional[Sequence[Tuple[int, ...]]] = None):
     """Evaluate the full option cross-product as one numpy broadcast.
 
     With ``stage0_fastest`` (the frontier/combo convention), combo ``k``'s
@@ -220,8 +233,17 @@ def _broadcast_eval(opts: List[StageOptions], obj: Objective, sla: float,
     ``solve_brute``'s python sums), so every returned array is
     bit-identical to both — the frontier/oracle property tests pin this.
 
+    ``paths`` (DAG pipelines): the source→sink stage-index paths from
+    ``PipelineModel.paths()``.  The SLA latency then becomes the
+    critical-path reduction — per-path sums (stage adds in path order)
+    maxed elementwise across paths in list order — instead of one total
+    over all stages.  ``None`` (chains) keeps the legacy single-sum float
+    path untouched; both reductions are pinned bit-identical to the brute
+    path-enumeration oracle.
+
     Returns flat length-``prod(sizes)`` arrays:
-    ``(ok, score, cost, pas, lat)``.
+    ``(ok, score, cost, pas, lat)`` — ``lat`` being the critical-path
+    latency when ``paths`` is given.
     """
     S = len(opts)
 
@@ -230,7 +252,18 @@ def _broadcast_eval(opts: List[StageOptions], obj: Objective, sla: float,
         shape[(S - 1 - s) if stage0_fastest else s] = len(col)
         return np.asarray(col).reshape(shape)
 
-    lat_tot = view(opts[0].lat, 0)
+    lat_views = [view(o.lat, s) for s, o in enumerate(opts)]
+    if paths is None:
+        lat_tot = lat_views[0]
+        for s in range(1, S):
+            lat_tot = lat_tot + lat_views[s]
+    else:
+        lat_tot = None
+        for path in paths:
+            pl = lat_views[path[0]]
+            for i in path[1:]:
+                pl = pl + lat_views[i]
+            lat_tot = pl if lat_tot is None else np.maximum(lat_tot, pl)
     cost_tot = view(opts[0].cost, 0)
     bat_tot = view(opts[0].batches.astype(np.float64), 0)
     pas_log_tot = view(_acc_term(opts[0], "pas"), 0)
@@ -238,7 +271,6 @@ def _broadcast_eval(opts: List[StageOptions], obj: Objective, sla: float,
                else view(_acc_term(opts[0], obj.metric), 0))
     ok = view(opts[0].feasible, 0)
     for s, o in enumerate(opts[1:], start=1):
-        lat_tot = lat_tot + view(o.lat, s)
         cost_tot = cost_tot + view(o.cost, s)
         bat_tot = bat_tot + view(o.batches.astype(np.float64), s)
         pas_term = view(_acc_term(o, "pas"), s)
@@ -294,8 +326,9 @@ def solve_vec(pipe: PipelineModel, arrival: float,
         raise ValueError(f"pipeline {pipe.name}: {math.prod(sizes)} combos "
                          f"exceed the vectorized cap {max_combos}; use "
                          f"solve_milp")
-    ok, score, _, _, _ = _broadcast_eval(opts, obj, pipe.sla,
-                                         stage0_fastest=False)
+    ok, score, _, _, _ = _broadcast_eval(
+        opts, obj, pipe.sla, stage0_fastest=False,
+        paths=None if pipe.is_chain else pipe.paths())
     score = np.where(ok, score, -np.inf)
     k = int(np.argmax(score))
     if not np.isfinite(score[k]):
@@ -339,11 +372,19 @@ def solve_enum(pipe: PipelineModel, arrival: float, obj: Objective = Objective()
     sla = pipe.sla
     K = J ** S
     radix = jnp.array([J ** s for s in range(S)])
+    path_idx = (None if pipe.is_chain
+                else [jnp.array(p) for p in pipe.paths()])
 
     def eval_combo(k):
         js = (k // radix) % J
         idx = (jnp.arange(S), js)
-        ok = jnp.all(valid[idx]) & (jnp.sum(lat[idx]) <= sla)
+        lat_k = lat[idx]
+        if path_idx is None:
+            lat_ok = jnp.sum(lat_k) <= sla
+        else:                            # critical path: every path in SLA
+            lat_ok = jnp.all(jnp.stack(
+                [jnp.sum(lat_k[p]) for p in path_idx]) <= sla)
+        ok = jnp.all(valid[idx]) & lat_ok
         a = jnp.sum(acc_t[idx])
         if obj.metric == "pas":
             a = 100.0 * jnp.exp(a)
@@ -379,11 +420,24 @@ def solve_brute(pipe: PipelineModel, arrival: float,
     opts = _apply_restrictions(pipe, opts, restrict_variants, fixed_replicas,
                                arrival)
     best, best_v = None, -np.inf
+    paths = None if pipe.is_chain else pipe.paths()
     ranges = [range(len(o.names)) for o in opts]
     for picks in itertools.product(*ranges):
         if not all(o.feasible[j] for o, j in zip(opts, picks)):
             continue
-        if sum(o.lat[j] for o, j in zip(opts, picks)) > pipe.sla:
+        if paths is None:
+            lat = sum(o.lat[j] for o, j in zip(opts, picks))
+        else:
+            # brute path enumeration: per-path sums in path order, maxed
+            # in path-list order — the oracle _broadcast_eval must match
+            lat = -np.inf
+            for path in paths:
+                t = 0.0
+                for i in path:
+                    t += opts[i].lat[picks[i]]
+                if t > lat:
+                    lat = t
+        if lat > pipe.sla:
             continue
         a = sum(_acc_term(o, obj.metric)[j] for o, j in zip(opts, picks))
         if obj.metric == "pas":
@@ -421,19 +475,31 @@ def solve_milp(pipe: PipelineModel, arrival: float,
     c = np.concatenate([
         -(obj.alpha * _acc_term(o, metric)
           - obj.beta * o.cost - obj.delta * o.batches) for o in opts])
-    # infeasible options: forbid via upper bound 0
-    ub = np.concatenate([o.feasible.astype(np.float64) for o in opts])
+    # infeasible options: forbid via upper bound 0.  Options with an
+    # infinite latency (zero-demand batches > 1) are likewise forbidden so
+    # the latency rows stay finite for HiGHS.
+    lat_all = np.concatenate([o.lat for o in opts])
+    finite = np.isfinite(lat_all)
+    ub = np.concatenate([o.feasible.astype(np.float64) for o in opts]) * finite
+    lat_all = np.where(finite, lat_all, 0.0)
 
     rows, cols, vals = [], [], []
     for s, (o, off) in enumerate(zip(opts, offs)):
         for j in range(sizes[s]):
             rows.append(s); cols.append(off + j); vals.append(1.0)
     a_eq = sparse.coo_matrix((vals, (rows, cols)), shape=(len(opts), n))
-    lat_row = np.concatenate([o.lat for o in opts])[None, :]
+    # one latency budget row per source->sink path (a chain has one path
+    # covering every stage): sum of picked per-stage latencies <= SLA_P
+    paths = pipe.paths()
+    lat_rows = np.zeros((len(paths), n))
+    for r, path in enumerate(paths):
+        for s in path:
+            off = offs[s]
+            lat_rows[r, off:off + sizes[s]] = lat_all[off:off + sizes[s]]
 
     constraints = [
         sopt.LinearConstraint(a_eq, lb=1.0, ub=1.0),
-        sopt.LinearConstraint(lat_row, ub=pipe.sla),
+        sopt.LinearConstraint(lat_rows, ub=pipe.sla),
     ]
     res = sopt.milp(c=c, constraints=constraints,
                     integrality=np.ones(n),
@@ -493,8 +559,9 @@ def _combo_eval(pipe: PipelineModel, arrival: float, obj: Objective,
     if K > max_combos:
         raise ValueError(f"pipeline {pipe.name}: {K} combos exceed the "
                          f"frontier cap {max_combos}; use fewer options")
-    ok, score, cost_tot, pas_val, lat_tot = _broadcast_eval(opts, obj,
-                                                            pipe.sla)
+    ok, score, cost_tot, pas_val, lat_tot = _broadcast_eval(
+        opts, obj, pipe.sla,
+        paths=None if pipe.is_chain else pipe.paths())
     keep = np.flatnonzero(ok)
     picks = []
     radix = 1

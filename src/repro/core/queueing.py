@@ -23,9 +23,21 @@ import numpy as np
 
 
 def queue_delay(batch, arrival_rps) -> np.ndarray:
-    """Worst-case batch-formation delay q(b) = (b - 1) / lambda (Eq. 7)."""
+    """Worst-case batch-formation delay q(b) = (b - 1) / lambda (Eq. 7).
+
+    Zero-demand semantics (defined here, once, for the whole stack): at
+    lambda <= 0 only a batch of one is meaningfully priced — it never
+    waits, so its delay is 0; any larger batch would wait forever for
+    peers that never arrive, so its delay is ``inf``.  The planner's
+    feasibility masks (``lat <= sla``) reject those options, and the
+    simulator's batch-formation timeout caps the bound at ``max_wait``
+    (see ``wait_bound``) — both therefore behave sanely on an idle
+    interval instead of pricing batches at ~1e9·(b-1) seconds.
+    """
     batch = np.asarray(batch, dtype=np.float64)
-    lam = max(float(arrival_rps), 1e-9)
+    lam = float(arrival_rps)
+    if lam <= 0.0:
+        return np.where(batch > 1.0, np.inf, 0.0)
     return (batch - 1.0) / lam
 
 
@@ -46,7 +58,11 @@ def expected_wait(batch: int, arrival_rps: float, replicas: int = 1,
     a latency violation.
     """
     b = int(batch)
-    lam = max(float(arrival_rps), 1e-9)
+    lam = float(arrival_rps)
+    if lam <= 0.0:
+        # zero demand: same semantics as ``queue_delay`` — a batch of one
+        # never waits, anything larger waits forever
+        return 0.0 if b <= 1 else float("inf")
     form = (b - 1) / (2.0 * lam)
     if service_time is None:
         return form
@@ -77,7 +93,9 @@ def wait_bound(batch: int, arrival_rps: float,
     This is the deadline the simulator arms for a partially filled batch:
     the head request never waits longer than the worst-case queue delay the
     planner budgeted for, nor longer than the hard cap ``max_wait``.  A
-    batch of one never waits.
+    batch of one never waits.  At zero demand ``queue_delay`` is ``inf``
+    for b > 1 (see its zero-demand semantics), so the timeout degrades to
+    exactly ``max_wait`` — the same deadline the old 1e-9 clamp produced.
     """
     if batch <= 1:
         return 0.0

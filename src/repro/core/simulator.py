@@ -200,6 +200,24 @@ class _StageQueue:
         self.min_arr = min(self._arr) if kept else _INF
         return dropped
 
+    def discard_rids(self, rids) -> List[Request]:
+        """Remove (and return) every queued request whose ``rid`` is in the
+        given set — §4.5 drop propagation purging a cancelled request's
+        sibling-branch copies (DAG pipelines only)."""
+        h, t = self.head, len(self.reqs)
+        live = self.reqs[h:t]
+        sel = [r.rid in rids for r in live]
+        if not any(sel):
+            return []
+        keep = [not m for m in sel]
+        removed = list(itertools.compress(live, sel))
+        self.reqs = list(itertools.compress(live, keep))
+        self._arr = list(itertools.compress(self._arr[h:t], keep))
+        self._enter = list(itertools.compress(self._enter[h:t], keep))
+        self.head = 0
+        self.min_arr = min(self._arr) if self.reqs else _INF
+        return removed
+
 
 class ClusterSimulator:
     """All pipelines of a ``ClusterModel`` in one event heap.
@@ -270,16 +288,48 @@ class ClusterSimulator:
         self._next: List[int] = []           # next global stage (-1 = sink)
         self._first: List[int] = []          # entry stage per pipeline
         self._stages_of: List[range] = []    # global stage range per pipeline
+        # DAG topology (chains never consult these beyond the _dag_route
+        # bool): children per global stage, parent counts, and whether the
+        # owning pipeline routes through the DAG path at all
+        self._children: List[Tuple[int, ...]] = []
+        self._n_parents: List[int] = []
+        self._dag_route: List[bool] = []     # per stage: owner is a DAG
+        self._dag_pipe: List[bool] = []      # per pipeline
         for pipe in cluster.pipelines:
             base = len(self._stage_models)
             ns = len(pipe.stages)
+            chain = pipe.is_chain
             self._first.append(base)
             self._stages_of.append(range(base, base + ns))
+            self._dag_pipe.append(not chain)
             for i, st in enumerate(pipe.stages):
                 self._stage_models.append(st)
                 self._pipe_of.append(len(self._first) - 1)
                 self._next.append(base + i + 1 if i + 1 < ns else -1)
+                self._dag_route.append(not chain)
+                if chain:
+                    self._children.append((base + i + 1,) if i + 1 < ns
+                                          else ())
+                    self._n_parents.append(1 if i else 0)
+                else:
+                    self._children.append(tuple(
+                        base + c for c in pipe.children_of(i)))
+                    self._n_parents.append(len(pipe.parents_of(i)))
         self.n_stages = len(self._stage_models)
+        # per-pipeline DAG request tracking: rid counters, in-flight token
+        # counts (queued copies + in-service copies + one per partial-join
+        # entry), the §4.5-cancelled rid set, and per-join partial buffers
+        # (rid -> parents delivered so far)
+        self._rid_next: List[int] = [0] * self.n_pipelines
+        self._inflight: List[dict] = [{} for _ in range(self.n_pipelines)]
+        self._dead: List[set] = [set() for _ in range(self.n_pipelines)]
+        self._join_buf: List[Optional[dict]] = [
+            {} if n > 1 else None for n in self._n_parents]
+        if self._pool is not None and any(self._dag_pipe):
+            # a pool reset re-stamps req_id/rid, which would corrupt join
+            # matching of still-in-flight sibling copies — run DAG
+            # simulations unpooled (same contract as the struct core)
+            self._pool = None
 
         self.configs: List[StageConfig] = []
         for cfg in config.pipelines:
@@ -691,6 +741,10 @@ class ClusterSimulator:
                     r.done = now
                 self.metrics_by_pipe[self._pipe_of[s]].dropped += len(dropped)
                 self._bump(s)
+                if self._dag_route[s]:
+                    # §4.5 drop propagation: cancel the sibling branches'
+                    # in-flight copies of every dropped request
+                    self._dag_cancel(s, [r.rid for r in dropped])
                 if self._pool is not None:
                     self._pool.release_many(dropped)
         nq = len(q.reqs) - q.head
@@ -757,6 +811,17 @@ class ClusterSimulator:
         if kind == "arrive":
             s, reqs, arrs = payload
             q = self.queues[s]
+            if self._dag_route[s] and self._n_parents[s] == 0:
+                # DAG pipeline entry: stamp per-pipeline request ids (join
+                # matching / drop propagation) and open the token count
+                p = self._pipe_of[s]
+                infl = self._inflight[p]
+                rid = self._rid_next[p]
+                for r in reqs:
+                    r.rid = rid
+                    infl[rid] = 1
+                    rid += 1
+                self._rid_next[p] = rid
             if arrs is None:
                 for r in reqs:
                     q.push(r, self.now)
@@ -781,21 +846,24 @@ class ClusterSimulator:
             if self.record_timeline:
                 for r in batch:
                     r.stage_exit[s] = self.now
-            nxt = self._next[s]
-            if nxt >= 0:
-                # synchronous handoff: the next-stage arrival is at this
-                # same instant, so deliver it directly instead of taking a
-                # round-trip through the heap
-                self._handle("arrive", (nxt, batch, arrs))
+            if self._dag_route[s]:
+                self._done_dag(s, batch, arrs)
             else:
-                now = self.now
-                for r in batch:
-                    r.done = now
-                m = self.metrics_by_pipe[self._pipe_of[s]]
-                m.completed += len(batch)
-                m._lat.extend([now - a for a in arrs])
-                if self._pool is not None:
-                    self._pool.release_many(batch)
+                nxt = self._next[s]
+                if nxt >= 0:
+                    # synchronous handoff: the next-stage arrival is at
+                    # this same instant, so deliver it directly instead of
+                    # taking a round-trip through the heap
+                    self._handle("arrive", (nxt, batch, arrs))
+                else:
+                    now = self.now
+                    for r in batch:
+                        r.done = now
+                    m = self.metrics_by_pipe[self._pipe_of[s]]
+                    m.completed += len(batch)
+                    m._lat.extend([now - a for a in arrs])
+                    if self._pool is not None:
+                        self._pool.release_many(batch)
             q = self.queues[s]
             if len(q.reqs) > q.head:         # freed replica, waiting work
                 self._try_dispatch(s)
@@ -823,6 +891,137 @@ class ClusterSimulator:
                 cfg = self._pending_cfg[p]
                 self._pending_cfg[p] = None
                 self._apply_pipeline_config(p, cfg)
+
+    # -- DAG routing (stages whose owning pipeline is not a chain) ---------
+    #
+    # Fan-out: a completed batch is replicated to every child (the same
+    # Request objects — each queued copy, in-service copy and partial-join
+    # entry carries one token in the per-pipeline ``_inflight`` count).  A
+    # join (>1 parents) buffers per-request delivery counts keyed by rid
+    # and enqueues the request only when its *last* parent delivers
+    # (wait-for-all-parents).  A §4.5 drop of any copy cancels the whole
+    # request: its rid joins ``_dead``, sibling queued copies and join
+    # partials are purged immediately, and in-service copies are discarded
+    # when their batch completes.  Chains never enter any of this — their
+    # event path above is untouched (the equivalence tests pin
+    # bit-identity).
+    def _dec_token(self, p: int, rid: int) -> None:
+        infl = self._inflight[p]
+        n = infl[rid] - 1
+        if n:
+            infl[rid] = n
+        else:
+            del infl[rid]
+            self._dead[p].discard(rid)
+
+    def _done_dag(self, s: int, batch, arrs) -> None:
+        p = self._pipe_of[s]
+        infl = self._inflight[p]
+        dead = self._dead[p]
+        now = self.now
+        if dead:
+            alive, alive_arrs = [], []
+            for r, a in zip(batch, arrs):
+                if r.rid in dead:            # cancelled mid-service
+                    self._dec_token(p, r.rid)
+                else:
+                    alive.append(r)
+                    alive_arrs.append(a)
+        else:
+            alive, alive_arrs = list(batch), list(arrs)
+        if not alive:
+            return
+        children = self._children[s]
+        if not children:                     # sink: the request completes
+            for r in alive:
+                r.done = now
+                del infl[r.rid]
+            m = self.metrics_by_pipe[p]
+            m.completed += len(alive)
+            m._lat.extend([now - a for a in alive_arrs])
+            return
+        if len(children) > 1:                # fan-out: one token per copy
+            extra = len(children) - 1
+            for r in alive:
+                infl[r.rid] += extra
+        for c in children:
+            if dead:
+                # a drop during an earlier child's dispatch may have
+                # cancelled requests this child still expects a copy of
+                live_r, live_a = [], []
+                for r, a in zip(alive, alive_arrs):
+                    if r.rid in dead:
+                        self._dec_token(p, r.rid)
+                    else:
+                        live_r.append(r)
+                        live_a.append(a)
+                if not live_r:
+                    continue
+            else:
+                live_r, live_a = alive, alive_arrs
+            if self._n_parents[c] > 1:
+                self._deliver_join(c, live_r, live_a)
+            else:
+                self._handle("arrive", (c, live_r, live_a))
+
+    def _deliver_join(self, c: int, reqs, arrs) -> None:
+        """Wait-for-all-parents: buffer per-parent deliveries by rid; the
+        request enters the join queue (with its original arrival time, in
+        delivering-batch order) only when its last parent delivers."""
+        buf = self._join_buf[c]
+        need = self._n_parents[c]
+        infl = self._inflight[self._pipe_of[c]]
+        ready, ready_arrs = [], []
+        for r, a in zip(reqs, arrs):
+            cnt = buf.get(r.rid, 0) + 1
+            if cnt < need:
+                buf[r.rid] = cnt
+                if cnt > 1:                  # absorbed into the one entry
+                    infl[r.rid] -= 1
+            else:                            # last parent: release to queue
+                del buf[r.rid]
+                infl[r.rid] -= 1             # entry + copy -> queued once
+                ready.append(r)
+                ready_arrs.append(a)
+        if ready:
+            self._handle("arrive", (c, ready, ready_arrs))
+
+    def _dag_cancel(self, s: int, rids) -> None:
+        """§4.5 drop propagation: requests dropped at stage ``s`` are dead
+        everywhere — purge their queued sibling copies and join partials
+        now; in-service copies are discarded at their done event."""
+        p = self._pipe_of[s]
+        infl = self._inflight[p]
+        dead = self._dead[p]
+        purge = set()
+        for rid in rids:
+            n = infl[rid] - 1
+            if n:                            # copies still out there
+                infl[rid] = n
+                dead.add(rid)
+                purge.add(rid)
+            else:
+                del infl[rid]
+        if not purge:
+            return
+        for j in self._stages_of[p]:
+            if j == s:
+                continue
+            buf = self._join_buf[j]
+            if buf:
+                for rid in purge.intersection(buf):
+                    del buf[rid]
+                    self._dec_token(p, rid)
+            q = self.queues[j]
+            if len(q):
+                removed = q.discard_rids(purge)
+                if removed:
+                    for r in removed:
+                        self._dec_token(p, r.rid)
+                    # queue shrank under a possibly armed timeout: re-arm
+                    # from current state (and dispatch if past the deadline)
+                    self._bump(j)
+                    self._try_dispatch(j)
 
     def run_until(self, t_end: float) -> None:
         ev = self._events
@@ -968,12 +1167,17 @@ class _ArrayStageQueue:
     — no per-request python objects.  Batch pops, §4.5 drop scans and
     completion accounting all run as numpy slice ops."""
 
-    __slots__ = ("_arr", "_enter", "head", "n", "min_arr", "sorted_fifo",
-                 "fifo_ok")
+    __slots__ = ("_arr", "_enter", "_rid", "head", "n", "min_arr",
+                 "sorted_fifo", "fifo_ok")
 
-    def __init__(self, cap: int = 64, sorted_fifo: bool = False):
+    def __init__(self, cap: int = 64, sorted_fifo: bool = False,
+                 track_rid: bool = False):
         self._arr = np.empty(cap, dtype=np.float64)
         self._enter = np.empty(cap, dtype=np.float64)
+        # DAG stages carry a third parallel column: the per-pipeline
+        # request id (join matching + §4.5 drop propagation); chain stages
+        # skip the column entirely
+        self._rid = np.empty(cap, dtype=np.int64) if track_rid else None
         self.head = 0
         self.n = 0
         self.min_arr = _INF
@@ -1001,23 +1205,31 @@ class _ArrayStageQueue:
         ne = np.empty(new_cap, dtype=np.float64)
         na[:live] = self._arr[self.head:self.n]
         ne[:live] = self._enter[self.head:self.n]
+        if self._rid is not None:
+            nr = np.empty(new_cap, dtype=np.int64)
+            nr[:live] = self._rid[self.head:self.n]
+            self._rid = nr
         self._arr = na
         self._enter = ne
         self.head = 0
         self.n = live
 
-    def push_scalar(self, arrival: float, enter: float) -> None:
+    def push_scalar(self, arrival: float, enter: float,
+                    rid: int = -1) -> None:
         self._room(1)
         n = self.n
         if self.fifo_ok and n > self.head and arrival < self._arr[n - 1]:
             self.fifo_ok = False
         self._arr[n] = arrival
         self._enter[n] = enter
+        if self._rid is not None:
+            self._rid[n] = rid
         self.n = n + 1
         if arrival < self.min_arr:
             self.min_arr = arrival
 
-    def push_bulk(self, arrivals: np.ndarray, enter) -> None:
+    def push_bulk(self, arrivals: np.ndarray, enter,
+                  rids: Optional[np.ndarray] = None) -> None:
         """Append a block of arrivals; ``enter`` may be a scalar (upstream
         handoff: the whole batch enters now) or a parallel array (bulk
         injection of stale + fresh arrivals).  A sorted_fifo queue only
@@ -1031,6 +1243,8 @@ class _ArrayStageQueue:
             self.fifo_ok = False
         self._arr[n:n + k] = arrivals
         self._enter[n:n + k] = enter
+        if self._rid is not None:
+            self._rid[n:n + k] = rids
         self.n = n + k
         m = float(arrivals[0]) if self.sorted_fifo else float(arrivals.min())
         if m < self.min_arr:
@@ -1055,9 +1269,64 @@ class _ArrayStageQueue:
             live = self.n - e
             self._arr[:live] = self._arr[e:self.n].copy()
             self._enter[:live] = self._enter[e:self.n].copy()
+            if self._rid is not None:
+                self._rid[:live] = self._rid[e:self.n].copy()
             self.head = 0
             self.n = live
         return arrs
+
+    def pop_batch_rid(self, k: int) -> Tuple[np.ndarray, np.ndarray]:
+        """``pop_batch`` plus the batch's rid column (DAG stages only)."""
+        h = self.head
+        rids = self._rid[h:h + k].copy()
+        return self.pop_batch(k), rids
+
+    def drop_expired_rid(self, now: float, threshold: float) -> np.ndarray:
+        """``drop_expired`` returning the dropped requests' rids (DAG
+        stages only) — same drop set, same tightened-``min_arr`` semantics
+        on both the prefix and the masked path."""
+        h = self.head
+        rid = self._rid
+        if self.fifo_ok:
+            k = self.drop_expired(now, threshold)
+            return rid[h:h + k].copy()   # prefix drop: head advanced by k
+        t = self.n
+        live = self._arr[h:t]
+        keep = (now - live) <= threshold
+        dropped = rid[h:t][~keep].copy()
+        if dropped.size:
+            # masked compaction must carry the rid column along
+            rid[:t - h - dropped.size] = rid[h:t][keep]
+        self.drop_expired(now, threshold)
+        return dropped
+
+    def discard_rids(self, rids) -> np.ndarray:
+        """Remove (and return the rids of) every queued request whose rid
+        is in the given set — §4.5 drop propagation purging a cancelled
+        request's sibling-branch copies.  Removal preserves arrival order,
+        so ``fifo_ok`` survives."""
+        h, t = self.head, self.n
+        live_rid = self._rid[h:t]
+        sel = np.fromiter((int(r) in rids for r in live_rid),
+                          dtype=bool, count=t - h)
+        if not sel.any():
+            return live_rid[:0]
+        keep = ~sel
+        removed = live_rid[sel].copy()
+        kept_arr = self._arr[h:t][keep]
+        k = kept_arr.size
+        self._arr[:k] = kept_arr
+        self._enter[:k] = self._enter[h:t][keep]
+        self._rid[:k] = live_rid[keep]
+        self.head = 0
+        self.n = k
+        if k:
+            self.min_arr = float(kept_arr[0] if self.fifo_ok
+                                 else kept_arr.min())
+        else:
+            self.min_arr = _INF
+            self.fifo_ok = self.sorted_fifo
+        return removed
 
     def drop_expired(self, now: float, threshold: float) -> int:
         """Drop every queued request older than ``threshold``; returns the
@@ -1133,7 +1402,8 @@ class _StructCore:
                 "use the heapq core for record_timeline")
         self._pool = None                # never acquire/release requests
         firsts = set(self._first)
-        self.queues = [_ArrayStageQueue(sorted_fifo=s in firsts)
+        self.queues = [_ArrayStageQueue(sorted_fifo=s in firsts,
+                                        track_rid=self._dag_route[s])
                        for s in range(self.n_stages)]
         self._evq = _EventColumns()
         # per-pipeline injected-arrival buffers (arrivals only ever target
@@ -1208,7 +1478,16 @@ class _StructCore:
     def _arrive_one(self, s: int, t: float) -> None:
         """Deliver one arrival through the exact heapq-core arrive path."""
         q = self.queues[s]
-        q.push_scalar(t, self.now)
+        if self._dag_route[s]:
+            # DAG pipeline entry: stamp the per-pipeline request id and
+            # open its in-flight token count (mirrors the heapq arrive)
+            p = self._pipe_of[s]
+            rid = self._rid_next[p]
+            self._inflight[p][rid] = 1
+            self._rid_next[p] = rid + 1
+            q.push_scalar(t, self.now, rid)
+        else:
+            q.push_scalar(t, self.now)
         d = q.n - q.head
         if d > self.peak_queue_depth:
             self.peak_queue_depth = d
@@ -1229,15 +1508,140 @@ class _StructCore:
                 or self.now - q.min_arr > self._drop_thr_s[s]):
             self._try_dispatch(s)
 
+    # -- DAG routing on arrays (mirrors the heapq core's _done_dag /
+    # _deliver_join / _dag_cancel, with rid columns instead of Request
+    # objects; identical token accounting and delivery order) ------------
+    def _arrive_batch_rid(self, s: int, arrs: np.ndarray,
+                          rids: np.ndarray) -> None:
+        """Synchronous upstream handoff carrying the rid column."""
+        q = self.queues[s]
+        q.push_bulk(arrs, self.now, rids)
+        d = q.n - q.head
+        if d > self.peak_queue_depth:
+            self.peak_queue_depth = d
+        if (d >= self._batch_of[s]
+                or self._timeout_at[s] == _INF
+                or self.now - q.min_arr > self._drop_thr_s[s]):
+            self._try_dispatch(s)
+
+    def _done_dag(self, s: int, arrs: np.ndarray,       # type: ignore[override]
+                  rids: np.ndarray) -> None:
+        p = self._pipe_of[s]
+        infl = self._inflight[p]
+        dead = self._dead[p]
+        if dead:
+            keep = np.fromiter((int(r) not in dead for r in rids),
+                               dtype=bool, count=rids.size)
+            for r in rids[~keep]:        # cancelled mid-service
+                self._dec_token(p, int(r))
+            arrs = arrs[keep]
+            rids = rids[keep]
+        if not arrs.size:
+            return
+        children = self._children[s]
+        if not children:                 # sink: the request completes
+            for r in rids:
+                del infl[int(r)]
+            m = self.metrics_by_pipe[p]
+            m.completed += arrs.size
+            m._lat.extend(self.now - arrs)
+            return
+        if len(children) > 1:            # fan-out: one token per copy
+            extra = len(children) - 1
+            for r in rids:
+                infl[int(r)] += extra
+        for c in children:
+            if dead:
+                # a drop during an earlier child's dispatch may have
+                # cancelled requests this child still expects a copy of
+                keep = np.fromiter((int(r) not in dead for r in rids),
+                                   dtype=bool, count=rids.size)
+                for r in rids[~keep]:
+                    self._dec_token(p, int(r))
+                live_a = arrs[keep]
+                live_r = rids[keep]
+                if not live_a.size:
+                    continue
+            else:
+                live_a, live_r = arrs, rids
+            if self._n_parents[c] > 1:
+                self._deliver_join(c, live_a, live_r)
+            else:
+                self._arrive_batch_rid(c, live_a, live_r)
+
+    def _deliver_join(self, c: int, arrs: np.ndarray,   # type: ignore[override]
+                      rids: np.ndarray) -> None:
+        buf = self._join_buf[c]
+        need = self._n_parents[c]
+        infl = self._inflight[self._pipe_of[c]]
+        ready: List[int] = []
+        for idx in range(rids.size):
+            rid = int(rids[idx])
+            cnt = buf.get(rid, 0) + 1
+            if cnt < need:
+                buf[rid] = cnt
+                if cnt > 1:              # absorbed into the one entry
+                    infl[rid] -= 1
+            else:                        # last parent: release to queue
+                del buf[rid]
+                infl[rid] -= 1
+                ready.append(idx)
+        if ready:
+            sel = np.array(ready)
+            self._arrive_batch_rid(c, arrs[sel], rids[sel])
+
+    def _dag_cancel(self, s: int, rids) -> None:        # type: ignore[override]
+        p = self._pipe_of[s]
+        infl = self._inflight[p]
+        dead = self._dead[p]
+        purge = set()
+        for rid in rids:
+            rid = int(rid)
+            n = infl[rid] - 1
+            if n:                        # copies still out there
+                infl[rid] = n
+                dead.add(rid)
+                purge.add(rid)
+            else:
+                del infl[rid]
+        if not purge:
+            return
+        for j in self._stages_of[p]:
+            if j == s:
+                continue
+            buf = self._join_buf[j]
+            if buf:
+                for rid in purge.intersection(buf):
+                    del buf[rid]
+                    self._dec_token(p, rid)
+            q = self.queues[j]
+            if len(q):
+                removed = q.discard_rids(purge)
+                if removed.size:
+                    for r in removed:
+                        self._dec_token(p, int(r))
+                    self._bump(j)
+                    self._try_dispatch(j)
+
     def _try_dispatch(self, s: int) -> None:
         q = self.queues[s]
         now = self.now
         thr = self._drop_thr_s[s]
+        dag = self._dag_route[s]
         if now - q.min_arr > thr:
-            k_dropped = q.drop_expired(now, thr)
-            if k_dropped:
-                self.metrics_by_pipe[self._pipe_of[s]].dropped += k_dropped
-                self._bump(s)
+            if dag:
+                rids_dropped = q.drop_expired_rid(now, thr)
+                if rids_dropped.size:
+                    self.metrics_by_pipe[self._pipe_of[s]].dropped += \
+                        rids_dropped.size
+                    self._bump(s)
+                    self._dag_cancel(s, rids_dropped)
+            else:
+                k_dropped = q.drop_expired(now, thr)
+                if k_dropped:
+                    self.metrics_by_pipe[self._pipe_of[s]].dropped += \
+                        k_dropped
+                    self._bump(s)
         nq = q.n - q.head
         if not nq:
             return
@@ -1276,28 +1680,38 @@ class _StructCore:
                     self._schedule_wake(s, min(free))
                     return
                 rep = avail[self.rr[s] % n_avail]
-            arrs = q.pop_batch(k)
+            if dag:
+                arrs, rids = q.pop_batch_rid(k)
+            else:
+                arrs = q.pop_batch(k)
             nq -= k
             self.rr[s] += 1
             done_t = now + (tab[k] if k < tab_n
                             else self._stage_latency(s, k))
             free[rep] = done_t
             self.in_service += k
-            evq.push(done_t, _EV_DONE, (s, arrs))
+            evq.push(done_t, _EV_DONE,
+                     (s, arrs, rids) if dag else (s, arrs))
             gen[s] += 1                  # inlined _bump (lazy cancel)
             self._timeout_at[s] = _INF
 
     def _handle_ev(self, kind: int, payload) -> None:
         if kind == _EV_DONE:
-            s, arrs = payload
-            self.in_service -= arrs.size
-            nxt = self._next[s]
-            if nxt >= 0:
-                self._arrive_batch(nxt, arrs)
+            s = payload[0]
+            if self._dag_route[s]:           # 3-tuple payload with rids
+                _, arrs, rids = payload
+                self.in_service -= arrs.size
+                self._done_dag(s, arrs, rids)
             else:
-                m = self.metrics_by_pipe[self._pipe_of[s]]
-                m.completed += arrs.size
-                m._lat.extend(self.now - arrs)   # vectorized per-batch
+                _, arrs = payload
+                self.in_service -= arrs.size
+                nxt = self._next[s]
+                if nxt >= 0:
+                    self._arrive_batch(nxt, arrs)
+                else:
+                    m = self.metrics_by_pipe[self._pipe_of[s]]
+                    m.completed += arrs.size
+                    m._lat.extend(self.now - arrs)   # vectorized per-batch
             q = self.queues[s]
             if q.n > q.head:
                 self._try_dispatch(s)
@@ -1415,7 +1829,17 @@ class _StructCore:
         # (past-time) injections which enter at the run-entry clock
         enter = np.maximum(vals, now0) if now0 > vals[0] else vals
         q = self.queues[self._first[p]]
-        q.push_bulk(vals, enter)
+        if self._dag_pipe[p]:
+            rid0 = self._rid_next[p]
+            k = vals.size
+            infl = self._inflight[p]
+            for rid in range(rid0, rid0 + k):
+                infl[rid] = 1
+            self._rid_next[p] = rid0 + k
+            q.push_bulk(vals, enter, np.arange(rid0, rid0 + k,
+                                               dtype=np.int64))
+        else:
+            q.push_bulk(vals, enter)
         d = q.n - q.head
         if d > self.peak_queue_depth:
             self.peak_queue_depth = d

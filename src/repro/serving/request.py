@@ -19,6 +19,10 @@ class Request:
     stage_exit: Dict[int, float] = dataclasses.field(default_factory=dict)
     dropped_at: Optional[int] = None
     done: float = float("nan")
+    # per-pipeline request id stamped by the simulator at first-stage
+    # entry of a DAG pipeline (join matching + drop propagation); -1 on
+    # chain pipelines, which never need it
+    rid: int = -1
 
     @property
     def latency(self) -> float:
@@ -38,6 +42,7 @@ class Request:
         self.stage_exit.clear()
         self.dropped_at = None
         self.done = float("nan")
+        self.rid = -1
         return self
 
 

@@ -1,0 +1,280 @@
+"""DAG stage graphs: validation, critical-path latency (vs a brute
+all-paths oracle), solver agreement on random DAGs, the zero-demand
+queueing fix, and the variant tie-break fixes."""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from _hypothesis_compat import given, settings, st
+from repro.core import optimizer as OPT
+from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
+                                 StageConfig, StageModel)
+from repro.core.queueing import expected_wait, queue_delay, wait_bound
+from repro.core.simulator import PipelineSimulator, StructPipelineSimulator
+
+
+def var(name, l1, acc=70.0, alloc=1):
+    return ModelVariant(name, acc, alloc, (0.0, l1 * 0.7, l1 * 0.3))
+
+
+def stage(name, l1, acc=70.0, alloc=1, sla=None):
+    return StageModel(name, (var(name + "0", l1, acc, alloc),),
+                      sla=sla if sla is not None else 5 * l1,
+                      batch_choices=(1, 2, 4))
+
+
+def diamond(sla_override=None):
+    stages = tuple(stage(f"s{i}", 0.02 * (i + 1)) for i in range(4))
+    return PipelineModel("diamond", stages,
+                         parents=((), (0,), (0,), (1, 2)),
+                         sla_override=sla_override)
+
+
+# ---------------------------------------------------------------------------
+# validation
+# ---------------------------------------------------------------------------
+def test_parents_length_mismatch_rejected():
+    with pytest.raises(ValueError, match="entries for"):
+        PipelineModel("bad", (stage("a", 0.01), stage("b", 0.01)),
+                      parents=((),))
+
+
+def test_source_with_parents_rejected():
+    with pytest.raises(ValueError, match="single source"):
+        PipelineModel("bad", (stage("a", 0.01), stage("b", 0.01)),
+                      parents=((1,), (0,)))
+
+
+def test_orphan_stage_rejected():
+    with pytest.raises(ValueError, match="only stage 0"):
+        PipelineModel("bad", (stage("a", 0.01), stage("b", 0.01),
+                              stage("c", 0.01)),
+                      parents=((), (), (0, 1)))
+
+
+def test_forward_parent_reference_rejected():
+    with pytest.raises(ValueError, match="earlier stages"):
+        PipelineModel("bad", (stage("a", 0.01), stage("b", 0.01),
+                              stage("c", 0.01)),
+                      parents=((), (2,), (1,)))
+
+
+def test_multiple_sinks_rejected():
+    # stage 1 feeds nothing and is not the last stage
+    with pytest.raises(ValueError, match="single"):
+        PipelineModel("bad", (stage("a", 0.01), stage("b", 0.01),
+                              stage("c", 0.01)),
+                      parents=((), (0,), (0,)))
+
+
+def test_parents_deduped_and_sorted():
+    pipe = PipelineModel("p", (stage("a", 0.01), stage("b", 0.01),
+                               stage("c", 0.01), stage("d", 0.01)),
+                         parents=((), (0,), (0, 0), (2, 1, 1)))
+    assert pipe.parents == ((), (0,), (0,), (1, 2))
+
+
+# ---------------------------------------------------------------------------
+# graph accessors
+# ---------------------------------------------------------------------------
+def test_chain_is_chain_and_single_path():
+    pipe = PipelineModel("c", (stage("a", 0.01), stage("b", 0.01),
+                               stage("c", 0.01)))
+    assert pipe.is_chain
+    assert pipe.paths() == ((0, 1, 2),)
+    assert pipe.children_of(0) == (1,)
+    assert pipe.parents_of(2) == (1,)
+
+
+def test_explicit_path_graph_counts_as_chain():
+    pipe = PipelineModel("c", (stage("a", 0.01), stage("b", 0.01)),
+                         parents=((), (0,)))
+    assert pipe.is_chain
+    assert pipe.sla == PipelineModel(
+        "c", (stage("a", 0.01), stage("b", 0.01))).sla
+
+
+def test_diamond_paths_and_critical_path():
+    pipe = diamond()
+    assert not pipe.is_chain
+    assert pipe.paths() == ((0, 1, 3), (0, 2, 3))
+    # stage SLAs are 5*l1 with l1 = 0.02*(i+1): path via stage 2 is heavier
+    assert pipe.critical_path() == (0, 2, 3)
+    assert pipe.critical_path(weights=[0, 9, 1, 0]) == (0, 1, 3)
+    assert pipe.sla == pytest.approx(5 * (0.02 + 0.06 + 0.08))
+
+
+def test_linearize_keeps_dag_budget():
+    pipe = diamond(sla_override=0.33)
+    lin = pipe.linearize()
+    assert lin.is_chain
+    assert lin.sla == pytest.approx(0.33)
+    assert lin.stages == pipe.stages
+
+
+def test_dag_latency_is_max_over_paths():
+    pipe = diamond()
+    cfg = PipelineConfig(tuple(StageConfig(s.variants[0].name, 1, 1)
+                               for s in pipe.stages))
+    lam = 10.0
+    terms = [float(s.variants[0].latency(1)) for s in pipe.stages]
+    want = max(terms[0] + terms[1] + terms[3], terms[0] + terms[2] + terms[3])
+    assert cfg.latency(pipe, lam) == pytest.approx(want)
+    # the linearized chain charges every stage: strictly larger here
+    assert cfg.latency(pipe.linearize(), lam) > cfg.latency(pipe, lam)
+
+
+# ---------------------------------------------------------------------------
+# random DAGs: latency vs brute all-paths oracle; solve_vec vs solve_brute
+# ---------------------------------------------------------------------------
+def random_dag(seed: int):
+    rng = np.random.default_rng(seed)
+    n = int(rng.integers(2, 7))
+    parents = [()]
+    for i in range(1, n):
+        k = int(rng.integers(1, min(i, 3) + 1))
+        parents.append(tuple(sorted(rng.choice(i, size=k, replace=False))))
+    # single sink: attach any unreferenced stage to the last one
+    referenced = {p for ps in parents for p in ps}
+    extra = [i for i in range(n - 1) if i not in referenced]
+    if extra:
+        parents[-1] = tuple(sorted(set(parents[-1]) | set(extra)))
+    stages = tuple(
+        stage(f"s{i}", float(rng.uniform(0.01, 0.08)),
+              acc=float(rng.uniform(60.0, 90.0)),
+              alloc=int(rng.integers(1, 3)))
+        for i in range(n))
+    return PipelineModel(f"rand{seed}", stages, parents=tuple(parents))
+
+
+def oracle_paths(parents):
+    """Brute DFS enumeration, independent of PipelineModel.paths()."""
+    n = len(parents)
+    children = [[] for _ in range(n)]
+    for i, ps in enumerate(parents):
+        for p in ps:
+            children[p].append(i)
+    out = []
+
+    def walk(i, path):
+        if not children[i]:
+            out.append(tuple(path))
+            return
+        for c in children[i]:
+            walk(c, path + [c])
+
+    walk(0, [0])
+    return out
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_random_dag_latency_matches_all_paths_oracle(seed):
+    pipe = random_dag(seed)
+    cfg = PipelineConfig(tuple(StageConfig(s.variants[0].name, b, 1)
+                               for s, b in zip(pipe.stages, [1, 2, 4] * 2)))
+    for lam in (0.0, 3.0, 25.0):
+        terms = []
+        for sc, s in zip(cfg.stages, pipe.stages):
+            svc = float(s.variant(sc.variant).latency(sc.batch))
+            terms.append(svc + float(queue_delay(sc.batch, lam)))
+        want = max(sum(terms[i] for i in path)
+                   for path in oracle_paths(pipe.effective_parents))
+        got = cfg.latency(pipe, lam)
+        assert got == want or (np.isinf(got) and np.isinf(want))
+        assert set(pipe.paths()) == set(oracle_paths(pipe.effective_parents))
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(min_value=0, max_value=10_000))
+def test_random_dag_solve_vec_matches_brute(seed):
+    pipe = random_dag(seed)
+    for lam in (2.0, 9.0):
+        sv = OPT.solve_vec(pipe, lam)
+        sb = OPT.solve_brute(pipe, lam)
+        assert sv.feasible == sb.feasible
+        if sv.feasible:
+            assert sv.config == sb.config
+            assert sv.objective == sb.objective
+            assert sv.latency == sb.latency
+
+
+def test_dag_solve_milp_agrees_with_brute():
+    pytest.importorskip("scipy")
+    pipe = diamond()
+    obj = OPT.Objective(metric="pas_prime")   # linear metric: MILP-exact
+    for lam in (2.0, 8.0):
+        sm = OPT.solve_milp(pipe, lam, obj)
+        sb = OPT.solve_brute(pipe, lam, obj)
+        assert sm.feasible == sb.feasible
+        if sm.feasible:
+            assert sm.objective == pytest.approx(sb.objective)
+            assert sm.latency == pytest.approx(sb.latency)
+
+
+# ---------------------------------------------------------------------------
+# zero-demand queueing semantics (the lam=0 blow-up fix)
+# ---------------------------------------------------------------------------
+def test_queue_delay_zero_demand():
+    d = queue_delay(np.array([1, 2, 8]), 0.0)
+    assert d[0] == 0.0 and np.isinf(d[1]) and np.isinf(d[2])
+    assert float(queue_delay(1, -1.0)) == 0.0
+    assert expected_wait(1, 0.0) == 0.0
+    assert expected_wait(4, 0.0) == float("inf")
+    # the simulator timeout degrades to exactly max_wait, never overflows
+    assert wait_bound(8, 0.0, max_wait=0.5) == 0.5
+    assert wait_bound(1, 0.0, max_wait=0.5) == 0.0
+
+
+def test_planner_zero_demand_feasible_at_batch_one():
+    pipe = diamond()
+    sol = OPT.solve_vec(pipe, 0.0)
+    assert sol.feasible
+    assert all(sc.batch == 1 for sc in sol.config.stages)
+    assert np.isfinite(sol.latency)
+    sb = OPT.solve_brute(pipe, 0.0)
+    assert sol.config == sb.config and sol.objective == sb.objective
+
+
+@pytest.mark.parametrize("cls", [PipelineSimulator, StructPipelineSimulator])
+def test_simulator_zero_demand_estimate_serves(cls):
+    """lam_est=0 (an idle interval) must not blow up batch timeouts: a
+    sub-filled batch still dispatches at max_wait and completes."""
+    pipe = PipelineModel("c2", (stage("a", 0.02), stage("b", 0.01)))
+    cfg = PipelineConfig((StageConfig("a0", 4, 1), StageConfig("b0", 1, 1)))
+    sim = cls(pipe, cfg, max_wait=0.25)
+    sim.lam_est = 0.0
+    sim.inject_arrivals(np.array([1.0]))
+    sim.run_until(10.0)
+    m = sim.metrics
+    assert m.completed == 1 and m.dropped == 0
+    # dispatched at the max_wait cap, not after an ~1e9 s clamp artifact
+    assert float(m.latencies[0]) == pytest.approx(
+        0.25 + float(pipe.stages[0].variants[0].latency(1))
+        + float(pipe.stages[1].variants[0].latency(1)))
+
+
+# ---------------------------------------------------------------------------
+# variant tie-breaks (equal accuracy -> cheaper; equal alloc -> more accurate)
+# ---------------------------------------------------------------------------
+def test_heaviest_prefers_cheaper_at_equal_accuracy():
+    s = StageModel("t", (ModelVariant("pricy", 80.0, 8, (0.0, 0.01, 0.01)),
+                         ModelVariant("cheap", 80.0, 2, (0.0, 0.01, 0.01)),
+                         ModelVariant("light", 60.0, 1, (0.0, 0.005, 0.005))),
+                   sla=0.5)
+    assert s.heaviest.name == "cheap"
+
+
+def test_lightest_prefers_more_accurate_at_equal_alloc():
+    s = StageModel("t", (ModelVariant("worse", 55.0, 1, (0.0, 0.01, 0.01)),
+                         ModelVariant("better", 70.0, 1, (0.0, 0.01, 0.01)),
+                         ModelVariant("heavy", 80.0, 4, (0.0, 0.02, 0.02))),
+                   sla=0.5)
+    assert s.lightest.name == "better"
+
+
+def test_latency_coeffs_docstring_order():
+    # (α, β, γ) multiply (b², b, 1) in that order
+    v = ModelVariant("v", 50.0, 1, (1.0, 10.0, 100.0))
+    assert float(v.latency(2)) == pytest.approx(1.0 * 4 + 10.0 * 2 + 100.0)

@@ -1,0 +1,256 @@
+"""DAG routing in both event cores: fan-out, wait-for-all-parents joins,
+§4.5 drop propagation, conservation invariants, chain bit-identity with
+explicit path-graph parents, and a pinned golden video fan-out trace."""
+import numpy as np
+import pytest
+
+from repro.core.paper_profiles import video_fanout
+from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
+                                 StageConfig, StageModel)
+from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
+                                  StructPipelineSimulator)
+
+CORES = (PipelineSimulator, StructPipelineSimulator)
+
+
+def var(name, l1, acc=70.0, alloc=1):
+    return ModelVariant(name, acc, alloc, (0.0, l1 * 0.7, l1 * 0.3))
+
+
+def stage(name, l1, sla=None):
+    return StageModel(name, (var(name + "0", l1),),
+                      sla=sla if sla is not None else 5 * l1,
+                      batch_choices=(1, 2, 4))
+
+
+def diamond(l_fast=0.01, l_slow=0.05):
+    """0 -> (1 fast, 2 slow) -> 3 join."""
+    stages = (stage("src", 0.01), stage("fast", l_fast),
+              stage("slow", l_slow), stage("sink", 0.01))
+    return PipelineModel("diamond", stages,
+                         parents=((), (0,), (0,), (1, 2)))
+
+
+def unit_config(pipe, batch=1, replicas=1):
+    return PipelineConfig(tuple(
+        StageConfig(s.variants[0].name, batch, replicas)
+        for s in pipe.stages))
+
+
+def drain(sim, times, horizon_pad=10.0, lam=None):
+    if lam is not None:
+        sim.lam_est = lam
+    sim.inject_arrivals(np.asarray(times, dtype=np.float64))
+    sim.run_until(float(np.max(times)) + horizon_pad)
+    return sim
+
+
+def assert_clean(sim):
+    """No leaked DAG tracking state once the pipeline drains."""
+    assert all(not d for d in sim._inflight)
+    assert all(not s for s in sim._dead)
+    assert all(not b for b in sim._join_buf if b is not None)
+    m = sim.metrics_by_pipe[0]
+    assert m.arrived == m.completed + m.dropped
+
+
+# ---------------------------------------------------------------------------
+# join semantics
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls", CORES)
+def test_join_waits_for_slowest_parent(cls):
+    pipe = diamond(l_fast=0.01, l_slow=0.05)
+    sim = cls(pipe, unit_config(pipe))
+    drain(sim, [1.0], lam=1.0)
+    m = sim.metrics
+    assert m.completed == 1 and m.dropped == 0
+    # e2e = src + max(fast, slow) + sink: the fast branch waits at the join
+    assert float(m.latencies[0]) == pytest.approx(0.01 + 0.05 + 0.01)
+    assert_clean(sim)
+
+
+@pytest.mark.parametrize("cls", CORES)
+def test_fanout_without_join_completes_once_per_request(cls):
+    # 0 -> (1, 2): two sinks is invalid, so join them; the point is the
+    # arrival stream is replicated, every stage sees all requests
+    pipe = diamond()
+    sim = cls(pipe, unit_config(pipe, batch=2, replicas=2))
+    times = np.linspace(1.0, 3.0, 12)
+    drain(sim, times, lam=6.0)
+    m = sim.metrics
+    assert m.arrived == 12
+    assert m.completed == 12          # exactly once each, despite 2 branches
+    assert_clean(sim)
+
+
+@pytest.mark.parametrize("cls", CORES)
+def test_join_matches_requests_not_positions(cls):
+    """Batch boundaries differ per branch (different batch sizes), so the
+    join must match by request id, not delivery position."""
+    pipe = diamond(l_fast=0.01, l_slow=0.03)
+    cfg = PipelineConfig((StageConfig("src0", 1, 1),
+                          StageConfig("fast0", 4, 1),
+                          StageConfig("slow0", 1, 2),
+                          StageConfig("sink0", 2, 1)))
+    sim = cls(pipe, cfg)
+    times = np.linspace(1.0, 1.5, 9)
+    drain(sim, times, lam=18.0)
+    m = sim.metrics
+    assert m.completed + m.dropped == 9
+    assert m.completed >= 1
+    assert_clean(sim)
+
+
+# ---------------------------------------------------------------------------
+# §4.5 drop propagation
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls", CORES)
+def test_drop_cancels_sibling_branch(cls):
+    """A request dropped on one branch must not linger in the sibling
+    queue or the join buffer, and is counted dropped exactly once."""
+    pipe = diamond(l_fast=0.01, l_slow=0.2)
+    # slow branch with zero-capacity pressure: 1 replica, long service
+    cfg = PipelineConfig((StageConfig("src0", 1, 2),
+                          StageConfig("fast0", 1, 2),
+                          StageConfig("slow0", 1, 1),
+                          StageConfig("sink0", 1, 2)))
+    sim = cls(pipe, cfg, drop_factor=1.0, max_wait=0.1)
+    times = np.cumsum(np.full(60, 1 / 30.0))  # 30 rps >> slow capacity 5rps
+    drain(sim, times, lam=30.0)
+    m = sim.metrics
+    assert m.dropped > 0
+    assert m.completed + m.dropped == 60
+    assert_clean(sim)
+
+
+@pytest.mark.parametrize("cls", CORES)
+def test_overload_conservation_and_no_leak(cls):
+    pipe = diamond()
+    sim = cls(pipe, unit_config(pipe), drop_factor=1.0, max_wait=0.05)
+    rng = np.random.default_rng(3)
+    times = np.cumsum(rng.exponential(1 / 200.0, 2000))
+    drain(sim, times, lam=200.0)
+    m = sim.metrics
+    assert m.dropped > 0
+    assert_clean(sim)
+
+
+# ---------------------------------------------------------------------------
+# both cores bit-identical on DAGs
+# ---------------------------------------------------------------------------
+def _replay(cls, pipe, cfg, lam, n, drop_factor, seed):
+    rng = np.random.default_rng(seed)
+    times = np.cumsum(rng.exponential(1.0 / lam, n))
+    sim = cls(pipe, cfg, drop_factor=drop_factor, max_wait=0.05)
+    drain(sim, times, lam=lam)
+    m = sim.metrics
+    assert_clean(sim)
+    return (m.arrived, m.completed, m.dropped, sim.events_processed,
+            m.latencies.tobytes())
+
+
+@pytest.mark.parametrize("lam,n,df", [(20.0, 400, 2.0), (300.0, 2000, 1.0),
+                                      (80.0, 1500, 1.5)])
+def test_struct_core_bit_identical_on_dag(lam, n, df):
+    pipe = diamond()
+    cfg = unit_config(pipe, batch=2)
+    h = _replay(PipelineSimulator, pipe, cfg, lam, n, df, seed=0)
+    s = _replay(StructPipelineSimulator, pipe, cfg, lam, n, df, seed=0)
+    assert h == s
+
+
+# ---------------------------------------------------------------------------
+# chains with explicit path-graph parents stay on the chain fast path
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("cls", CORES)
+def test_explicit_chain_parents_bit_identical_to_implicit(cls):
+    stages = (stage("a", 0.05), stage("b", 0.03))
+    implicit = PipelineModel("tiny", stages)
+    explicit = PipelineModel("tiny", stages, parents=((), (0,)))
+    cfg = PipelineConfig((StageConfig("a0", 2, 2), StageConfig("b0", 2, 1)))
+    rng = np.random.default_rng(11)
+    times = np.cumsum(rng.exponential(1 / 15.0, 500))
+    out = []
+    for pipe in (implicit, explicit):
+        sim = cls(pipe, cfg, drop_factor=1.5, max_wait=0.1)
+        drain(sim, times, lam=15.0)
+        m = sim.metrics
+        out.append((m.arrived, m.completed, m.dropped,
+                    sim.events_processed, m.latencies.tobytes()))
+        # an explicit path graph is a chain: no DAG bookkeeping engaged
+        assert not any(sim._dag_pipe)
+        assert all(not d for d in sim._inflight)
+    assert out[0] == out[1]
+
+
+# ---------------------------------------------------------------------------
+# golden seeded trace: the video fan-out preset, both cores, pinned
+# ---------------------------------------------------------------------------
+GOLDEN = dict(arrived=800, completed=794, dropped=6, events=4210,
+              n_reconfigs=1, lat_sum=713.0026923255647,
+              lat_max=1.7732977636746003)
+
+
+@pytest.mark.parametrize("cls", CORES)
+def test_golden_video_fanout_trace_is_pinned(cls):
+    """End-to-end witness for the DAG machinery on the paper-profile
+    fan-out preset, with a mid-trace reconfiguration.  Any change to
+    fan-out routing, join matching, drop propagation or reconfig
+    handling shows up here first — in either core."""
+    pipe = video_fanout()
+    cfg1 = PipelineConfig((StageConfig("decode-fixed", 1, 1),
+                           StageConfig("yolov5m", 4, 2),
+                           StageConfig("resnet50", 4, 2),
+                           StageConfig("fusion-fixed", 1, 1)))
+    cfg2 = PipelineConfig((StageConfig("decode-fixed", 1, 1),
+                           StageConfig("yolov5s", 2, 3),
+                           StageConfig("resnet34", 2, 2),
+                           StageConfig("fusion-fixed", 1, 1)))
+    rng = np.random.default_rng(42)
+    times = np.cumsum(rng.exponential(1 / 12.0, 600))
+    sim = cls(pipe, cfg1, drop_factor=1.2, max_wait=0.3)
+    sim.lam_est = 12.0
+    sim.inject_arrivals(times)
+    sim.run_until(float(times[-1]) + 10.0)
+    sim.reconfigure(cfg2)
+    t2 = np.cumsum(rng.exponential(1 / 12.0, 200)) + sim.now
+    sim.inject_arrivals(t2)
+    sim.run_until(float(t2[-1]) + 10.0)
+    m = sim.metrics
+    assert m.arrived == GOLDEN["arrived"]
+    assert m.completed == GOLDEN["completed"]
+    assert m.dropped == GOLDEN["dropped"]
+    assert sim.events_processed == GOLDEN["events"]
+    assert sim.n_reconfigs == GOLDEN["n_reconfigs"]
+    assert float(m.latencies.sum()) == GOLDEN["lat_sum"]
+    assert float(m.latencies.max()) == GOLDEN["lat_max"]
+    assert_clean(sim)
+
+
+# ---------------------------------------------------------------------------
+# DAG + chain sharing one cluster heap
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("make", [
+    lambda: ClusterSimulator,
+    lambda: __import__("repro.core.simulator", fromlist=["x"]
+                       ).StructClusterSimulator,
+])
+def test_mixed_cluster_dag_and_chain(make):
+    from repro.core.cluster import ClusterConfig, ClusterModel
+    dag = diamond()
+    chain = PipelineModel("chain", (stage("c1", 0.02), stage("c2", 0.02)))
+    cluster = ClusterModel("mixed", (dag, chain))
+    config = ClusterConfig((unit_config(dag),
+                            PipelineConfig((StageConfig("c10", 1, 1),
+                                            StageConfig("c20", 1, 1)))))
+    sim = make()(cluster, config)
+    rng = np.random.default_rng(5)
+    for p in (0, 1):
+        sim.set_lam_est(p, 10.0)
+        sim.inject_arrivals(np.cumsum(rng.exponential(0.1, 100)), pipeline=p)
+    sim.run_until(60.0)
+    for p in (0, 1):
+        m = sim.metrics_by_pipe[p]
+        assert m.arrived == 100
+        assert m.completed + m.dropped == 100
+    assert not sim._inflight[0] and not sim._inflight[1]

@@ -464,6 +464,23 @@ def test_golden_cluster_trace_is_pinned():
     assert sim.queued == 0 and sim.in_service == 0
 
 
+@pytest.mark.parametrize("name", sorted(EQUIV_TRACES))
+def test_explicit_chain_parents_take_chain_fast_path(name):
+    """A chain spelled as an explicit path graph (``parents=((), (0,))``)
+    must be event-for-event identical to the implicit-chain form: the DAG
+    machinery (request ids, join buffers, fan-out routing) must not
+    engage at all for linear topologies."""
+    explicit = PipelineModel("tiny", PIPE.stages, parents=((), (0,)))
+    config, arrivals, horizon = EQUIV_TRACES[name]
+    a = replay(PipelineSimulator, PIPE, config, arrivals, horizon)
+    b = replay(PipelineSimulator, explicit, config, arrivals, horizon)
+    assert not any(b._dag_pipe)
+    assert b.metrics.completed == a.metrics.completed
+    assert b.metrics.dropped == a.metrics.dropped
+    assert b.events_processed == a.events_processed
+    np.testing.assert_array_equal(b.metrics.latencies, a.metrics.latencies)
+
+
 def test_reconfigure_variant_switch_applies_cold_start():
     pipe = two_stage(extra_variant=True)
     sim = PipelineSimulator(pipe, PipelineConfig(
