@@ -33,6 +33,16 @@ trajectory means are NOT construction-guaranteed — hold dynamics differ
 between policies — so they gate only the full run, where they are
 deterministic under the fixed seeds.)  Wired into ``scripts/tier1.sh``.
 
+The ``hetero`` scenario makes device class a planning axis: every variant
+also ships a faster gpu build, the budget is per-class
+(``{"cpu": C, "gpu": small}``) and the joint multi-dimensional knapsack
+is gated against a family of per-class proportional splits (demand,
+uniform, midpoint) — split feasible sets are subsets of the joint's, so
+joint >= every split is construction-guaranteed pointwise, the full run
+demands a strict win somewhere plus a realized mean-PAS win, every solve
+(including a 60-pipeline scale probe) must fit the 10 s decision
+interval, and both event cores must replay each plan bit-identically.
+
 The ``switch`` scenario replays the joint policy with the §5.3 adaptation
 window modeled (8 s during which a reconfigured pipeline serves its old
 config) with and without switch-cost hysteresis, recording
@@ -64,8 +74,8 @@ from repro.core import adapter as AD                      # noqa: E402
 from repro.core import baselines as BL                    # noqa: E402
 from repro.core import optimizer as OPT                   # noqa: E402
 from repro.core.cluster import ClusterModel               # noqa: E402
-from repro.core.pipeline import (ModelVariant, PipelineModel,  # noqa: E402
-                                 StageModel)
+from repro.core.pipeline import (DeviceProfile, ModelVariant,  # noqa: E402
+                                 PipelineModel, StageModel)
 
 POLICIES = ("ipa", "split_ipa", "split_fa2_low", "split_fa2_high",
             "split_rim")
@@ -79,6 +89,10 @@ OBJ = OPT.Objective(alpha=1.0, beta=0.02, delta=1e-6, metric="pas")
 # through accuracy-driven switches and loses realized PAS.
 ADAPT_DELAY_S = 8.0
 SWITCH_COST = 0.08
+# decision ceiling for the hetero scenario: every joint multi-dimensional
+# knapsack solve — including the 60-pipeline scale probe — must fit the
+# 10 s adaptation interval
+SOLVE_CEILING_S = 10.0
 
 
 def _pipeline(name: str, l1a: float, l1b: float, accs) -> PipelineModel:
@@ -299,6 +313,199 @@ def dag_scenario(smoke: bool):
     return record, fails
 
 
+def _hetero_pipeline(name: str, l1a: float, l1b: float, accs,
+                     gpu_speed: float = 4.0) -> PipelineModel:
+    """``_pipeline`` with a gpu build per variant: ``gpu_speed``x faster at
+    one gpu unit per replica and +2 accuracy (reduced-precision builds are
+    profiled separately) — every pipeline *wants* the gpu, so a scarce gpu
+    budget creates the contention the joint solver has to arbitrate."""
+    def stage(sname, l1):
+        variants = []
+        for tag, acc, alloc, scale in zip(
+                ("light", "mid", "heavy"), accs, (1, 2, 4), (1.0, 1.8, 3.2)):
+            coeffs = (l1 * scale * 0.002, l1 * scale * 0.7, l1 * scale * 0.3)
+            gpu_coeffs = tuple(c / gpu_speed for c in coeffs)
+            variants.append(ModelVariant(
+                f"{sname}_{tag}", acc, alloc, coeffs,
+                device_profiles=(DeviceProfile("cpu", coeffs, alloc, acc),
+                                 DeviceProfile("gpu", gpu_coeffs, 1,
+                                               acc + 2.0))))
+        return StageModel(sname, tuple(variants), sla=5 * l1 * 1.8,
+                          batch_choices=(1, 2, 4, 8, 16))
+    return PipelineModel(name, (stage(f"{name}_a", l1a),
+                                stage(f"{name}_b", l1b)))
+
+
+def make_hetero_cluster(n_pipelines: int, cpu: float, gpu: float
+                        ) -> ClusterModel:
+    protos = [
+        _hetero_pipeline("vision", 0.040, 0.030, (55.0, 71.0, 82.0)),
+        _hetero_pipeline("audio", 0.050, 0.020, (62.0, 70.0, 76.0)),
+        _hetero_pipeline("nlp", 0.030, 0.030, (66.0, 74.0, 80.0)),
+        _hetero_pipeline("video", 0.045, 0.025, (52.0, 68.0, 84.0)),
+    ]
+    pipes = tuple(protos[i % len(protos)] if i < len(protos) else
+                  _hetero_pipeline(f"{protos[i % len(protos)].name}{i}",
+                                   0.030 + 0.005 * (i % 4),
+                                   0.020 + 0.004 * (i % 3),
+                                   (55.0 + (i % 5), 70.0 + (i % 4),
+                                    80.0 + (i % 6)))
+                  for i in range(n_pipelines))
+    return ClusterModel("bench_hetero", pipes, cores={"cpu": cpu, "gpu": gpu})
+
+
+def _split_objective(cluster, lams, shares, cache=None):
+    """Objective of a generic per-class proportional split: pipeline i
+    plans alone inside ``shares[i]`` of EVERY class budget.  Any such
+    partition's feasible set is a subset of the joint solver's, so the
+    joint objective is >= this by construction.  Returns -inf when any
+    share is infeasible (the split policy would hold)."""
+    classes = cluster.device_classes
+    budgets = cluster.budget_vector
+    total = 0.0
+    for pipe, lam, share, w in zip(cluster.pipelines, lams, shares,
+                                   cluster.weights):
+        cap = tuple(share * b for b in budgets)
+        sol = OPT.solve_capped(pipe, lam, OBJ, cap, cache=cache,
+                               classes=classes)
+        if not sol.feasible:
+            return -np.inf
+        total += w * sol.objective
+    return total
+
+
+def hetero_scenario(smoke: bool, seconds: int):
+    """Device class as a planning axis: joint multi-dimensional knapsack
+    vs per-class proportional splits under gpu contention.
+
+    Gates (construction-guaranteed, never flaky):
+      * at every adaptation boundary's demand vector, the joint solver's
+        objective is >= EVERY per-class proportional split tried (demand-
+        proportional, uniform, and their midpoint) — each split's
+        feasible set is a subset of the joint's;
+      * every joint solve finishes under ``SOLVE_CEILING_S``, including a
+        wide scale probe (60 pipelines full, 12 smoke);
+      * the chosen plans replay bit-identically through both event cores.
+    The full run additionally requires a strict win over the *best* split
+    at some boundary (gpu contention must actually pay) and a realized
+    mean-PAS win for the joint trace over ``split_ipa``.
+    Returns (record, failures)."""
+    n = 2 if smoke else 3
+    gpu_budget = 2.0 if smoke else 3.0
+    base = make_hetero_cluster(n, cpu=1.0, gpu=gpu_budget)
+    rates = anti_correlated_traces(seconds, n, seed=13)
+    # size the cpu budget off the cpu-only demand peak (the homogeneous
+    # cluster shares the hetero pipelines' cpu tables) so bursts bind on
+    # cpu and the scarce gpu is genuinely contended
+    cpu_budget = float(pick_budget(
+        ClusterModel("tmp", make_cluster(n).pipelines, float("inf")), rates))
+    cluster = ClusterModel(base.name, base.pipelines,
+                           cores={"cpu": cpu_budget, "gpu": gpu_budget})
+    print(f"hetero: {n} pipelines, C={{cpu: {cpu_budget:.0f}, "
+          f"gpu: {gpu_budget:.0f}}}, {seconds}s traces")
+    fails = []
+    cache = OPT.FrontierCache()
+    uniform = [1.0 / n] * n
+    rows = []
+    strict_win = False
+    max_solve = 0.0
+    interval = 10.0
+    for t0 in np.arange(0.0, float(max(len(r) for r in rates)), interval):
+        lam_hat = [AD.reactive_demand(r, float(t0), interval) for r in rates]
+        joint = BL.cluster_ipa(cluster, lam_hat, OBJ, cache=cache)
+        max_solve = max(max_solve, joint.solve_time)
+        demand = [lam / sum(lam_hat) for lam in lam_hat]
+        split_objs = {
+            "demand": _split_objective(cluster, lam_hat, demand, cache),
+            "uniform": _split_objective(cluster, lam_hat, uniform, cache),
+            "mid": _split_objective(
+                cluster, lam_hat,
+                [(d + u) / 2 for d, u in zip(demand, uniform)], cache),
+        }
+        best_name = max(split_objs, key=lambda k: split_objs[k])
+        best = split_objs[best_name]
+        if np.isfinite(best):
+            if not joint.feasible or joint.objective < best - 1e-9:
+                fails.append(
+                    f"hetero: joint "
+                    f"{joint.objective if joint.feasible else 'infeasible'} "
+                    f"< split[{best_name}] {best} at t={t0} lam={lam_hat}")
+            elif joint.objective > best + 1e-9:
+                strict_win = True
+        rows.append({"t": float(t0),
+                     "joint_objective": round(joint.objective, 4)
+                     if joint.feasible else None,
+                     "best_split": best_name,
+                     "split_objectives": {k: (round(v, 4)
+                                              if np.isfinite(v) else None)
+                                          for k, v in split_objs.items()},
+                     "solve_s": round(joint.solve_time, 4)})
+    if max_solve > SOLVE_CEILING_S:
+        fails.append(f"hetero: joint solve took {max_solve:.2f}s "
+                     f"(> {SOLVE_CEILING_S}s decision ceiling)")
+    if not smoke and not strict_win:
+        fails.append("hetero: joint never strictly beat the best per-class "
+                     "split at any boundary — gpu contention buys nothing")
+
+    # scale probe: one wide joint solve must fit the decision interval
+    n_wide = 12 if smoke else 60
+    wide = make_hetero_cluster(n_wide, cpu=float(n_wide * 8),
+                               gpu=float(max(n_wide // 4, 4)))
+    lams_wide = [4.0 + (i % 7) for i in range(n_wide)]
+    sol_wide = BL.cluster_ipa(wide, lams_wide, OBJ)
+    if not sol_wide.feasible:
+        fails.append(f"hetero: {n_wide}-pipeline scale probe infeasible")
+    if sol_wide.solve_time > SOLVE_CEILING_S:
+        fails.append(f"hetero: {n_wide}-pipeline solve took "
+                     f"{sol_wide.solve_time:.2f}s (> {SOLVE_CEILING_S}s)")
+    print(f"hetero: scale probe n={n_wide} solve={sol_wide.solve_time:.2f}s "
+          f"max boundary solve={max_solve:.3f}s")
+
+    # realized traces, both policies, both event cores bit-identical
+    realized = {}
+    for pol in ("ipa", "split_ipa"):
+        reps = {}
+        for core in ("heap", "struct"):
+            res = AD.run_cluster_trace(cluster, rates, policy=pol, obj=OBJ,
+                                       seed=11, event_core=core)
+            reps[core] = res
+        a, b = reps["heap"], reps["struct"]
+        sig = lambda r: (r.sim_events, r.n_reconfigs, r.completed, r.dropped,  # noqa: E731,E501
+                         round(r.peak_serving_cores, 6),
+                         tuple((p.arrived, p.completed, p.dropped)
+                               for p in r.per_pipeline))
+        if sig(a) != sig(b):
+            fails.append(f"hetero: event cores diverged for {pol}: "
+                         f"{sig(a)} vs {sig(b)}")
+        realized[pol] = {
+            "mean_pas": round(a.mean_pas, 3),
+            "mean_cost": round(a.mean_cost, 2),
+            "dropped": a.dropped, "completed": a.completed,
+            "sim_events": a.sim_events, "n_reconfigs": a.n_reconfigs,
+            "peak_serving_cores": round(a.peak_serving_cores, 2),
+        }
+        print(f"hetero/{pol}: pas={realized[pol]['mean_pas']} "
+              f"cost={realized[pol]['mean_cost']} "
+              f"dropped={realized[pol]['dropped']}")
+    if not smoke and realized["ipa"]["mean_pas"] <= \
+            realized["split_ipa"]["mean_pas"]:
+        fails.append(f"hetero: realized joint PAS "
+                     f"{realized['ipa']['mean_pas']} <= split "
+                     f"{realized['split_ipa']['mean_pas']}")
+    record = {
+        "n_pipelines": n,
+        "budgets": {"cpu": cpu_budget, "gpu": gpu_budget},
+        "max_boundary_solve_s": round(max_solve, 4),
+        "scale_probe": {"n_pipelines": n_wide,
+                        "solve_s": round(sol_wide.solve_time, 4),
+                        "ceiling_s": SOLVE_CEILING_S},
+        "strict_win": strict_win,
+        "realized": realized,
+        "boundaries": rows,
+    }
+    return record, fails
+
+
 def bench_policies(cluster, rates, policies) -> dict:
     out = {}
     for pol in policies:
@@ -361,9 +568,12 @@ def main() -> int:
     switch_rec, switch_fails = switch_scenario(cluster, rates, seconds,
                                                args.smoke)
     dag_rec, dag_fails = dag_scenario(args.smoke)
+    hetero_rec, hetero_fails = hetero_scenario(args.smoke,
+                                               40 if args.smoke else seconds)
 
     # pointwise arbitration health: construction-guaranteed, never flaky
-    fails = solver_dominance_check(cluster, rates) + switch_fails + dag_fails
+    fails = (solver_dominance_check(cluster, rates) + switch_fails
+             + dag_fails + hetero_fails)
     if not args.smoke:
         # realized headline (deterministic under the fixed seeds): joint
         # strictly beats every split on mean PAS at the same budget
@@ -393,6 +603,7 @@ def main() -> int:
         "policies": results,
         "switch": switch_rec,
         "dag": dag_rec,
+        "hetero": hetero_rec,
     }
     if not args.smoke or args.out:
         out = args.out or os.path.join(os.path.dirname(__file__), "..",

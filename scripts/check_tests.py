@@ -1,0 +1,54 @@
+#!/usr/bin/env python
+"""Tier-1 suite-count ratchet: the fast tier may only grow.
+
+Reads the junit XML that ``scripts/tier1.sh`` asks pytest to emit and
+fails if the number of collected tier-1 test cases ever falls below the
+recorded floor (``scripts/tier1_test_floor.txt``).  A silently
+import-broken or accidentally deselected module shrinks the count long
+before anyone notices missing coverage — this turns that into a loud
+failure.  When the suite grows, the checker says so; bump the floor in
+the same PR that adds the tests so the ratchet holds for the next one.
+
+Usage: check_tests.py <junit-xml-path>
+"""
+from __future__ import annotations
+
+import os
+import sys
+import xml.etree.ElementTree as ET
+
+FLOOR_FILE = os.path.join(os.path.dirname(__file__), "tier1_test_floor.txt")
+
+
+def main() -> int:
+    if len(sys.argv) != 2:
+        print(__doc__)
+        return 2
+    root = ET.parse(sys.argv[1]).getroot()
+    suites = root.iter("testsuite")
+    tests = errors = failures = 0
+    for s in suites:
+        tests += int(s.get("tests", 0))
+        errors += int(s.get("errors", 0))
+        failures += int(s.get("failures", 0))
+    with open(FLOOR_FILE) as f:
+        floor = int(f.read().strip())
+    print(f"tier-1 suite: {tests} tests collected "
+          f"(floor {floor}, errors {errors}, failures {failures})")
+    if errors or failures:
+        print("FAIL: tier-1 tests errored/failed (see pytest output)")
+        return 1
+    if tests < floor:
+        print(f"FAIL: tier-1 suite shrank to {tests} < floor {floor} — a "
+              "test module stopped collecting (import error, accidental "
+              "mark, deleted file).  Restore it or justify lowering the "
+              "floor explicitly.")
+        return 1
+    if tests > floor:
+        print(f"note: suite grew past the floor ({tests} > {floor}); bump "
+              f"{os.path.relpath(FLOOR_FILE)} in this PR")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

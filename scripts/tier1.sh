@@ -20,15 +20,27 @@
 # mode), and on the sweep harness (sweep --smoke: a tiny grid must hash
 # identically at nproc=1 and nproc=4, and on >=4-CPU hosts the 4-worker
 # pass must clear a 2x speedup floor — skipped, never faked, below
-# that).  Slow tests (LSTM training, jax decode loops) stay opt-in via
-# `pytest -m slow`.  The doc-link checker fails if README.md /
+# that), and on the hetero scenario (bench_cluster --smoke: joint
+# multi-dimensional knapsack >= every per-class proportional split at
+# every boundary, every solve under the 10 s decision ceiling including
+# the wide scale probe, both event cores bit-identical).  Slow tests
+# (LSTM training, jax decode loops) stay opt-in via `pytest -m slow`.
+# The pytest step enforces the fast tier two ways: --enforce-fast fails
+# any un-marked test slower than 2 s (tests/conftest.py), and
+# scripts/check_tests.py ratchets the collected-test count against
+# scripts/tier1_test_floor.txt so the suite can only grow — a module
+# that silently stops collecting is a loud failure, not missing
+# coverage.  The doc-link checker fails if README.md /
 # docs/ARCHITECTURE.md reference a file or symbol that no longer exists.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-python -m pytest -x -q
+JUNIT="$(mktemp /tmp/tier1_tests.XXXXXX.xml)"
+trap 'rm -f "$JUNIT"' EXIT
+python -m pytest -x -q --enforce-fast --junitxml="$JUNIT"
+python scripts/check_tests.py "$JUNIT"
 python benchmarks/bench_simulator.py --smoke
 python benchmarks/bench_cluster.py --smoke
 python benchmarks/bench_scale.py --smoke

@@ -24,7 +24,7 @@ def pas(accs: Sequence[float]) -> float:
 
 
 def pas_of(config: PipelineConfig, pipe: PipelineModel) -> float:
-    return pas([st.variant(sc.variant).accuracy
+    return pas([st.variant(sc.variant).acc(sc.device)
                 for sc, st in zip(config.stages, pipe.stages)])
 
 
@@ -38,13 +38,19 @@ def rank_normalized(accuracies: Sequence[float]) -> np.ndarray:
 
 
 def pas_prime_tables(pipe: PipelineModel):
-    """Per-stage rank-normalized accuracy lookup for PAS' (Eq. 11)."""
-    return [dict(zip((v.name for v in st.variants),
-                     rank_normalized([v.accuracy for v in st.variants])))
-            for st in pipe.stages]
+    """Per-stage rank-normalized accuracy lookup for PAS' (Eq. 11), keyed
+    ``(variant name, device class)``.  Ranks run over the stage's flattened
+    (variant, class) accuracy list in declaration order — for single-class
+    stages that is exactly the legacy per-variant ranking."""
+    out = []
+    for st in pipe.stages:
+        pairs = [(v.name, d) for v in st.variants for d in v.device_classes]
+        accs = [st.variant(n).acc(d) for n, d in pairs]
+        out.append(dict(zip(pairs, rank_normalized(accs))))
+    return out
 
 
 def pas_prime_of(config: PipelineConfig, pipe: PipelineModel) -> float:
     tables = pas_prime_tables(pipe)
-    return float(sum(t[sc.variant]
+    return float(sum(t[(sc.variant, sc.device)]
                      for t, sc in zip(tables, config.stages)))

@@ -357,6 +357,36 @@ def _staged_admission(cluster, mixed: ClusterConfig,
     total = sum(hold_c)
     chosen = list(committed)
     flags = [False] * cluster.n_pipelines
+    if getattr(cluster, "is_hetero", False):
+        # per-class ledgers: the same greedy order (ascending total-charge
+        # delta), but a change is admitted only when *every* class fits
+        classes = cluster.device_classes
+        serve_v = [np.asarray(s.cost_by_class(pipe, classes))
+                   for s, pipe in zip(serving, cluster.pipelines)]
+        hold_v = [np.maximum(sv, np.asarray(c.cost_by_class(pipe, classes)))
+                  for sv, c, pipe in zip(serve_v, committed,
+                                         cluster.pipelines)]
+        total_v = np.sum(hold_v, axis=0)
+        budget_v = np.asarray(cluster.budget_vector)
+        deltas = sorted(
+            (float(np.sum(np.maximum(
+                serve_v[p],
+                np.asarray(mixed.pipelines[p].cost_by_class(pipe, classes)))
+                - hold_v[p])), p)
+            for p, pipe in enumerate(cluster.pipelines)
+            if mixed.pipelines[p] != committed[p])
+        for _, p in deltas:
+            pipe = cluster.pipelines[p]
+            new_hold = np.maximum(
+                serve_v[p],
+                np.asarray(mixed.pipelines[p].cost_by_class(pipe, classes)))
+            cand = total_v + (new_hold - hold_v[p])
+            if bool(np.all(cand <= budget_v + 1e-9)):
+                chosen[p] = mixed.pipelines[p]
+                flags[p] = True
+                total_v = cand
+                hold_v[p] = new_hold
+        return ClusterConfig(tuple(chosen)), flags
     deltas = sorted(
         (max(serve_c[p], mixed.pipelines[p].cost(pipe)) - hold_c[p], p)
         for p, pipe in enumerate(cluster.pipelines)

@@ -33,8 +33,20 @@ import numpy as np
 
 from repro.core import optimizer as OPT
 from repro.core.cluster import (ClusterConfig, ClusterModel,
-                                proportional_split)
+                                proportional_split,
+                                proportional_split_by_class)
 from repro.core.pipeline import PipelineModel
+
+
+def _over_cap(sol: OPT.Solution, pipe: PipelineModel, cap,
+              classes) -> bool:
+    """Does a solved config overflow its static-split share — the scalar
+    cap, or (heterogeneous) any class's cap?"""
+    if classes is None:
+        return sol.cost > cap + 1e-9
+    return any(cv > c + 1e-9
+               for cv, c in zip(sol.config.cost_by_class(pipe, classes),
+                                cap))
 
 
 def fa2(pipe: PipelineModel, arrival: float, level: str = "low",
@@ -149,25 +161,35 @@ def cluster_split(cluster: ClusterModel, lams: Sequence[float],
     ``cache``: optional ``optimizer.FrontierCache`` for the inner ``ipa``
     sub-problem's frontier builds (the other inners do not build
     frontiers and ignore it).
+
+    Heterogeneous clusters split *every class budget* by the same demand
+    share (``proportional_split_by_class``) and cap the inner problems per
+    class — the strongest static-split strawman the ``hetero`` benchmark
+    measures the joint solver against.
     """
     t0 = time.perf_counter()
     o = obj or OPT.Objective()
     weights = cluster.weights
-    caps = proportional_split(cluster, lams)
+    hetero = getattr(cluster, "is_hetero", False)
+    classes = cluster.device_classes if hetero else None
+    if hetero:
+        caps = proportional_split_by_class(cluster, lams)
+    else:
+        caps = proportional_split(cluster, lams)
     sols = []
     for pipe, lam, cap in zip(cluster.pipelines, lams, caps):
         if inner == "ipa":
             sol = OPT.solve_capped(pipe, lam, o, cap, max_replicas,
-                                   cache=cache)
+                                   cache=cache, classes=classes)
         elif inner in ("fa2_low", "fa2_high"):
             sol = fa2(pipe, lam, inner.split("_")[1], max_replicas)
-            if sol.feasible and sol.cost > cap + 1e-9:
+            if sol.feasible and _over_cap(sol, pipe, cap, classes):
                 sol = OPT._infeasible(t0, "split_" + inner)
             if sol.feasible:
                 sol.objective = _objective_of(sol, pipe, o)
         elif inner == "rim":
             sol = rim(pipe, lam, max_replicas=max_replicas)
-            if sol.feasible and sol.cost > cap + 1e-9:
+            if sol.feasible and _over_cap(sol, pipe, cap, classes):
                 sol = OPT._infeasible(t0, "split_rim")
             if sol.feasible:
                 sol.objective = _objective_of(sol, pipe, o)

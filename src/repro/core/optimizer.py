@@ -59,7 +59,7 @@ import dataclasses
 import itertools
 import math
 import time
-from typing import List, Optional, Sequence, Tuple
+from typing import List, Mapping, Optional, Sequence, Tuple
 
 import numpy as np
 
@@ -81,21 +81,27 @@ class Objective:
 
 @dataclasses.dataclass
 class StageOptions:
-    """Per-stage flattened (variant, batch) options with n* substituted."""
+    """Per-stage flattened (variant, device class, batch) options with n*
+    substituted.  Single-class stages (no ``device_profiles`` anywhere)
+    flatten to exactly the legacy (variant, batch) grid in the legacy
+    order, with every ``devices`` entry ``"cpu"``."""
     names: List[str]
     batches: np.ndarray          # (J,)
     lat: np.ndarray              # (J,) model latency + queue delay
-    cost: np.ndarray             # (J,) n* x R_m
+    cost: np.ndarray             # (J,) n* x R_m (in the class's own units)
     acc: np.ndarray              # (J,) raw accuracy (0-100 scale)
     acc_norm: np.ndarray         # (J,) rank-normalized (PAS')
     replicas: np.ndarray         # (J,) n*
     feasible: np.ndarray         # (J,) bool
+    devices: List[str] = dataclasses.field(default_factory=list)
 
 
 def stage_options(stage: StageModel, arrival: float,
                   max_replicas: int = DEFAULT_MAX_REPLICAS,
                   latency_model: str = "worst_case") -> StageOptions:
-    """Flatten a stage's (variant, batch) grid with n* substituted.
+    """Flatten a stage's (variant, device class, batch) grid with n*
+    substituted.  The device loop nests between variant and batch, so a
+    single-class stage enumerates bit-identically to the pre-device grid.
 
     ``latency_model``: ``"worst_case"`` keeps Eq. 7's bound (the default,
     bit-identical to the original planner); ``"expected"`` opts into the
@@ -105,28 +111,34 @@ def stage_options(stage: StageModel, arrival: float,
     if latency_model not in ("worst_case", "expected"):
         raise ValueError(latency_model)
     names, batches, lat, cost, acc, accn, reps, feas = ([] for _ in range(8))
-    norm = dict(zip((v.name for v in stage.variants),
-                    ACC.rank_normalized([v.accuracy for v in stage.variants])))
+    devices: List[str] = []
+    pairs = [(v, d) for v in stage.variants for d in v.device_classes]
+    norm = dict(zip(((v.name, d) for v, d in pairs),
+                    ACC.rank_normalized([v.acc(d) for v, d in pairs])))
     for v in stage.variants:
-        for b in stage.batch_choices:
-            h = float(v.throughput(b))
-            n = max(1, math.ceil(max(arrival, 1e-9) / h)) if h > 0 else max_replicas + 1
-            ok = n <= max_replicas and n * h >= arrival - 1e-9
-            names.append(v.name)
-            batches.append(b)
-            svc = float(v.latency(b))
-            if latency_model == "expected":
-                lat.append(svc + float(expected_wait(b, arrival, n, svc)))
-            else:
-                lat.append(svc + float(queue_delay(b, arrival)))
-            cost.append(n * v.base_alloc)
-            acc.append(v.accuracy)
-            accn.append(norm[v.name])
-            reps.append(n)
-            feas.append(ok)
+        for d in v.device_classes:
+            for b in stage.batch_choices:
+                h = float(v.throughput(b, d))
+                n = (max(1, math.ceil(max(arrival, 1e-9) / h)) if h > 0
+                     else max_replicas + 1)
+                ok = n <= max_replicas and n * h >= arrival - 1e-9
+                names.append(v.name)
+                devices.append(d)
+                batches.append(b)
+                svc = float(v.latency(b, d))
+                if latency_model == "expected":
+                    lat.append(svc + float(expected_wait(b, arrival, n, svc)))
+                else:
+                    lat.append(svc + float(queue_delay(b, arrival)))
+                cost.append(n * v.alloc(d))
+                acc.append(v.acc(d))
+                accn.append(norm[(v.name, d)])
+                reps.append(n)
+                feas.append(ok)
     return StageOptions(names, np.array(batches), np.array(lat),
                         np.array(cost, np.float64), np.array(acc),
-                        np.array(accn), np.array(reps), np.array(feas))
+                        np.array(accn), np.array(reps), np.array(feas),
+                        devices)
 
 
 def _apply_restrictions(pipe: PipelineModel, opts: List[StageOptions],
@@ -139,11 +151,13 @@ def _apply_restrictions(pipe: PipelineModel, opts: List[StageOptions],
     if fixed_replicas is not None:
         for o, stage in zip(opts, pipe.stages):
             o.replicas = np.full_like(o.replicas, fixed_replicas)
-            o.cost = np.array([fixed_replicas * stage.variant(n).base_alloc
-                               for n in o.names], np.float64)
+            o.cost = np.array([fixed_replicas * stage.variant(n).alloc(d)
+                               for n, d in zip(o.names, o.devices)],
+                              np.float64)
             # throughput must still clear arrival at the pinned replication
-            thr = np.array([fixed_replicas * float(stage.variant(n).throughput(b))
-                            for n, b in zip(o.names, o.batches)])
+            thr = np.array(
+                [fixed_replicas * float(stage.variant(n).throughput(b, d))
+                 for n, b, d in zip(o.names, o.batches, o.devices)])
             o.feasible = o.feasible & (thr >= arrival - 1e-9)
     return opts
 
@@ -184,7 +198,7 @@ def _mk_solution(pipe, opts, picks, obj: Objective, arrival, t0, solver):
     lat = cost = bat = 0.0
     for o, j, st in zip(opts, picks, pipe.stages):
         stages.append(StageConfig(o.names[j], int(o.batches[j]),
-                                  int(o.replicas[j])))
+                                  int(o.replicas[j]), o.devices[j]))
         accs.append(o.acc[j])
         lats.append(o.lat[j])
         lat += o.lat[j]
@@ -533,12 +547,18 @@ def solve(pipe: PipelineModel, arrival: float, obj: Objective = Objective(),
 # ---------------------------------------------------------------------------
 @dataclasses.dataclass(frozen=True)
 class FrontierPoint:
-    """One Pareto-optimal (cost, objective) operating point of a pipeline."""
+    """One Pareto-optimal (cost, objective) operating point of a pipeline.
+
+    ``cost_vec``: per-device-class cost vector (aligned with the cluster's
+    sorted ``device_classes``), set only by the heterogeneous frontier /
+    oracle paths — the knapsack weight under per-class budgets.  ``cost``
+    stays the scalar total either way."""
     cost: float                 # integer-valued: sum_s n*_s x R_m
     objective: float            # alpha*acc - beta*cost - delta*batches
     pas: float
     latency: float
     config: PipelineConfig
+    cost_vec: Optional[Tuple[float, ...]] = None
 
 
 def _combo_eval(pipe: PipelineModel, arrival: float, obj: Objective,
@@ -575,8 +595,70 @@ def _combo_eval(pipe: PipelineModel, arrival: float, obj: Objective,
 def _point_config(opts, picks, i) -> PipelineConfig:
     return PipelineConfig(tuple(
         StageConfig(o.names[js[i]], int(o.batches[js[i]]),
-                    int(o.replicas[js[i]]))
+                    int(o.replicas[js[i]]), o.devices[js[i]])
         for o, js in zip(opts, picks)))
+
+
+def _combo_cost_by_class(opts, picks, classes: Sequence[str]) -> np.ndarray:
+    """Per-class cost columns ``(len(classes), n_combos)`` for the decoded
+    combos of ``_combo_eval`` — each stage pick adds its n* x R_m to the
+    row of its chosen device class."""
+    n = len(picks[0]) if picks else 0
+    out = np.zeros((len(classes), n))
+    cidx = {c: i for i, c in enumerate(classes)}
+    for o, js in zip(opts, picks):
+        rows = np.array([cidx[d] for d in o.devices], dtype=np.int64)[js]
+        costs = o.cost[js]
+        for ci in range(len(classes)):
+            mask = rows == ci
+            out[ci][mask] += costs[mask]
+    return out
+
+
+def pareto_frontier_vec(pipe: PipelineModel, arrival: float,
+                        obj: Objective, classes: Tuple[str, ...],
+                        max_replicas: int = DEFAULT_MAX_REPLICAS,
+                        latency_model: str = "worst_case"
+                        ) -> List[FrontierPoint]:
+    """Vector-cost Pareto frontier of one pipeline at one rate: the
+    surviving set under *strict* vector dominance — a combo dies only when
+    some other combo matches or undercuts its cost in **every** device
+    class and strictly beats its objective (exact ``(cost_vec, objective)``
+    duplicates keep the earliest combo).  Strictness makes the prune
+    invisible to the knapsack even on ties, mirroring the scalar
+    discipline of ``_prune_candidates``.  Points come back in combo order
+    with ``cost_vec`` set (aligned with ``classes``)."""
+    opts, picks, cost, score, pas_v, lat = _combo_eval(
+        pipe, arrival, obj, max_replicas, latency_model)
+    n = len(cost)
+    if n == 0:
+        return []
+    cvec = _combo_cost_by_class(opts, picks, classes).T    # (n, C)
+    # score-descending scan (ties: earliest combo first) against the kept
+    # set — kept points are mutually non-dominated, so each candidate only
+    # compares against the (small) frontier built so far
+    order = np.lexsort((np.arange(n), -score))
+    kept: List[int] = []
+    kept_cost: List[np.ndarray] = []
+    kept_score: List[float] = []
+    for i in order:
+        ci, si = cvec[i], float(score[i])
+        dominated = False
+        for kc, ks in zip(kept_cost, kept_score):
+            if (kc <= ci).all() and (ks > si or
+                                     (ks == si and (kc == ci).all())):
+                dominated = True        # strictly beaten, or exact duplicate
+                break
+        if dominated:
+            continue
+        kept.append(int(i))
+        kept_cost.append(ci)
+        kept_score.append(si)
+    kept.sort()
+    return [FrontierPoint(
+        cost=float(cost[i]), objective=float(score[i]), pas=float(pas_v[i]),
+        latency=float(lat[i]), config=_point_config(opts, picks, i),
+        cost_vec=tuple(float(x) for x in cvec[i])) for i in kept]
 
 
 def pareto_frontier(pipe: PipelineModel, arrival: float,
@@ -661,17 +743,28 @@ class FrontierCache:
 
     def frontier(self, pipe: PipelineModel, arrival: float, obj: Objective,
                  max_replicas: int = DEFAULT_MAX_REPLICAS,
-                 latency_model: str = "worst_case") -> List[FrontierPoint]:
-        """Memoized ``pareto_frontier`` — callers must treat the returned
-        list as immutable (it is shared across hits)."""
+                 latency_model: str = "worst_case",
+                 classes: Optional[Tuple[str, ...]] = None
+                 ) -> List[FrontierPoint]:
+        """Memoized ``pareto_frontier`` (or, with ``classes``, the
+        vector-cost ``pareto_frontier_vec`` keyed on the class axis too) —
+        callers must treat the returned list as immutable (it is shared
+        across hits)."""
         lam = self.rate_of(arrival)
-        key = (pipe, lam, obj, max_replicas, latency_model)
+        key = ((pipe, lam, obj, max_replicas, latency_model)
+               if classes is None
+               else (pipe, lam, obj, max_replicas, latency_model, classes))
         pts = self._tab.get(key)
         if pts is not None:
             self.hits += 1
             return pts
         self.misses += 1
-        pts = pareto_frontier(pipe, lam, obj, max_replicas, latency_model)
+        if classes is None:
+            pts = pareto_frontier(pipe, lam, obj, max_replicas,
+                                  latency_model)
+        else:
+            pts = pareto_frontier_vec(pipe, lam, obj, classes, max_replicas,
+                                      latency_model)
         if len(self._tab) >= self.max_entries:
             self._tab.pop(next(iter(self._tab)))
         self._tab[key] = pts
@@ -726,22 +819,43 @@ class FrontierCache:
 
 def _frontier(pipe: PipelineModel, arrival: float, obj: Objective,
               max_replicas: int, latency_model: str,
-              cache: Optional[FrontierCache]) -> List[FrontierPoint]:
+              cache: Optional[FrontierCache],
+              classes: Optional[Tuple[str, ...]] = None
+              ) -> List[FrontierPoint]:
     if cache is not None:
         return cache.frontier(pipe, arrival, obj, max_replicas,
-                              latency_model)
-    return pareto_frontier(pipe, arrival, obj, max_replicas, latency_model)
+                              latency_model, classes)
+    if classes is None:
+        return pareto_frontier(pipe, arrival, obj, max_replicas,
+                               latency_model)
+    return pareto_frontier_vec(pipe, arrival, obj, classes, max_replicas,
+                               latency_model)
 
 
 def solve_capped(pipe: PipelineModel, arrival: float,
                  obj: Objective = Objective(), cost_cap: float = np.inf,
                  max_replicas: int = DEFAULT_MAX_REPLICAS,
                  latency_model: str = "worst_case",
-                 cache: Optional[FrontierCache] = None) -> Solution:
+                 cache: Optional[FrontierCache] = None,
+                 classes: Optional[Tuple[str, ...]] = None) -> Solution:
     """Best per-pipeline config whose cost fits ``cost_cap`` (the
     static-split baselines' per-pipeline sub-problem).  ``cache``: an
-    optional ``FrontierCache`` memoizing the frontier build."""
+    optional ``FrontierCache`` memoizing the frontier build.  With
+    ``classes``, ``cost_cap`` is a per-class cap vector aligned with it
+    and the frontier carries vector costs — the per-class static split's
+    sub-problem."""
     t0 = time.perf_counter()
+    if classes is not None:
+        pts = [p for p in _frontier(pipe, arrival, obj, max_replicas,
+                                    latency_model, cache, classes)
+               if all(cv <= cap + 1e-9
+                      for cv, cap in zip(p.cost_vec, cost_cap))]
+        if not pts:
+            return _infeasible(t0, "capped")
+        best = max(pts, key=lambda p: p.objective)  # first-wins on ties
+        return Solution(best.config, best.objective, best.pas, best.cost,
+                        best.latency, time.perf_counter() - t0, True,
+                        "capped")
     pts = [p for p in _frontier(pipe, arrival, obj, max_replicas,
                                 latency_model, cache)
            if p.cost <= cost_cap + 1e-9]
@@ -819,7 +933,8 @@ def _charged_switches(chosen: Sequence[FrontierPoint], current,
 
 def evaluate_config(pipe: PipelineModel, config: PipelineConfig,
                     arrival: float, obj: Objective = Objective(),
-                    latency_model: str = "worst_case"
+                    latency_model: str = "worst_case",
+                    classes: Optional[Tuple[str, ...]] = None
                     ) -> Optional[FrontierPoint]:
     """Score one explicit ``PipelineConfig`` at a rate, or ``None`` when it
     cannot carry that rate (throughput 10c or the SLA 10b fails).
@@ -837,7 +952,7 @@ def evaluate_config(pipe: PipelineModel, config: PipelineConfig,
     # score through the same per-stage terms as _acc_term/_combine_acc so
     # the incumbent stay candidate is priced through the identical float
     # path as the frontier challengers it competes against in the knapsack
-    accs = np.array([st.variant(sc.variant).accuracy
+    accs = np.array([st.variant(sc.variant).acc(sc.device)
                      for sc, st in zip(config.stages, pipe.stages)])
     pas_log = np.log(np.maximum(accs, 1e-9) / 100.0)
     if obj.metric == "pas_prime":
@@ -850,8 +965,11 @@ def evaluate_config(pipe: PipelineModel, config: PipelineConfig,
     cost = config.cost(pipe)
     bat = sum(sc.batch for sc in config.stages)
     objective = obj.alpha * acc - obj.beta * cost - obj.delta * bat
+    cost_vec = (tuple(config.cost_by_class(pipe, classes))
+                if classes is not None else None)
     return FrontierPoint(cost=float(cost), objective=float(objective),
-                         pas=pas_val, latency=lat, config=config)
+                         pas=pas_val, latency=lat, config=config,
+                         cost_vec=cost_vec)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -860,8 +978,10 @@ class _Candidate:
     SLA-weighted, switch-penalized arbitration value.  ``cost`` is the
     knapsack *weight* — the transition charge ``max(old, new)`` under
     overlap-aware arbitration, which can exceed the operating point's own
-    steady-state cost (``point.cost``)."""
-    cost: int
+    steady-state cost (``point.cost``).  Under per-class budgets it is a
+    per-class int tuple (overlap maxes taken elementwise) instead of a
+    scalar int."""
+    cost: object                # int, or Tuple[int, ...] per device class
     value: float
     switch: bool
     point: FrontierPoint
@@ -870,9 +990,9 @@ class _Candidate:
 def _switch_candidates(frontier: List[FrontierPoint],
                        incumbent: Optional[FrontierPoint],
                        weight: float, switch_cost: float,
-                       old_cost: Optional[int] = None,
-                       revert: Optional[FrontierPoint] = None
-                       ) -> List[_Candidate]:
+                       old_cost=None,
+                       revert: Optional[FrontierPoint] = None,
+                       vector: bool = False) -> List[_Candidate]:
     """Frontier points (penalized unless they are free, below) plus the
     incumbent itself as the zero-penalty stay option when it is feasible at
     the new rate but off the frontier.  Frontier domination is preserved:
@@ -891,12 +1011,22 @@ def _switch_candidates(frontier: List[FrontierPoint],
     knapsack weight becomes ``max(old_cost, candidate cost)`` — during the
     §5.3 adaptation window the old fleet serves while the new one is
     provisioned, so the budget must admit the larger of the two.  The
-    transform is monotone in cost, so frontier domination still holds."""
+    transform is monotone in cost, so frontier domination still holds.
+
+    ``vector`` (per-class budgets): knapsack weights are per-class int
+    tuples taken from each point's ``cost_vec``, and the overlap charge is
+    the *elementwise* max against the serving fleet's per-class holdings —
+    elementwise max is monotone per class, so vector domination survives
+    the transform just like the scalar case."""
     inc_cfg = incumbent.config if incumbent is not None else None
     rev_cfg = revert.config if revert is not None else None
 
-    def knap_cost(cost: float) -> int:
-        c = int(round(cost))
+    def knap_cost(p: FrontierPoint):
+        if vector:
+            c = tuple(int(round(x)) for x in p.cost_vec)
+            return c if old_cost is None else tuple(
+                max(a, b) for a, b in zip(c, old_cost))
+        c = int(round(p.cost))
         return c if old_cost is None else max(c, old_cost)
 
     cands = []
@@ -907,33 +1037,39 @@ def _switch_candidates(frontier: List[FrontierPoint],
         seen_incumbent = seen_incumbent or stay
         seen_revert = seen_revert or rev
         free = stay or rev
-        cands.append(_Candidate(knap_cost(p.cost),
+        cands.append(_Candidate(knap_cost(p),
                                 weight * p.objective
                                 - (0.0 if free else switch_cost),
                                 not free, p))
     if inc_cfg is not None and not seen_incumbent:
-        cands.append(_Candidate(knap_cost(incumbent.cost),
+        cands.append(_Candidate(knap_cost(incumbent),
                                 weight * incumbent.objective, False,
                                 incumbent))
     if rev_cfg is not None and not seen_revert:
-        cands.append(_Candidate(knap_cost(revert.cost),
+        cands.append(_Candidate(knap_cost(revert),
                                 weight * revert.objective, False,
                                 revert))
     return cands
 
 
-def _overlap_old_costs(cluster, current, overlap: bool,
-                       serving) -> Optional[List[int]]:
+def _overlap_old_costs(cluster, current, overlap: bool, serving,
+                       classes: Optional[Tuple[str, ...]] = None
+                       ) -> Optional[list]:
     """Per-pipeline cores held by the currently *serving* fleets, for the
     overlap-aware transition charge — ``None`` when overlap arbitration is
     off (no ``overlap`` flag or no incumbent to overlap with).  ``serving``
     defaults to ``current``; they differ only while an adaptation window is
-    already in flight at decision time."""
+    already in flight at decision time.  With ``classes`` each entry is a
+    per-class int tuple (the per-class holdings the elementwise-max overlap
+    charge is taken against) instead of a scalar."""
     if not overlap or current is None:
         return None
     serving_cfg = serving if serving is not None else current
     if len(serving_cfg.pipelines) != len(cluster.pipelines):
         raise ValueError("serving config/cluster pipeline count mismatch")
+    if classes is not None:
+        return [tuple(int(round(x)) for x in cfg.cost_by_class(pipe, classes))
+                for cfg, pipe in zip(serving_cfg.pipelines, cluster.pipelines)]
     return [int(round(cfg.cost(pipe)))
             for cfg, pipe in zip(serving_cfg.pipelines, cluster.pipelines)]
 
@@ -1020,47 +1156,73 @@ def solve_cluster(cluster, arrivals: Sequence[float],
     frontier builds across calls (the dominant cost when rates repeat
     across adaptation intervals).  With exact keying (the default cache
     construction) results are bit-identical to ``cache=None``.
+
+    Heterogeneous clusters (``cluster.is_hetero``): the frontier carries
+    vector costs, the knapsack runs over the per-class budget grid
+    (``_knapsack_nd``), and ``budget`` may be a per-class mapping
+    (default: the cluster's own ``class_budgets``) — a bare scalar budget
+    is ambiguous there and rejected.  With a single class everything below
+    degenerates to the scalar path bit-for-bit.
     """
     t0 = time.perf_counter()
+    hetero = bool(getattr(cluster, "is_hetero", False))
+    classes = cluster.device_classes if hetero else None
     if budget is None:
+        budgets = cluster.budget_vector if hetero else None
         budget = cluster.cores
+    elif hetero:
+        if not isinstance(budget, Mapping):
+            raise ValueError("heterogeneous cluster needs a per-class "
+                             "budget mapping, not a scalar")
+        budgets = tuple(float(budget.get(c, 0.0)) for c in classes)
     weights = _resolve_weights(cluster, sla_weights)
     if current is not None and len(current.pipelines) != len(cluster.pipelines):
         raise ValueError("current config/cluster pipeline count mismatch")
-    frontiers = [_frontier(p, lam, obj, max_replicas, latency_model, cache)
+    frontiers = [_frontier(p, lam, obj, max_replicas, latency_model, cache,
+                           classes)
                  for p, lam in zip(cluster.pipelines, arrivals)]
     if any(not f for f in frontiers):
         return _cluster_infeasible(cluster, t0, "cluster_knap")
 
-    old_costs = _overlap_old_costs(cluster, current, overlap, serving)
+    old_costs = _overlap_old_costs(cluster, current, overlap, serving,
+                                   classes)
     track_switches = current is not None and (switch_cost > 0.0
                                               or switch_budget is not None
                                               or old_costs is not None)
     if not track_switches:
-        return _solve_cluster_plain(cluster, frontiers, weights, budget,
-                                    current, t0)
+        return _solve_cluster_plain(cluster, frontiers, weights,
+                                    budgets if hetero else budget,
+                                    current, t0, hetero)
 
     serving_cfg = serving                 # current is not None here
     if serving_cfg is not None and \
             len(serving_cfg.pipelines) != len(cluster.pipelines):
         raise ValueError("serving config/cluster pipeline count mismatch")
-    incumbents = [evaluate_config(pipe, cfg, lam, obj, latency_model)
+    incumbents = [evaluate_config(pipe, cfg, lam, obj, latency_model,
+                                  classes)
                   for pipe, cfg, lam in zip(cluster.pipelines,
                                             current.pipelines, arrivals)]
     # mid-window free-revert candidates: the still-serving config, whose
     # re-proposal cancels the pending rollout for free in the simulator
     reverts: List[Optional[FrontierPoint]] = [None] * len(cluster.pipelines)
     if serving_cfg is not None:
-        reverts = [evaluate_config(pipe, scfg, lam, obj, latency_model)
+        reverts = [evaluate_config(pipe, scfg, lam, obj, latency_model,
+                                   classes)
                    if scfg != ccfg else None
                    for pipe, scfg, ccfg, lam
                    in zip(cluster.pipelines, serving_cfg.pipelines,
                           current.pipelines, arrivals)]
     cand_tabs = [_switch_candidates(
         f, inc, w, switch_cost,
-        old_costs[i] if old_costs is not None else None, reverts[i])
+        old_costs[i] if old_costs is not None else None, reverts[i],
+        vector=hetero)
         for i, (f, inc, w) in enumerate(zip(frontiers, incumbents, weights))]
-    if switch_budget is None:
+    if hetero:
+        chosen = _knapsack_nd(
+            cand_tabs, budgets,
+            min(int(switch_budget), len(cand_tabs))
+            if switch_budget is not None else None)
+    elif switch_budget is None:
         chosen = _knapsack_1d(cand_tabs, budget)
     else:
         chosen = _knapsack_2d(cand_tabs, budget,
@@ -1072,14 +1234,24 @@ def solve_cluster(cluster, arrivals: Sequence[float],
                              serving_cfg)
 
 
-def _solve_cluster_plain(cluster, frontiers, weights, budget, current, t0):
+def _solve_cluster_plain(cluster, frontiers, weights, budget, current, t0,
+                         hetero: bool = False):
     """The PR 2 exact 1-D knapsack (no switch dimension).  Weighted values
     only — with weights of 1.0 this is bit-identical to the unweighted DP
     (IEEE multiplication by 1.0 is exact, and ``_knapsack_1d`` runs the
-    same candidate order, float operations and tie-breaking)."""
-    cand_tabs = [[_Candidate(int(round(p.cost)), w * p.objective, False, p)
-                  for p in f] for f, w in zip(frontiers, weights)]
-    chosen = _knapsack_1d(cand_tabs, budget)
+    same candidate order, float operations and tie-breaking).  ``hetero``:
+    ``budget`` is the per-class budget vector and the DP runs on the
+    budget grid instead."""
+    if hetero:
+        cand_tabs = [[_Candidate(tuple(int(round(x)) for x in p.cost_vec),
+                                 w * p.objective, False, p)
+                      for p in f] for f, w in zip(frontiers, weights)]
+        chosen = _knapsack_nd(cand_tabs, budget)
+    else:
+        cand_tabs = [[_Candidate(int(round(p.cost)), w * p.objective,
+                                 False, p)
+                      for p in f] for f, w in zip(frontiers, weights)]
+        chosen = _knapsack_1d(cand_tabs, budget)
     if chosen is None:
         return _cluster_infeasible(cluster, t0, "cluster_knap")
     return _cluster_solution(cluster, [c.point for c in chosen], t0,
@@ -1278,6 +1450,127 @@ def _bounded_switch_unbounded_cores(cand_tabs: List[List[_Candidate]],
     return chosen  # type: ignore[return-value]
 
 
+def _prune_candidates_vec(cands: List[_Candidate],
+                          cross_class: bool) -> List[_Candidate]:
+    """Vector-cost analogue of ``_prune_candidates``: a candidate dies when
+    some other candidate strictly beats its value at no higher cost in
+    *every* device class, plus exact ``(cost, value)`` duplicates (first
+    kept).  Same strictness discipline — a strict vector dominator wins at
+    every budget vector in the monotone N-d DP, so pruning is invisible
+    even on ties; with ``cross_class=False`` domination never crosses the
+    stay/switch boundary (they draw from different ``k`` rows)."""
+    n = len(cands)
+    if n <= 1:
+        return cands
+    costs = np.array([c.cost for c in cands], dtype=np.int64)  # (n, C)
+    vals = np.array([c.value for c in cands])
+    sw = np.array([c.switch for c in cands], dtype=bool)
+    le = (costs[None, :, :] <= costs[:, None, :]).all(axis=-1)  # j <= i
+    gt = vals[None, :] > vals[:, None]                          # j beats i
+    dom = le & gt
+    if not cross_class:
+        dom &= sw[None, :] == sw[:, None]
+    dominated = dom.any(axis=1)
+    seen = set()
+    out = []
+    for i, c in enumerate(cands):
+        if dominated[i]:
+            continue
+        key = (c.cost, c.value) if cross_class else (c.cost, c.value,
+                                                     c.switch)
+        if key in seen:
+            continue
+        seen.add(key)
+        out.append(c)
+    return out
+
+
+def _knapsack_nd(cand_tabs: List[List[_Candidate]],
+                 budgets: Sequence[float],
+                 K: Optional[int] = None) -> Optional[List[_Candidate]]:
+    """Exact multiple-choice knapsack over per-class budget vectors —
+    candidate costs are int tuples aligned with the cluster's device
+    classes.  Structurally the 1-D DP with the budget axis replaced by a
+    budget *grid* (tuple slices shift every class at once), plus the
+    optional exactly-``K``-switches leading axis of the 2-D DP.  Each
+    class's axis is capped at the prefix's reachable cost (sum of per-tab
+    maxima), so tiny accelerator budgets keep the grid tiny regardless of
+    how large the CPU pool is.  Same candidate order, float operations and
+    strict tie-breaking as the scalar DPs — the brute oracle's
+    first-occurrence argmax is reproduced exactly."""
+    C = len(budgets)
+    if all(not np.isfinite(b) for b in budgets):
+        if K is None:
+            return [max(cands, key=lambda c: c.value) for cands in cand_tabs]
+        return _bounded_switch_unbounded_cores(cand_tabs, K)
+    reach = [0] * C
+    for cands in cand_tabs:
+        for c in range(C):
+            reach[c] += max((cc.cost[c] for cc in cands), default=0)
+    B = tuple(min(int(np.floor(b + 1e-9)), reach[c]) if np.isfinite(b)
+              else reach[c]
+              for c, b in enumerate(budgets))
+    cand_tabs = [_prune_candidates_vec(cands, cross_class=(K is None))
+                 for cands in cand_tabs]
+    shape = tuple(b + 1 for b in B)
+    if K is None:
+        dp = np.zeros(shape)
+    else:
+        dp = np.full((K + 1,) + shape, -np.inf)
+        dp[0] = 0.0
+    pick_tabs: List[np.ndarray] = []
+    for i, cands in enumerate(cand_tabs):
+        cur = np.full(dp.shape, -np.inf)
+        pick = np.full(dp.shape, -1, dtype=np.int64)
+        kmax = min(K, i + 1) if K is not None else None
+        for j, c in enumerate(cands):
+            if any(cc > bb for cc, bb in zip(c.cost, B)):
+                continue
+            src = tuple(slice(0, bb + 1 - cc) for cc, bb in zip(c.cost, B))
+            dst = tuple(slice(cc, None) for cc in c.cost)
+            if K is None:
+                cand = dp[src] + c.value
+                seg = cur[dst]
+                sel = pick[dst]
+                better = cand > seg
+                seg[better] = cand[better]
+                sel[better] = j
+            else:
+                dk = 1 if c.switch else 0
+                for k in range(dk, kmax + 1):
+                    cand = dp[(k - dk,) + src] + c.value
+                    seg = cur[(k,) + dst]
+                    sel = pick[(k,) + dst]
+                    better = cand > seg
+                    seg[better] = cand[better]
+                    sel[better] = j
+        pick_tabs.append(pick)
+        dp = cur
+    end = tuple(B)
+    if K is None:
+        if not np.isfinite(dp[end]):
+            return None
+        state = end
+    else:
+        k_best = int(np.argmax(dp[(slice(None),) + end]))
+        if not np.isfinite(dp[(k_best,) + end]):
+            return None
+        state = (k_best,) + end
+    chosen_rev: List[_Candidate] = []
+    for cands, pick in zip(reversed(cand_tabs), reversed(pick_tabs)):
+        j = int(pick[state])
+        if j < 0:
+            return None
+        chosen_rev.append(cands[j])
+        if K is None:
+            state = tuple(s - cc for s, cc in zip(state, cands[j].cost))
+        else:
+            dk = 1 if cands[j].switch else 0
+            state = (state[0] - dk,) + tuple(
+                s - cc for s, cc in zip(state[1:], cands[j].cost))
+    return list(reversed(chosen_rev))
+
+
 def solve_cluster_brute(cluster, arrivals: Sequence[float],
                         obj: Objective = Objective(),
                         budget: Optional[float] = None,
@@ -1298,14 +1591,26 @@ def solve_cluster_brute(cluster, arrivals: Sequence[float],
     (held replica counts are generally off the n*-substituted grid).  With
     ``overlap=True`` the budget constraint is evaluated over the transition
     charge ``sum_p max(old_p, new_p)`` (old from ``serving``, default
-    ``current``) exactly as ``solve_cluster`` plans."""
+    ``current``) exactly as ``solve_cluster`` plans.  Heterogeneous
+    clusters: the tables carry per-class cost vectors and feasibility is
+    checked per class (overlap maxes taken elementwise), matching the
+    ``_knapsack_nd`` fast path's constraint exactly."""
     t0 = time.perf_counter()
+    hetero = bool(getattr(cluster, "is_hetero", False))
+    classes = cluster.device_classes if hetero else None
     if budget is None:
+        budgets = cluster.budget_vector if hetero else None
         budget = cluster.cores
+    elif hetero:
+        if not isinstance(budget, Mapping):
+            raise ValueError("heterogeneous cluster needs a per-class "
+                             "budget mapping, not a scalar")
+        budgets = tuple(float(budget.get(c, 0.0)) for c in classes)
     weights = _resolve_weights(cluster, sla_weights)
     if current is not None and len(current.pipelines) != len(cluster.pipelines):
         raise ValueError("current config/cluster pipeline count mismatch")
-    old_costs = _overlap_old_costs(cluster, current, overlap, serving)
+    old_costs = _overlap_old_costs(cluster, current, overlap, serving,
+                                   classes)
     serving_cfg = serving if (serving is not None and current is not None) \
         else None
     if serving_cfg is not None and \
@@ -1317,30 +1622,49 @@ def solve_cluster_brute(cluster, arrivals: Sequence[float],
             pipe, lam, obj, max_replicas, latency_model)
         if len(cost) == 0:
             return _cluster_infeasible(cluster, t0, "cluster_brute")
-        tab = [FrontierPoint(float(cost[i]), float(score[i]),
-                             float(pas_v[i]), float(lat[i]),
-                             _point_config(opts, picks, i))
-               for i in range(len(cost))]
+        if hetero:
+            cvec = _combo_cost_by_class(opts, picks, classes).T
+            tab = [FrontierPoint(float(cost[i]), float(score[i]),
+                                 float(pas_v[i]), float(lat[i]),
+                                 _point_config(opts, picks, i),
+                                 cost_vec=tuple(float(x) for x in cvec[i]))
+                   for i in range(len(cost))]
+        else:
+            tab = [FrontierPoint(float(cost[i]), float(score[i]),
+                                 float(pas_v[i]), float(lat[i]),
+                                 _point_config(opts, picks, i))
+                   for i in range(len(cost))]
         if current is not None:
             inc = evaluate_config(pipe, current.pipelines[p_i], lam, obj,
-                                  latency_model)
+                                  latency_model, classes)
             if inc is not None and all(p.config != inc.config for p in tab):
                 tab.append(inc)
         if serving_cfg is not None and \
                 serving_cfg.pipelines[p_i] != current.pipelines[p_i]:
             rev = evaluate_config(pipe, serving_cfg.pipelines[p_i], lam,
-                                  obj, latency_model)
+                                  obj, latency_model, classes)
             if rev is not None and all(p.config != rev.config for p in tab):
                 tab.append(rev)
         tables.append(tab)
     best_v, best = -np.inf, None
     for combo in itertools.product(*tables):
-        if old_costs is not None:
-            tot_c = sum(max(p.cost, o) for p, o in zip(combo, old_costs))
+        if hetero:
+            if old_costs is not None:
+                tot_vec = [sum(max(p.cost_vec[c], o[c]) for p, o
+                               in zip(combo, old_costs))
+                           for c in range(len(classes))]
+            else:
+                tot_vec = [sum(p.cost_vec[c] for p in combo)
+                           for c in range(len(classes))]
+            if any(t > b + 1e-9 for t, b in zip(tot_vec, budgets)):
+                continue
         else:
-            tot_c = sum(p.cost for p in combo)
-        if tot_c > budget + 1e-9:
-            continue
+            if old_costs is not None:
+                tot_c = sum(max(p.cost, o) for p, o in zip(combo, old_costs))
+            else:
+                tot_c = sum(p.cost for p in combo)
+            if tot_c > budget + 1e-9:
+                continue
         n_sw = _charged_switches(combo, current, serving_cfg)
         if switch_budget is not None and n_sw > switch_budget:
             continue

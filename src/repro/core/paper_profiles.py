@@ -161,6 +161,40 @@ def video_fanout() -> PipelineModel:
         sla_override=1.5)
 
 
+def network_edge_stage(name: str, delay: float = 0.060) -> StageModel:
+    """A per-edge network link modelled as a stage: pure propagation delay.
+
+    Zero-cost (``base_alloc`` 0 — a link consumes no budget in any device
+    class, so no planner can ever spend cores on it) and accuracy-neutral
+    (accuracy 100 → multiplicative PAS factor exactly 1.0).  Its only
+    effect on a plan is the flat ``delay`` it adds to every source→sink
+    path that crosses it — which is exactly how the edge-placement
+    follow-up work charges WAN hops: latency on the path, nothing on the
+    budget."""
+    v = ModelVariant(name + "-link", 100.0, 0, (0.0, 0.0, delay))
+    return StageModel(name, (v,), sla=5.0 * delay, batch_choices=(1,))
+
+
+def video_edge(delay: float = 0.060) -> PipelineModel:
+    """``video_fanout`` with the classification branch placed across a
+    network edge: decode → [detect ∥ (uplink → classify)] → fusion.
+
+    The uplink is a ``network_edge_stage``: it can lengthen the
+    classification branch past the detection branch and thereby shift the
+    critical path, but it never consumes budget — the planner's cost for
+    this pipeline is identical to ``video_fanout``'s at every frontier
+    point."""
+    return PipelineModel(
+        "video-edge",
+        (passthrough_stage("decode"),
+         task_stage("object_detection"),
+         network_edge_stage("uplink", delay),
+         task_stage("object_classification"),
+         passthrough_stage("fusion")),
+        parents=((), (0,), (0,), (2,), (1, 3)),
+        sla_override=1.5)
+
+
 def audio_fanout() -> PipelineModel:
     """audio → [qa ∥ sentiment] → fusion: one transcription feeding both
     downstream consumers of the paper's two audio pipelines in parallel."""
@@ -175,6 +209,7 @@ def audio_fanout() -> PipelineModel:
 
 DAG_PIPELINES = {
     "video-fanout": video_fanout, "audio-fanout": audio_fanout,
+    "video-edge": video_edge,
 }
 
 # paper Appendix B objective weights per pipeline

@@ -32,22 +32,75 @@ BATCH_CHOICES = (1, 2, 4, 8, 16, 32, 64)     # power-of-two profiling grid §4.2
 
 
 @dataclasses.dataclass(frozen=True)
+class DeviceProfile:
+    """One device class's measured profile of a model variant: the same
+    (accuracy, R_m, quadratic latency) triple the offline profiler produces
+    per hardware class (INFaaS-style variant+hardware selection).  Accuracy
+    is per-class because hardware-specific builds (quantized edge binaries,
+    reduced-precision GPU kernels) genuinely move the task measure."""
+    device: str                          # class name, e.g. "cpu" / "gpu"
+    latency_coeffs: Tuple[float, float, float]
+    base_alloc: int                      # R_m in this class's budget units
+    accuracy: float
+
+
+@dataclasses.dataclass(frozen=True)
 class ModelVariant:
     name: str
     accuracy: float                      # task measure, higher-is-better §4.1
     base_alloc: int                      # R_m: cores/chips per replica (Eq. 1)
     latency_coeffs: Tuple[float, float, float]   # (α, β, γ): l = α·b² + β·b + γ
     params_m: float = 0.0                # millions of parameters (metadata)
+    # per-device-class profile table.  ``None`` (the default) is the legacy
+    # single-class variant: it runs on exactly one class, "cpu", served by
+    # the variant's own (accuracy, base_alloc, latency_coeffs) fields
+    # through the identical float path — the device axis is invisible.
+    device_profiles: Optional[Tuple[DeviceProfile, ...]] = None
 
-    def latency(self, batch) -> np.ndarray:
-        a, b, c = self.latency_coeffs
+    @property
+    def device_classes(self) -> Tuple[str, ...]:
+        """Device classes this variant can run on (legacy: ``("cpu",)``)."""
+        if self.device_profiles is None:
+            return ("cpu",)
+        return tuple(dp.device for dp in self.device_profiles)
+
+    def _fields_on(self, device: Optional[str]
+                   ) -> Tuple[Tuple[float, float, float], int, float]:
+        """(latency_coeffs, base_alloc, accuracy) on ``device``.
+
+        ``None`` always means the variant's own fields (every legacy call
+        site), as does ``"cpu"`` on a single-class variant — both hit the
+        exact pre-device float path."""
+        if device is None:
+            return self.latency_coeffs, self.base_alloc, self.accuracy
+        if self.device_profiles is None:
+            if device != "cpu":
+                raise KeyError(
+                    f"variant {self.name} has no device class {device!r}")
+            return self.latency_coeffs, self.base_alloc, self.accuracy
+        for dp in self.device_profiles:
+            if dp.device == device:
+                return dp.latency_coeffs, dp.base_alloc, dp.accuracy
+        raise KeyError(f"variant {self.name} has no device class {device!r}")
+
+    def alloc(self, device: Optional[str] = None) -> int:
+        """R_m on a device class (legacy fields when ``device`` is None)."""
+        return self._fields_on(device)[1]
+
+    def acc(self, device: Optional[str] = None) -> float:
+        """Accuracy on a device class (legacy fields when ``device`` is
+        None)."""
+        return self._fields_on(device)[2]
+
+    def latency(self, batch, device: Optional[str] = None) -> np.ndarray:
+        a, b, c = self._fields_on(device)[0]
         batch = np.asarray(batch, dtype=np.float64)
         return a * batch ** 2 + b * batch + c
 
-    def throughput(self, batch) -> np.ndarray:
+    def throughput(self, batch, device: Optional[str] = None) -> np.ndarray:
         """Per-replica RPS at batch size b (requests, not batches)."""
         batch = np.asarray(batch, dtype=np.float64)
-        return batch / self.latency(batch)
+        return batch / self.latency(batch, device)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -206,6 +259,10 @@ class StageConfig:
     variant: str
     batch: int
     replicas: int
+    # device class the replicas are placed on.  The default keeps every
+    # legacy 3-field construction (and its equality/hash) meaningful: a
+    # single-class deployment is all-"cpu".
+    device: str = "cpu"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -213,10 +270,26 @@ class PipelineConfig:
     stages: Tuple[StageConfig, ...]
 
     def cost(self, pipe: PipelineModel) -> float:
-        """Sum_s n_s * R_s (paper's cost: replicas x cores-per-replica)."""
+        """Sum_s n_s * R_s (paper's cost: replicas x cores-per-replica),
+        totalled across device classes."""
         return float(sum(
-            sc.replicas * st.variant(sc.variant).base_alloc
+            sc.replicas * st.variant(sc.variant).alloc(sc.device)
             for sc, st in zip(self.stages, pipe.stages)))
+
+    def cost_by_class(self, pipe: PipelineModel,
+                      classes: Sequence[str]) -> Tuple[float, ...]:
+        """Per-device-class cost vector aligned with ``classes`` — the
+        knapsack weight / ledger charge under per-class budgets.  A stage
+        placed on a class outside ``classes`` is a configuration error."""
+        tot: Dict[str, float] = {c: 0.0 for c in classes}
+        for sc, st in zip(self.stages, pipe.stages):
+            if sc.device not in tot:
+                raise KeyError(
+                    f"stage on device class {sc.device!r} but the budget "
+                    f"only covers {tuple(classes)}")
+            tot[sc.device] += sc.replicas * st.variant(sc.variant).alloc(
+                sc.device)
+        return tuple(float(tot[c]) for c in classes)
 
     def latency(self, pipe: PipelineModel, arrival: float,
                 latency_model: str = "worst_case") -> float:
@@ -238,7 +311,7 @@ class PipelineConfig:
             tot = 0.0
             for sc, st in zip(self.stages, pipe.stages):
                 v = st.variant(sc.variant)
-                svc = float(v.latency(sc.batch))
+                svc = float(v.latency(sc.batch, sc.device))
                 if latency_model == "expected":
                     tot += svc + expected_wait(sc.batch, arrival, sc.replicas,
                                                svc)
@@ -250,7 +323,7 @@ class PipelineConfig:
         terms = []
         for sc, st in zip(self.stages, pipe.stages):
             v = st.variant(sc.variant)
-            svc = float(v.latency(sc.batch))
+            svc = float(v.latency(sc.batch, sc.device))
             if latency_model == "expected":
                 terms.append(svc + expected_wait(sc.batch, arrival,
                                                  sc.replicas, svc))
@@ -276,6 +349,7 @@ class PipelineConfig:
         """
         for sc, st in zip(self.stages, pipe.stages):
             v = st.variant(sc.variant)
-            if sc.replicas * float(v.throughput(sc.batch)) < arrival - 1e-9:
+            if sc.replicas * float(v.throughput(sc.batch, sc.device)) \
+                    < arrival - 1e-9:
                 return False
         return True

@@ -274,6 +274,13 @@ class ClusterSimulator:
         self.cluster = cluster
         self.n_pipelines = len(cluster.pipelines)
         self.core_budget = float(cluster.cores)
+        # per-device-class ledger axis (None on a scalar-budget cluster —
+        # every vector path below is gated on it, so the single-class run
+        # is instruction-for-instruction the legacy scalar ledger)
+        self._classes = cluster.device_classes \
+            if getattr(cluster, "is_hetero", False) else None
+        self._budget_vec = cluster.budget_vector \
+            if self._classes is not None else None
         self.drop_factor = drop_factor
         self.max_wait = max_wait
         self.variant_switch_delay = variant_switch_delay
@@ -367,6 +374,21 @@ class ClusterSimulator:
             raise CoreBudgetExceeded(
                 f"initial config needs {sum(self._alloc)} cores, "
                 f"budget is {self.core_budget}")
+        # per-class ledger mirror: one cost vector per pipeline, same
+        # max(old, new) transition discipline applied elementwise
+        self._alloc_vec: Optional[List[Tuple[float, ...]]] = None
+        self._serving_vec: Optional[List[Tuple[float, ...]]] = None
+        if self._classes is not None:
+            self._alloc_vec = [
+                tuple(cfg.cost_by_class(pipe, self._classes))
+                for cfg, pipe in zip(config.pipelines, cluster.pipelines)]
+            self._serving_vec = list(self._alloc_vec)
+            for c, b in enumerate(self._budget_vec):
+                tot = sum(v[c] for v in self._alloc_vec)
+                if tot > b + 1e-9:
+                    raise CoreBudgetExceeded(
+                        f"initial config needs {tot} {self._classes[c]} "
+                        f"cores, class budget is {b}")
         # invariant witness: sup over time of sum(_serving_cost) — serving
         # cost is piecewise constant between (re)configuration instants, so
         # maxing at every change captures the exact supremum.  A zero-delay
@@ -374,6 +396,11 @@ class ClusterSimulator:
         # sums mid-loop are states that never existed, so peak sampling is
         # suppressed until the whole joint config has been applied.
         self.peak_serving_cores = float(sum(self._serving_cost))
+        self.peak_serving_by_class: Optional[Tuple[float, ...]] = None
+        if self._serving_vec is not None:
+            self.peak_serving_by_class = tuple(
+                sum(v[c] for v in self._serving_vec)
+                for c in range(len(self._classes)))
         self._joint_apply = False
 
         self._events: List[Tuple[float, int, str, object]] = []
@@ -452,6 +479,14 @@ class ClusterSimulator:
             trans_cost = max(self._serving_cost[p], new_cost)
         else:
             trans_cost = new_cost
+        trans_vec: Optional[Tuple[float, ...]] = None
+        if self._classes is not None:
+            new_vec = config.cost_by_class(pipe, self._classes)
+            if self.adaptation_delay > 0:
+                trans_vec = tuple(max(a, b) for a, b
+                                  in zip(self._serving_vec[p], new_vec))
+            else:
+                trans_vec = new_vec
         if _check_budget:
             others = sum(self._alloc) - self._alloc[p]
             if others + trans_cost > self.core_budget + 1e-9:
@@ -459,7 +494,19 @@ class ClusterSimulator:
                     f"pipeline {p} wants {trans_cost} cores through its "
                     f"transition but only {self.core_budget - others} of "
                     f"{self.core_budget} are unallocated")
+            if trans_vec is not None:
+                for c, b in enumerate(self._budget_vec):
+                    oth = sum(v[c] for v in self._alloc_vec) \
+                        - self._alloc_vec[p][c]
+                    if oth + trans_vec[c] > b + 1e-9:
+                        raise CoreBudgetExceeded(
+                            f"pipeline {p} wants {trans_vec[c]} "
+                            f"{self._classes[c]} cores through its "
+                            f"transition but only {b - oth} of {b} are "
+                            f"unallocated")
         self._alloc[p] = trans_cost
+        if trans_vec is not None:
+            self._alloc_vec[p] = trans_vec
         if self._pending_cfg[p] is not None and \
                 config == self.serving_config(p):
             # revert to what is already serving: cancel the pending rollout
@@ -510,6 +557,11 @@ class ClusterSimulator:
         cost = config.cost(self.cluster.pipelines[p])
         self._alloc[p] = cost
         self._serving_cost[p] = cost
+        if self._classes is not None:
+            vec = tuple(config.cost_by_class(self.cluster.pipelines[p],
+                                             self._classes))
+            self._alloc_vec[p] = vec
+            self._serving_vec[p] = vec
         if not self._joint_apply:
             self._note_serving_peak()
         self._refresh_lat_tab(self._stages_of[p])
@@ -530,6 +582,10 @@ class ClusterSimulator:
             raise CoreBudgetExceeded(
                 f"joint config needs {cost} cores through its transition, "
                 f"budget is {self.core_budget}")
+        if self._classes is not None and not self.fits_transition(config):
+            raise CoreBudgetExceeded(
+                "joint config exceeds a device-class budget through its "
+                "transition")
         self._joint_apply = True
         try:
             for p, cfg in enumerate(config.pipelines):
@@ -577,6 +633,10 @@ class ClusterSimulator:
         total = sum(self._serving_cost)
         if total > self.peak_serving_cores:
             self.peak_serving_cores = total
+        if self._serving_vec is not None:
+            self.peak_serving_by_class = tuple(
+                max(p, sum(v[c] for v in self._serving_vec))
+                for c, p in enumerate(self.peak_serving_by_class))
 
     @property
     def serving_cluster_config(self) -> ClusterConfig:
@@ -646,7 +706,8 @@ class ClusterSimulator:
             st, sc = self._stage_models[s], self.configs[s]
             ks = np.arange(sc.batch + 1, dtype=np.float64)
             ks[0] = 1.0                  # k=0 never dispatched; keep finite
-            self._lat_tab[s] = st.variant(sc.variant).latency(ks).tolist()
+            self._lat_tab[s] = \
+                st.variant(sc.variant).latency(ks, sc.device).tolist()
             self._batch_of[s] = sc.batch
 
     def _wait_bounds(self) -> List[float]:
@@ -725,7 +786,7 @@ class ClusterSimulator:
             return tab[k]
         sc = self.configs[s]
         v = self._stage_models[s].variant(sc.variant)
-        return float(v.latency(max(k, 1)))
+        return float(v.latency(max(k, 1), sc.device))
 
     def _try_dispatch(self, s: int) -> None:
         q = self.queues[s]

@@ -74,10 +74,20 @@ except ModuleNotFoundError:
             @functools.wraps(fn)
             def wrapper(*args, **kwargs):
                 rng = np.random.default_rng(seed)
+                executed = 0
                 for i in range(_FALLBACK_EXAMPLES):
                     drawn = {name: strat.example(rng, i)
                              for name, strat in strategies.items()}
                     fn(*args, **drawn, **kwargs)
+                    executed += 1
+                # the fallback's whole value is that the property body
+                # genuinely ran over every fixed example — a strategy or
+                # loop regression that silently skips them must fail loud,
+                # not collect as a vacuous pass
+                assert executed == _FALLBACK_EXAMPLES, (
+                    f"{fn.__name__}: only {executed}/{_FALLBACK_EXAMPLES} "
+                    "fallback examples executed")
+                wrapper.examples_executed = executed
 
             # hide the strategy-filled parameters from pytest's fixture
             # resolution (it would otherwise look for fixtures named after

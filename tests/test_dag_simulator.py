@@ -254,3 +254,90 @@ def test_mixed_cluster_dag_and_chain(make):
         assert m.arrived == 100
         assert m.completed + m.dropped == 100
     assert not sim._inflight[0] and not sim._inflight[1]
+
+
+# ---------------------------------------------------------------------------
+# per-edge network-latency stage: delay moves the critical path, never the
+# budget
+# ---------------------------------------------------------------------------
+def _edge_config(uplink_replicas=8):
+    """Small-batch config for the ``video-edge`` preset; the free uplink
+    gets plenty of replicas so the link never serializes."""
+    return PipelineConfig((StageConfig("decode-fixed", 1, 1),
+                           StageConfig("yolov5s", 1, 2),
+                           StageConfig("uplink-link", 1, uplink_replicas),
+                           StageConfig("resnet50", 1, 2),
+                           StageConfig("fusion-fixed", 1, 1)))
+
+
+def test_edge_delay_shifts_planner_critical_path_not_cost():
+    """Planner side of the ``video-edge`` preset: growing the network
+    delay lengthens the critical-path latency bound by (at least) the
+    added delay, while the config's cost — scalar and per-class — is
+    bit-identical at every delay and equal to the edge-less fan-out's."""
+    from repro.core.paper_profiles import video_edge, video_fanout
+    fast, slow = video_edge(0.001), video_edge(0.5)
+    cfg = _edge_config()
+    arrival = 4.0
+    lat_fast, lat_slow = cfg.latency(fast, arrival), cfg.latency(slow, arrival)
+    # negligible delay: the detection branch is critical and the link is
+    # invisible; at 0.5 s the link drags the classification branch past
+    # it, so the critical path jumps to (at least) the delay itself
+    assert lat_fast < 0.25
+    assert lat_slow >= 0.5
+    assert lat_slow - lat_fast >= 0.3
+    # zero-cost link: the uplink's variant allocates nothing...
+    assert slow.stages[2].variants[0].base_alloc == 0
+    # ...so cost never moves with the delay, and matches the fan-out
+    base = PipelineConfig((StageConfig("decode-fixed", 1, 1),
+                           StageConfig("yolov5s", 1, 2),
+                           StageConfig("resnet50", 1, 2),
+                           StageConfig("fusion-fixed", 1, 1)))
+    assert cfg.cost(fast) == cfg.cost(slow) == base.cost(video_fanout())
+    assert cfg.cost_by_class(fast, ("cpu",)) == (cfg.cost(fast),)
+    # the solver prices the link at zero too: a solved plan's cost equals
+    # the sum over its non-link stages
+    from repro.core import optimizer as OPT
+    sol = OPT.solve(slow, arrival, OPT.Objective())
+    assert sol.feasible
+    paid = sum(sc.replicas * st.variant(sc.variant).alloc(sc.device)
+               for i, (sc, st) in enumerate(zip(sol.config.stages,
+                                                slow.stages)) if i != 2)
+    assert sol.cost == float(paid)
+
+
+@pytest.mark.parametrize("cls", CORES)
+def test_edge_delay_shifts_simulated_latency_not_budget(cls):
+    """Simulator side: the same seeded trace through ``video-edge`` at two
+    delays completes every request in both, shifted by ~the delay delta —
+    and the cluster ledger admits the config at a budget with zero
+    headroom for the link, proving the link is never charged."""
+    from repro.core.cluster import ClusterConfig, ClusterModel
+    from repro.core.paper_profiles import video_edge
+    cfg = _edge_config()
+    rng = np.random.default_rng(7)
+    times = np.cumsum(rng.exponential(1 / 4.0, 200))
+    lat_mean = {}
+    for delay in (0.001, 0.5):
+        pipe = video_edge(delay)
+        sim = cls(pipe, cfg)
+        sim.lam_est = 4.0
+        sim.inject_arrivals(times)
+        sim.run_until(float(times[-1]) + 20.0)
+        m = sim.metrics
+        assert m.completed == 200 and m.dropped == 0
+        lat_mean[delay] = float(m.latencies.mean())
+        assert_clean(sim)
+    # the join waits on the slower branch: the shift is the slow link's
+    # branch overtaking the detection branch, not the raw delay delta
+    assert 0.3 <= lat_mean[0.5] - lat_mean[0.001] <= 0.55
+    # ledger: budget == cost with the link priced at zero; any charge for
+    # the uplink's 8 replicas would overflow at construction
+    pipe = video_edge(0.5)
+    cluster = ClusterModel("edge", (pipe,), cores=cfg.cost(pipe))
+    csim = ClusterSimulator(cluster, ClusterConfig((cfg,)))
+    csim.inject_arrivals(times, pipeline=0)
+    csim.set_lam_est(0, 4.0)
+    csim.run_until(float(times[-1]) + 20.0)
+    assert csim.peak_serving_cores == cfg.cost(pipe)
+    assert csim.metrics_by_pipe[0].completed == 200

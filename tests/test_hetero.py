@@ -1,0 +1,474 @@
+"""Heterogeneous device-class planning: per-class variant tables, the
+vector-cost Pareto frontier, the multi-dimensional cluster knapsack vs the
+device-axis brute oracle (ties, switch budgets, overlap, mid-window
+serving!=committed), per-class static splits, and the per-class simulator
+ledger."""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import accuracy as ACC
+from repro.core import adapter as AD
+from repro.core import baselines as BL
+from repro.core import optimizer as OPT
+from repro.core.cluster import (ClusterConfig, ClusterModel,
+                                proportional_split_by_class)
+from repro.core.pipeline import (DeviceProfile, ModelVariant, PipelineConfig,
+                                 PipelineModel, StageConfig, StageModel)
+from repro.core.simulator import ClusterSimulator, CoreBudgetExceeded
+
+
+def hetero_variant(name: str, l1: float, scale: float, acc: float,
+                   alloc: int, gpu_speed: float = 4.0,
+                   gpu_acc_delta: float = 3.0) -> ModelVariant:
+    """Two-class variant: the CPU profile mirrors the legacy fields; the
+    GPU profile is ``gpu_speed``x faster at 1 core with a small accuracy
+    delta (quantized/reduced-precision build)."""
+    coeffs = (l1 * scale * 0.002, l1 * scale * 0.7, l1 * scale * 0.3)
+    return ModelVariant(name, acc, alloc, coeffs, device_profiles=(
+        DeviceProfile("cpu", coeffs, alloc, acc),
+        DeviceProfile("gpu", tuple(c / gpu_speed for c in coeffs), 1,
+                      acc + gpu_acc_delta)))
+
+
+def hetero_pipeline(name: str, l1: float = 0.05,
+                    accs=(60.0, 75.0, 85.0), gpu_speed: float = 4.0,
+                    gpu_acc_delta: float = 3.0) -> PipelineModel:
+    vs = tuple(hetero_variant(f"{name}_v{i}", l1, s, a, 2 ** i, gpu_speed,
+                              gpu_acc_delta)
+               for i, (a, s) in enumerate(zip(accs, (1.0, 1.7, 3.0))))
+    return PipelineModel(name, (
+        StageModel(f"{name}_s1", vs, sla=5 * l1 * 1.7, batch_choices=(1, 2)),
+        StageModel(f"{name}_s2", vs, sla=5 * l1 * 1.7, batch_choices=(1, 2)),
+    ))
+
+
+def hetero_cluster(cpu: float = 24.0, gpu: float = 6.0,
+                   **kw) -> ClusterModel:
+    return ClusterModel("hc", (hetero_pipeline("A", **kw),
+                               hetero_pipeline("B", l1=0.03,
+                                               accs=(55.0, 68.0, 90.0),
+                                               **kw)),
+                        cores={"cpu": cpu, "gpu": gpu})
+
+
+# ---------------------------------------------------------------------------
+# data model: per-class tables and budgets
+# ---------------------------------------------------------------------------
+def test_device_profile_lookup_and_legacy_fields():
+    v = hetero_variant("v", 0.05, 1.0, 60.0, 2)
+    assert v.device_classes == ("cpu", "gpu")
+    assert v.alloc("cpu") == 2 and v.alloc("gpu") == 1
+    assert v.acc("gpu") == 63.0
+    # None and "cpu" hit the variant's own fields (the legacy float path)
+    assert float(v.latency(4)) == float(v.latency(4, "cpu"))
+    assert float(v.latency(4, "gpu")) == pytest.approx(
+        float(v.latency(4)) / 4.0)
+    legacy = ModelVariant("w", 60.0, 2, (0.1, 0.2, 0.3))
+    assert legacy.device_classes == ("cpu",)
+    assert legacy.alloc("cpu") == 2
+    with pytest.raises(KeyError):
+        legacy.alloc("gpu")
+    with pytest.raises(KeyError):
+        v.alloc("tpu")
+
+
+def test_cluster_budget_mapping_normalizes():
+    cl = hetero_cluster(cpu=24.0, gpu=6.0)
+    assert cl.is_hetero
+    assert cl.device_classes == ("cpu", "gpu")
+    assert cl.budget_vector == (24.0, 6.0)
+    assert cl.cores == pytest.approx(30.0)      # scalar total for legacy readers
+    scalar = ClusterModel("s", cl.pipelines, 30.0)
+    assert not scalar.is_hetero
+    assert scalar.device_classes == ("cpu",)
+    assert scalar.budget_vector == (30.0,)
+
+
+def test_cluster_rejects_unbudgeted_class_and_bad_budgets():
+    pipes = hetero_cluster().pipelines
+    with pytest.raises(ValueError):               # gpu variants, no gpu budget
+        ClusterModel("x", pipes, cores={"cpu": 24.0})
+    with pytest.raises(ValueError):
+        ClusterModel("x", pipes, cores={"cpu": 24.0, "gpu": -1.0})
+    with pytest.raises(ValueError):
+        ClusterModel("x", pipes, cores={})
+
+
+def test_cost_by_class_splits_and_sums_to_scalar_cost():
+    cl = hetero_cluster()
+    pipe = cl.pipelines[0]
+    cfg = PipelineConfig((StageConfig("A_v0", 2, 3, "cpu"),
+                          StageConfig("A_v1", 1, 2, "gpu")))
+    by = cfg.cost_by_class(pipe, cl.device_classes)
+    assert by == (3 * 1, 2 * 1)                  # cpu alloc 1, gpu alloc 1
+    assert sum(by) == pytest.approx(cfg.cost(pipe))
+    with pytest.raises(KeyError):
+        cfg.cost_by_class(pipe, ("cpu",))        # gpu stage, no gpu column
+
+
+def test_pas_prime_tables_keyed_by_variant_and_device():
+    cl = hetero_cluster()
+    pipe = cl.pipelines[0]
+    tabs = ACC.pas_prime_tables(pipe)
+    assert ("A_v0", "cpu") in tabs[0] and ("A_v0", "gpu") in tabs[0]
+    # gpu build is strictly more accurate here, so it ranks strictly higher
+    assert tabs[0][("A_v0", "gpu")] > tabs[0][("A_v0", "cpu")]
+
+
+# ---------------------------------------------------------------------------
+# vector-cost frontier
+# ---------------------------------------------------------------------------
+def test_frontier_vec_points_are_mutually_nondominated():
+    cl = hetero_cluster()
+    pts = OPT.pareto_frontier_vec(cl.pipelines[0], 12.0, OPT.Objective(),
+                                  cl.device_classes, max_replicas=6)
+    assert pts
+    for p in pts:
+        assert sum(p.cost_vec) == pytest.approx(p.cost)
+        assert p.config.stages[0].device in ("cpu", "gpu")
+    for i, a in enumerate(pts):
+        for j, b in enumerate(pts):
+            if i == j:
+                continue
+            dominates = (all(x <= y for x, y in zip(a.cost_vec, b.cost_vec))
+                         and (a.objective > b.objective
+                              or (a.objective == b.objective
+                                  and a.cost_vec == b.cost_vec)))
+            assert not dominates, (i, j)
+
+
+def test_frontier_cache_exact_for_vector_costs():
+    cl = hetero_cluster()
+    cache = OPT.FrontierCache()
+    classes = cl.device_classes
+    a = cache.frontier(cl.pipelines[0], 12.0, OPT.Objective(), 6,
+                       "worst_case", classes)
+    b = OPT.pareto_frontier_vec(cl.pipelines[0], 12.0, OPT.Objective(),
+                                classes, max_replicas=6)
+    assert [(p.cost_vec, p.objective, p.config) for p in a] \
+        == [(p.cost_vec, p.objective, p.config) for p in b]
+    # hit on repeat, and the single-class key shape is untouched
+    assert cache.frontier(cl.pipelines[0], 12.0, OPT.Objective(), 6,
+                          "worst_case", classes) is not None
+    assert cache.stats["hits"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# single-pipeline solver vs device-axis brute oracle
+# ---------------------------------------------------------------------------
+@given(gpu_speed=st.floats(1.5, 6.0), delta=st.floats(-5.0, 5.0),
+       lam=st.floats(1.0, 30.0), beta=st.floats(0.0, 0.2))
+@settings(max_examples=20, deadline=None)
+def test_solve_vec_matches_brute_on_device_axis(gpu_speed, delta, lam, beta):
+    # solve_vec and solve_brute enumerate the same stage_options lattice —
+    # with the device axis folded in, they must stay config-for-config
+    # bit-identical (first-occurrence argmax over itertools.product order),
+    # ties included (delta == 0 makes cpu/gpu placements tie exactly)
+    pipe = hetero_pipeline("A", gpu_speed=gpu_speed, gpu_acc_delta=delta)
+    obj = OPT.Objective(alpha=1.0, beta=beta)
+    v = OPT.solve_vec(pipe, lam, obj, max_replicas=4)
+    b = OPT.solve_brute(pipe, lam, obj, max_replicas=4)
+    assert v.feasible == b.feasible
+    if v.feasible:
+        assert v.config == b.config
+        assert v.objective == b.objective
+        assert v.cost == b.cost
+
+
+def test_solve_vec_device_ties_are_bit_identical():
+    pipe = hetero_pipeline("A", gpu_acc_delta=0.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.0)
+    v = OPT.solve_vec(pipe, 8.0, obj, max_replicas=4)
+    b = OPT.solve_brute(pipe, 8.0, obj, max_replicas=4)
+    assert v.feasible and b.feasible
+    assert v.config == b.config
+    assert v.objective == b.objective
+
+
+# ---------------------------------------------------------------------------
+# joint solver vs device-axis brute oracle
+# ---------------------------------------------------------------------------
+def _incumbent_for(cl, lams, **kw):
+    sol = OPT.solve_cluster(cl, lams, max_replicas=4, **kw)
+    assert sol.feasible
+    return sol.config
+
+
+@given(cpu=st.integers(6, 30), gpu=st.integers(0, 8),
+       lam_a=st.floats(1.0, 25.0), lam_b=st.floats(1.0, 25.0))
+@settings(max_examples=20, deadline=None)
+def test_hetero_knapsack_matches_brute(cpu, gpu, lam_a, lam_b):
+    cl = hetero_cluster(cpu=float(cpu), gpu=float(gpu))
+    obj = OPT.Objective(alpha=1.0, beta=0.05)
+    k = OPT.solve_cluster(cl, [lam_a, lam_b], obj, max_replicas=4)
+    b = OPT.solve_cluster_brute(cl, [lam_a, lam_b], obj, max_replicas=4)
+    assert k.feasible == b.feasible
+    if k.feasible:
+        assert k.objective == pytest.approx(b.objective, rel=1e-9)
+        assert k.config.fits(cl)
+
+
+@given(gpu_speed=st.floats(1.5, 6.0), delta=st.floats(-5.0, 5.0),
+       lam_a=st.floats(1.0, 20.0), lam_b=st.floats(1.0, 20.0))
+@settings(max_examples=15, deadline=None)
+def test_hetero_knapsack_matches_brute_random_tables(gpu_speed, delta,
+                                                     lam_a, lam_b):
+    cl = ClusterModel("hc", (
+        hetero_pipeline("A", gpu_speed=gpu_speed, gpu_acc_delta=delta),
+        hetero_pipeline("B", l1=0.03, accs=(55.0, 68.0, 90.0),
+                        gpu_speed=gpu_speed, gpu_acc_delta=delta)),
+        cores={"cpu": 20.0, "gpu": 5.0})
+    k = OPT.solve_cluster(cl, [lam_a, lam_b], max_replicas=4)
+    b = OPT.solve_cluster_brute(cl, [lam_a, lam_b], max_replicas=4)
+    assert k.feasible == b.feasible
+    if k.feasible:
+        assert k.objective == pytest.approx(b.objective, rel=1e-9)
+
+
+def test_hetero_knapsack_exact_on_ties():
+    # zero-delta profiles + beta=0 make cpu/gpu placements tie exactly in
+    # objective (incomparable cost vectors carry identical values — a tie
+    # shape the scalar frontier could never hold).  The DP must hit the
+    # exact optimal value, land inside the brute oracle's full argmax set,
+    # and pick deterministically (pruning and caching invisible on ties).
+    cl = hetero_cluster(cpu=20.0, gpu=6.0, gpu_acc_delta=0.0)
+    obj = OPT.Objective(alpha=1.0, beta=0.0)
+    k = OPT.solve_cluster(cl, [8.0, 11.0], obj, max_replicas=4)
+    b = OPT.solve_cluster_brute(cl, [8.0, 11.0], obj, max_replicas=4)
+    assert k.feasible and b.feasible
+    assert k.objective == b.objective
+    # enumerate the oracle's complete argmax set the same way it scores
+    classes = cl.device_classes
+    tabs = [OPT.pareto_frontier_vec(p, lam, obj, classes, max_replicas=4)
+            for p, lam in zip(cl.pipelines, [8.0, 11.0])]
+    import itertools
+    optima = set()
+    for combo in itertools.product(*tabs):
+        tot = [sum(p.cost_vec[c] for p in combo) for c in range(len(classes))]
+        if any(t > bdg + 1e-9 for t, bdg in zip(tot, cl.budget_vector)):
+            continue
+        if sum(p.objective for p in combo) == b.objective:
+            optima.add(ClusterConfig(tuple(p.config for p in combo)))
+    assert len(optima) > 1                 # the scenario genuinely ties
+    assert k.config in optima
+    assert b.config in optima
+    # deterministic: repeat solves (cached and uncached) pick identically
+    again = OPT.solve_cluster(cl, [8.0, 11.0], obj, max_replicas=4)
+    cached = OPT.solve_cluster(cl, [8.0, 11.0], obj, max_replicas=4,
+                               cache=OPT.FrontierCache())
+    assert again.config == k.config == cached.config
+
+
+@given(cpu=st.integers(8, 26), gpu=st.integers(1, 6),
+       sw=st.floats(0.0, 2.0), kbud=st.integers(0, 2),
+       lam_a=st.floats(1.0, 20.0), lam_b=st.floats(1.0, 20.0))
+@settings(max_examples=15, deadline=None)
+def test_hetero_switch_budget_and_cost_match_brute(cpu, gpu, sw, kbud,
+                                                   lam_a, lam_b):
+    cl = hetero_cluster(cpu=float(cpu), gpu=float(gpu))
+    try:
+        current = _incumbent_for(cl, [6.0, 6.0])
+    except AssertionError:
+        return                             # tiny budget: no incumbent to hold
+    k = OPT.solve_cluster(cl, [lam_a, lam_b], max_replicas=4,
+                          current=current, switch_cost=sw,
+                          switch_budget=kbud)
+    b = OPT.solve_cluster_brute(cl, [lam_a, lam_b], max_replicas=4,
+                                current=current, switch_cost=sw,
+                                switch_budget=kbud)
+    assert k.feasible == b.feasible
+    if k.feasible:
+        assert k.objective == pytest.approx(b.objective, rel=1e-9)
+        assert k.n_switches <= kbud
+
+
+@given(cpu=st.integers(8, 26), gpu=st.integers(1, 6),
+       lam_a=st.floats(1.0, 20.0), lam_b=st.floats(1.0, 20.0))
+@settings(max_examples=15, deadline=None)
+def test_hetero_overlap_matches_brute(cpu, gpu, lam_a, lam_b):
+    cl = hetero_cluster(cpu=float(cpu), gpu=float(gpu))
+    try:
+        current = _incumbent_for(cl, [6.0, 6.0])
+    except AssertionError:
+        return
+    k = OPT.solve_cluster(cl, [lam_a, lam_b], max_replicas=4,
+                          current=current, switch_cost=0.3, overlap=True)
+    b = OPT.solve_cluster_brute(cl, [lam_a, lam_b], max_replicas=4,
+                                current=current, switch_cost=0.3,
+                                overlap=True)
+    assert k.feasible == b.feasible
+    if k.feasible:
+        assert k.objective == pytest.approx(b.objective, rel=1e-9)
+        # the committed choice must fit per class through the window
+        assert k.config.fits_transition(cl, current)
+
+
+def test_hetero_overlap_serving_differs_from_committed():
+    # mid-window: serving != committed; the still-serving config is a free
+    # revert and the overlap charge is taken against *serving*, per class
+    cl = hetero_cluster(cpu=22.0, gpu=5.0)
+    # serving planned on an empty gpu pool (cpu-only fleets), committed on
+    # the full pool — guaranteed to differ, like a real mid-rollout window
+    cpu_only = ClusterModel("hc0", cl.pipelines,
+                            cores={"cpu": 22.0, "gpu": 0.0})
+    serving = _incumbent_for(cpu_only, [5.0, 5.0])
+    committed = _incumbent_for(cl, [14.0, 9.0])
+    assert serving != committed
+    k = OPT.solve_cluster(cl, [10.0, 16.0], max_replicas=4,
+                          current=committed, switch_cost=0.4,
+                          overlap=True, serving=serving)
+    b = OPT.solve_cluster_brute(cl, [10.0, 16.0], max_replicas=4,
+                                current=committed, switch_cost=0.4,
+                                overlap=True, serving=serving)
+    assert k.feasible == b.feasible
+    if k.feasible:
+        assert k.objective == pytest.approx(b.objective, rel=1e-9)
+        assert k.config == b.config
+
+
+def test_hetero_scalar_budget_rejected():
+    cl = hetero_cluster()
+    with pytest.raises(ValueError):
+        OPT.solve_cluster(cl, [5.0, 5.0], budget=10.0, max_replicas=4)
+    with pytest.raises(ValueError):
+        OPT.solve_cluster_brute(cl, [5.0, 5.0], budget=10.0, max_replicas=4)
+
+
+def test_single_class_budget_map_matches_scalar_solver():
+    # a one-class budget mapping must pick exactly the scalar solver's
+    # answer (the device axis is invisible with one class)
+    from test_cluster import toy_cluster
+    scalar = toy_cluster(cores=40.0)
+    mapped = ClusterModel("toy", scalar.pipelines, cores={"cpu": 40.0})
+    assert mapped.is_hetero and mapped.cores == 40.0
+    for lams in ([5.0, 20.0], [18.0, 3.0]):
+        a = OPT.solve_cluster(scalar, lams, max_replicas=4)
+        b = OPT.solve_cluster(mapped, lams, max_replicas=4)
+        assert a.feasible == b.feasible
+        if a.feasible:
+            assert a.config == b.config
+            assert a.objective == b.objective
+
+
+# ---------------------------------------------------------------------------
+# per-class static split vs joint
+# ---------------------------------------------------------------------------
+def test_proportional_split_by_class_shares_every_budget():
+    cl = hetero_cluster(cpu=24.0, gpu=6.0)
+    caps = proportional_split_by_class(cl, [10.0, 20.0])
+    assert caps == ((8.0, 2.0), (16.0, 4.0))
+    even = proportional_split_by_class(cl, [0.0, 0.0])
+    assert even == ((12.0, 3.0), (12.0, 3.0))
+
+
+def test_solve_capped_vector_cap_matches_filtered_brute():
+    cl = hetero_cluster()
+    pipe, classes = cl.pipelines[0], cl.device_classes
+    cap = (6.0, 2.0)
+    sol = OPT.solve_capped(pipe, 9.0, cost_cap=cap, max_replicas=4,
+                           classes=classes)
+    pts = [p for p in OPT.pareto_frontier_vec(pipe, 9.0, OPT.Objective(),
+                                              classes, max_replicas=4)
+           if all(cv <= c + 1e-9 for cv, c in zip(p.cost_vec, cap))]
+    assert sol.feasible == bool(pts)
+    if pts:
+        best = max(pts, key=lambda p: p.objective)
+        assert sol.objective == best.objective
+        assert sol.config == best.config
+        assert all(cv <= c + 1e-9 for cv, c in zip(
+            sol.config.cost_by_class(pipe, classes), cap))
+
+
+def test_joint_never_loses_to_per_class_split():
+    cl = hetero_cluster(cpu=20.0, gpu=4.0)
+    for lams in ([6.0, 18.0], [15.0, 5.0], [10.0, 10.0]):
+        joint = BL.cluster_ipa(cl, lams, max_replicas=4)
+        split = BL.cluster_split(cl, lams, "ipa", max_replicas=4)
+        if split.feasible:
+            assert joint.feasible
+            assert joint.objective >= split.objective - 1e-9
+            assert split.config.fits(cl)
+
+
+# ---------------------------------------------------------------------------
+# simulator: per-class ledger
+# ---------------------------------------------------------------------------
+def _sol_config(cl, lams):
+    sol = OPT.solve_cluster(cl, lams, max_replicas=4)
+    assert sol.feasible
+    return sol.config
+
+
+def test_simulator_enforces_per_class_budgets():
+    cl = hetero_cluster(cpu=24.0, gpu=2.0)
+    cfg = _sol_config(cl, [5.0, 5.0])
+    sim = ClusterSimulator(cl, cfg)
+    # a config overflowing the gpu pool alone must be rejected even though
+    # the scalar total fits
+    greedy = PipelineConfig((StageConfig("A_v0", 1, 3, "gpu"),
+                             StageConfig("A_v0", 1, 2, "cpu")))
+    assert sum(greedy.cost_by_class(cl.pipelines[0],
+                                    cl.device_classes)) <= cl.cores
+    with pytest.raises(CoreBudgetExceeded):
+        sim.reconfigure_pipeline(0, greedy)
+
+
+def test_simulator_initial_per_class_overflow_raises():
+    cl = hetero_cluster(cpu=24.0, gpu=1.0)
+    bad = ClusterConfig((
+        PipelineConfig((StageConfig("A_v0", 1, 2, "gpu"),
+                        StageConfig("A_v0", 1, 1, "cpu"))),
+        PipelineConfig((StageConfig("B_v0", 1, 1, "cpu"),
+                        StageConfig("B_v0", 1, 1, "cpu")))))
+    with pytest.raises(CoreBudgetExceeded):
+        ClusterSimulator(cl, bad)
+
+
+def test_transition_overlap_charged_per_class():
+    # moving a stage cpu->gpu holds BOTH classes through the window: the
+    # old cpu fleet serves while the gpu fleet provisions
+    cl = hetero_cluster(cpu=9.0, gpu=2.0)
+    cpu_cfg = ClusterConfig((
+        PipelineConfig((StageConfig("A_v0", 1, 2, "cpu"),
+                        StageConfig("A_v0", 1, 2, "cpu"))),
+        PipelineConfig((StageConfig("B_v0", 1, 1, "cpu"),
+                        StageConfig("B_v0", 1, 1, "cpu")))))
+    sim = ClusterSimulator(cl, cpu_cfg, adaptation_delay=2.0)
+    gpu_move = PipelineConfig((StageConfig("A_v0", 1, 2, "gpu"),
+                               StageConfig("A_v0", 1, 2, "cpu")))
+    sim.reconfigure_pipeline(0, gpu_move)
+    # ledger holds max per class: cpu 4 (old fleet), gpu 2 (new fleet)
+    assert sim._alloc_vec[0] == (4.0, 2.0)
+    assert sim._serving_vec[0] == (4.0, 0.0)
+    # a grant of the cpu cores the move will free must bounce mid-window —
+    # the old cpu fleet is still serving them
+    cpu_grow = PipelineConfig((StageConfig("B_v0", 1, 5, "cpu"),
+                               StageConfig("B_v0", 1, 1, "cpu")))
+    with pytest.raises(CoreBudgetExceeded):
+        sim.reconfigure_pipeline(1, cpu_grow)
+    sim.run_until(3.0)                     # window closes, ledger settles
+    assert sim._alloc_vec[0] == (2.0, 2.0)
+    assert sim._serving_vec[0] == (2.0, 2.0)
+    sim.reconfigure_pipeline(1, cpu_grow)  # freed cpu cores now grantable
+    assert sim.peak_serving_by_class is not None
+
+
+def test_gpu_service_times_drawn_from_gpu_table():
+    cl = hetero_cluster()
+    pipe = cl.pipelines[0]
+    v = pipe.stages[0].variants[0]
+    cfg_cpu = ClusterConfig((
+        PipelineConfig((StageConfig("A_v0", 1, 1, "cpu"),
+                        StageConfig("A_v0", 1, 1, "cpu"))),
+        PipelineConfig((StageConfig("B_v0", 1, 1, "cpu"),
+                        StageConfig("B_v0", 1, 1, "cpu")))))
+    cfg_gpu = ClusterConfig((
+        PipelineConfig((StageConfig("A_v0", 1, 1, "gpu"),
+                        StageConfig("A_v0", 1, 1, "gpu"))),
+        cfg_cpu.pipelines[1]))
+    sim_c = ClusterSimulator(cl, cfg_cpu)
+    sim_g = ClusterSimulator(cl, cfg_gpu)
+    assert sim_c._lat_tab[0][1] == pytest.approx(float(v.latency(1, "cpu")))
+    assert sim_g._lat_tab[0][1] == pytest.approx(float(v.latency(1, "gpu")))
+    assert sim_g._lat_tab[0][1] < sim_c._lat_tab[0][1]

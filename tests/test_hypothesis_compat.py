@@ -1,0 +1,56 @@
+"""Meta-tests for the optional-hypothesis shim: the fallback must really
+run every fixed example (boundary values first, then seeded draws) and be
+deterministic across invocations — a vacuous pass here would silently
+hollow out every property test in the suite."""
+import _hypothesis_compat as HC
+import pytest
+
+
+@pytest.mark.skipif(HC.HAVE_HYPOTHESIS,
+                    reason="real hypothesis installed; fallback inactive")
+def test_fallback_executes_every_fixed_example():
+    seen = []
+
+    @HC.given(x=HC.st.integers(min_value=-3, max_value=9),
+              y=HC.st.sampled_from(["a", "b"]))
+    def prop(x, y):
+        seen.append((x, y))
+
+    prop()
+    assert prop.examples_executed == HC._FALLBACK_EXAMPLES
+    assert len(seen) == HC._FALLBACK_EXAMPLES
+    # boundary examples lead: strategy bounds before pseudo-random draws
+    assert seen[0][0] == -3 and seen[1][0] == 9
+    assert seen[0][1] == "a"
+    assert all(-3 <= x <= 9 and y in ("a", "b") for x, y in seen)
+    # deterministic: a second run replays the identical example sequence
+    first = list(seen)
+    seen.clear()
+    prop()
+    assert seen == first
+
+
+@pytest.mark.skipif(HC.HAVE_HYPOTHESIS,
+                    reason="real hypothesis installed; fallback inactive")
+def test_fallback_floats_respect_bounds_and_boundaries():
+    seen = []
+
+    @HC.given(v=HC.st.floats(min_value=0.5, max_value=2.5))
+    def prop(v):
+        seen.append(v)
+
+    prop()
+    assert seen[:2] == [0.5, 2.5]
+    assert all(0.5 <= v <= 2.5 for v in seen)
+    assert len(seen) == HC._FALLBACK_EXAMPLES
+
+
+@pytest.mark.skipif(HC.HAVE_HYPOTHESIS,
+                    reason="real hypothesis installed; fallback inactive")
+def test_fallback_propagates_failures_with_example_values():
+    @HC.given(x=HC.st.integers(min_value=0, max_value=100))
+    def prop(x):
+        assert x < 50   # boundary example 100 must trip this
+
+    with pytest.raises(AssertionError):
+        prop()

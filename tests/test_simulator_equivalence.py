@@ -12,10 +12,11 @@ import pytest
 
 from repro.core import trace as TR
 from repro.core.cluster import ClusterConfig, ClusterModel
-from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
-                                 StageConfig, StageModel)
+from repro.core.pipeline import (DeviceProfile, ModelVariant, PipelineConfig,
+                                 PipelineModel, StageConfig, StageModel)
 from repro.core.queueing import wait_bound
-from repro.core.simulator import ClusterSimulator, PipelineSimulator
+from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
+                                  StructClusterSimulator)
 from repro.core.simulator_legacy import LegacyTickSimulator
 from repro.serving.request import Request
 
@@ -462,6 +463,123 @@ def test_golden_cluster_trace_is_pinned():
     assert totals == [(241, 241, 0), (1107, 334, 773), (132, 132, 0)]
     assert sim.events_processed == 3325
     assert sim.queued == 0 and sim.in_service == 0
+
+
+def test_golden_trace_single_class_budget_map_is_invisible():
+    """The identical golden scenario on a cluster whose budget is the
+    single-class mapping ``{"cpu": 40.0}`` instead of the scalar ``40.0``
+    must reproduce every pinned number event-for-event: with one device
+    class the per-class ledger is the scalar ledger, and the device axis
+    must be invisible."""
+    base = _golden_cluster()
+    cl = ClusterModel("golden", base.pipelines, cores={"cpu": 40.0})
+    cfg0 = ClusterConfig(tuple(
+        PipelineConfig((StageConfig(p.stages[0].variants[0].name, 2, 2),
+                        StageConfig(p.stages[1].variants[0].name, 2, 1)))
+        for p in cl.pipelines))
+    sim = ClusterSimulator(cl, cfg0, adaptation_delay=1.5)
+    for p, rate in enumerate((18.0, 90.0, 12.0)):
+        for t in TR.arrivals_from_rates(np.full(12, rate), seed=100 + p):
+            sim.inject(Request(arrival=float(t), sla=cl.pipelines[p].sla), p)
+    sim.run_until(5.0)
+    sim.reconfigure_pipeline(0, PipelineConfig(
+        (StageConfig("p0a1", 2, 3), StageConfig("p0b0", 2, 1))))
+    sim.reconfigure_pipeline(1, PipelineConfig(
+        (StageConfig("p1a0", 2, 3), StageConfig("p1b0", 2, 2))))
+    sim.run_until(6.0)
+    sim.reconfigure_pipeline(0, PipelineConfig(
+        (StageConfig("p0a1", 4, 2), StageConfig("p0b0", 2, 1))))
+    sim.run_until(12 + 60 * max(sim.sla_of))
+    assert sim.reconfig_log == [(5.0, 0, 6.5), (5.0, 1, 6.5), (6.0, 0, 7.5)]
+    totals = [(m.arrived, m.completed, m.dropped)
+              for m in sim.metrics_by_pipe]
+    assert totals == [(241, 241, 0), (1107, 334, 773), (132, 132, 0)]
+    assert sim.events_processed == 3325
+    assert sim.queued == 0 and sim.in_service == 0
+
+
+# ---------------------------------------------------------------------------
+# golden heterogeneous cluster trace: pins the per-class ledger semantics
+# (cpu→gpu moves, elementwise max(old, new) transition holding, gpu service
+# times) across BOTH event cores
+# ---------------------------------------------------------------------------
+def _golden_hetero_cluster():
+    """The golden cluster with a gpu class: every heavy ``a1`` variant also
+    ships a gpu build that is 4x faster at alloc 1 with +3 accuracy, under
+    a small shared gpu budget next to the cpu one."""
+    def mk(name, lat1, lat2):
+        def coeffs(l1):
+            return (0.0, l1 * 0.7, l1 * 0.3)
+        a1 = ModelVariant(
+            f"{name}a1", 75.0, 2, coeffs(2 * lat1),
+            device_profiles=(
+                DeviceProfile("cpu", coeffs(2 * lat1), 2, 75.0),
+                DeviceProfile("gpu", coeffs(2 * lat1 / 4.0), 1, 78.0)))
+        s1 = StageModel(
+            f"{name}_a",
+            (ModelVariant(f"{name}a0", 60.0, 1, coeffs(lat1)), a1),
+            sla=5 * lat1, batch_choices=(1, 2, 4))
+        s2 = StageModel(
+            f"{name}_b", (ModelVariant(f"{name}b0", 70.0, 1, coeffs(lat2)),),
+            sla=5 * lat2, batch_choices=(1, 2, 4))
+        return PipelineModel(name, (s1, s2))
+    return ClusterModel("golden_hetero",
+                        (mk("p0", 0.05, 0.03), mk("p1", 0.04, 0.02),
+                         mk("p2", 0.06, 0.035)),
+                        cores={"cpu": 40.0, "gpu": 4.0})
+
+
+def _replay_golden_hetero(sim_cls):
+    cl = _golden_hetero_cluster()
+    cfg0 = ClusterConfig(tuple(
+        PipelineConfig((StageConfig(p.stages[0].variants[0].name, 2, 2),
+                        StageConfig(p.stages[1].variants[0].name, 2, 1)))
+        for p in cl.pipelines))
+    sim = sim_cls(cl, cfg0, adaptation_delay=1.5)
+    for p, rate in enumerate((18.0, 90.0, 12.0)):
+        for t in TR.arrivals_from_rates(np.full(12, rate), seed=200 + p):
+            sim.inject(Request(arrival=float(t), sla=cl.pipelines[p].sla), p)
+    sim.run_until(5.0)
+    # p0 moves its first stage onto the gpu class mid-trace; p1 grows on cpu
+    sim.reconfigure_pipeline(0, PipelineConfig(
+        (StageConfig("p0a1", 2, 3, "gpu"), StageConfig("p0b0", 2, 1))))
+    sim.reconfigure_pipeline(1, PipelineConfig(
+        (StageConfig("p1a0", 2, 3), StageConfig("p1b0", 2, 2))))
+    sim.run_until(6.0)
+    # supersede p0's pending gpu rollout mid-window with a bigger batch
+    sim.reconfigure_pipeline(0, PipelineConfig(
+        (StageConfig("p0a1", 4, 2, "gpu"), StageConfig("p0b0", 2, 1))))
+    sim.run_until(12 + 60 * max(sim.sla_of))
+    totals = tuple((m.arrived, m.completed, m.dropped)
+                   for m in sim.metrics_by_pipe)
+    return (tuple(sim.reconfig_log), sim.n_reconfigs, totals,
+            sim.events_processed, sim.queued, sim.in_service,
+            sim.peak_serving_by_class, sim._alloc_vec, sim._serving_vec)
+
+
+def test_golden_hetero_cluster_trace_is_pinned():
+    """Seeded heterogeneous golden trace with a scripted cpu→gpu move
+    (superseded mid-window): the event count, per-pipeline totals, the
+    reconfiguration log, the per-class serving peak and the final
+    per-class ledgers are golden, and both event cores must replay them
+    bit-identically."""
+    heap = _replay_golden_hetero(ClusterSimulator)
+    struct = _replay_golden_hetero(StructClusterSimulator)
+    assert heap == struct
+    (log, n_rec, totals, events, queued, in_service,
+     peak_by_class, alloc_vec, serving_vec) = heap
+    assert log == ((5.0, 0, 6.5), (5.0, 1, 6.5), (6.0, 0, 7.5))
+    assert n_rec == 3
+    assert totals == ((223, 223, 0), (1117, 336, 781), (126, 126, 0))
+    assert events == 3345
+    assert queued == 0 and in_service == 0
+    # p0 settled with its first stage on gpu (2 replicas x alloc 1 gpu
+    # units) and its second on cpu (1 replica x alloc 1)
+    assert serving_vec[0] == (1.0, 2.0)
+    assert alloc_vec[0] == (1.0, 2.0)
+    # the other pipelines never touch the gpu class
+    assert serving_vec[1][1] == 0.0 and serving_vec[2][1] == 0.0
+    assert peak_by_class == (11.0, 2.0)
 
 
 @pytest.mark.parametrize("name", sorted(EQUIV_TRACES))
