@@ -53,6 +53,8 @@ from repro.core.simulator import PipelineSimulator        # noqa: E402
 from repro.core.simulator_legacy import LegacyTickSimulator  # noqa: E402
 from repro.serving.request import Request                 # noqa: E402
 
+from profiling_util import maybe_profile                  # noqa: E402
+
 POLICIES = ("ipa", "fa2_low", "fa2_high", "rim")
 
 
@@ -151,11 +153,14 @@ def bench_core(pipe, rates, arrivals, repeats: int = 5) -> dict:
                              and best_new["dropped"] == best_old["dropped"])}
 
 
-def bench_policies(pipe, rates, policies=POLICIES) -> dict:
+def bench_policies(pipe, rates, policies=POLICIES, profile=False) -> dict:
     out = {}
     for pol in policies:
         t0 = time.perf_counter()
-        res = AD.run_trace(pipe, rates, policy=pol, seed=11, max_replicas=96)
+        res = maybe_profile(
+            profile, f"policy:{pol}",
+            lambda: AD.run_trace(pipe, rates, policy=pol, seed=11,
+                                 max_replicas=96))
         wall = time.perf_counter() - t0
         out[pol] = {
             "wall_s": round(wall, 3),
@@ -183,6 +188,10 @@ def main() -> int:
                     help="trace length (default: 600, smoke: 60)")
     ap.add_argument("--out", default=None,
                     help="output JSON path (default: <repo>/BENCH_sim.json)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each core/policy run and print the "
+                         "top-25 cumulative table; throughput gates are "
+                         "informational only under profiling overhead")
     args = ap.parse_args()
 
     seconds = args.seconds or (60 if args.smoke else 600)
@@ -193,7 +202,8 @@ def main() -> int:
           f"rate {rates.min():.1f}-{rates.max():.1f} rps, "
           f"4-stage pipeline '{pipe.name}'")
 
-    core = bench_core(pipe, rates, arrivals)
+    core = maybe_profile(args.profile, "core:new_vs_legacy",
+                         lambda: bench_core(pipe, rates, arrivals))
     print(f"core: new {core['new']['wall_s']}s "
           f"({core['new']['events']} events) vs legacy "
           f"{core['legacy']['wall_s']}s ({core['legacy']['events']} events) "
@@ -203,6 +213,8 @@ def main() -> int:
     # (deadline check before replica scan) + hot-loop locals sustain ~6x
     # full / ~9.5x smoke on this container; floors keep headroom
     floor = 4.0 if args.smoke else 5.5
+    if args.profile:
+        floor = 0.0                      # informational run, gates off
     if core["speedup"] < floor:
         print(f"FAIL: event-driven core speedup {core['speedup']}x "
               f"below the {floor}x floor")
@@ -225,8 +237,11 @@ def main() -> int:
     # sustains ~15-60k ev/s here.  Floors keep ~4x headroom for slow
     # containers while still catching a solver-path regression loudly.
     policy_floor = 3000 if args.smoke else 6500
+    if args.profile:
+        policy_floor = 0                 # informational run, gates off
     policies = ("ipa",) if args.smoke else POLICIES
-    result["policies"] = bench_policies(pipe, rates, policies)
+    result["policies"] = bench_policies(pipe, rates, policies,
+                                        profile=args.profile)
     for pol, r in result["policies"].items():
         print(f"policy {pol}: {r['wall_s']}s wall "
               f"(solver {r['solver_wall_s']}s + sim {r['sim_wall_s']}s), "
@@ -242,7 +257,9 @@ def main() -> int:
     # per-phase breakdown is exactly the diagnostic worth keeping — but
     # the canonical BENCH_sim.json ratchet artifact is only overwritten
     # by a passing full run
-    if args.out or (not args.smoke and not slow):
+    # profiled walls are inflated by instrumentation — never let them
+    # overwrite the canonical ratchet artifact
+    if args.out or (not args.smoke and not slow and not args.profile):
         out = args.out or os.path.join(os.path.dirname(__file__), "..",
                                        "BENCH_sim.json")
         with open(out, "w") as f:

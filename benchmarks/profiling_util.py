@@ -1,0 +1,36 @@
+"""Shared ``--profile`` support for the benchmark scripts.
+
+Wraps a bench section in ``cProfile`` and prints the top-25 functions by
+cumulative time, so perf PRs start from evidence instead of guesses.
+Profiling roughly doubles interpreter overhead, so callers skip their
+hard throughput gates when it is on (the numbers are for reading, not
+ratcheting).
+"""
+from __future__ import annotations
+
+import cProfile
+import pstats
+from typing import Callable, TypeVar
+
+T = TypeVar("T")
+
+TOP_N = 25
+
+
+def maybe_profile(enabled: bool, label: str, fn: Callable[[], T]) -> T:
+    """Run ``fn`` (optionally under cProfile) and return its result.
+
+    When ``enabled``, dumps the top-``TOP_N`` cumulative-time rows to
+    stdout under a ``label`` header after the call."""
+    if not enabled:
+        return fn()
+    prof = cProfile.Profile()
+    prof.enable()
+    try:
+        out = fn()
+    finally:
+        prof.disable()
+    print(f"\n=== cProfile [{label}] — top {TOP_N} by cumulative time ===")
+    pstats.Stats(prof).strip_dirs().sort_stats("cumulative").print_stats(
+        TOP_N)
+    return out

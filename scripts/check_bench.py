@@ -1,0 +1,151 @@
+#!/usr/bin/env python
+"""Bench-regression gate: the checked-in BENCH artifacts can only ratchet.
+
+Compares the throughput and solve-wall fields of ``BENCH_sim.json`` and
+``BENCH_scale.json`` against the recorded baselines in
+``scripts/bench_baselines/`` and fails on any >20% regression — an ev/s
+or speedup field dropping, or a solver-wall field rising, past the
+tolerance.  Wired into ``scripts/tier1.sh``, where it is a pure JSON
+diff (milliseconds): day-to-day the artifacts equal the baselines and
+the gate is a no-op; the moment a PR regenerates a BENCH file with worse
+numbers, tier-1 fails loudly and the author either fixes the regression
+or consciously re-records the baseline with ``--update`` (and defends
+the change in review).  Live perf floors are the benches' own smoke
+gates; this gate pins the *recorded evidence* so it cannot drift
+backwards silently.
+
+Usage:
+    python scripts/check_bench.py            # gate (tier-1 mode)
+    python scripts/check_bench.py --update   # re-record baselines
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import shutil
+import sys
+
+REPO = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BASELINE_DIR = os.path.join(REPO, "scripts", "bench_baselines")
+TOLERANCE = 0.20
+
+# (dotted path, direction): "up" = higher is better (throughput), "down" =
+# lower is better (solve wall).  A "*" component fans out over every key
+# at that level, so new policies/cores are gated automatically.
+SPECS = {
+    "BENCH_sim.json": (
+        ("core.speedup", "up"),
+        ("core.new.events_per_sec", "up"),
+        ("policies.*.events_per_sec", "up"),
+        ("policies.*.solver_wall_s", "down"),
+    ),
+    "BENCH_scale.json": (
+        ("simulator.heap.evps", "up"),
+        ("simulator.struct.evps", "up"),
+        ("simulator.round.evps", "up"),
+        ("simulator.speedup", "up"),
+        ("simulator.round_speedup", "up"),
+        ("solver.max_solve_s", "down"),
+        ("adapter.*.solver_wall_s", "down"),
+    ),
+}
+
+
+def _resolve(obj, parts):
+    """Expand a dotted path with ``*`` fan-out into (path, value) leaves."""
+    if not parts:
+        return [("", obj)]
+    head, rest = parts[0], parts[1:]
+    if head == "*":
+        if not isinstance(obj, dict):
+            return []
+        out = []
+        for k in obj:
+            out.extend((f"{k}.{p}".rstrip("."), v)
+                       for p, v in _resolve(obj[k], rest))
+        return out
+    if not isinstance(obj, dict) or head not in obj:
+        return []
+    return [(f"{head}.{p}".rstrip("."), v)
+            for p, v in _resolve(obj[head], rest)]
+
+
+def check_file(name: str, specs, tolerance: float) -> list:
+    cand_path = os.path.join(REPO, name)
+    base_path = os.path.join(BASELINE_DIR, name)
+    for p in (cand_path, base_path):
+        if not os.path.exists(p):
+            return [f"{name}: missing {p} (run the full bench, then "
+                    f"`check_bench.py --update` to record the baseline)"]
+    with open(cand_path) as f:
+        cand = json.load(f)
+    with open(base_path) as f:
+        base = json.load(f)
+    fails = []
+    for path, direction in specs:
+        parts = path.split(".")
+        base_leaves = dict(_resolve(base, parts))
+        cand_leaves = dict(_resolve(cand, parts))
+        if not base_leaves:
+            fails.append(f"{name}: baseline lacks `{path}` — re-record "
+                         f"with --update")
+            continue
+        for leaf, bval in base_leaves.items():
+            cval = cand_leaves.get(leaf)
+            if cval is None:
+                fails.append(f"{name}: `{leaf}` present in baseline but "
+                             f"missing from the candidate")
+                continue
+            bval, cval = float(bval), float(cval)
+            if direction == "up":
+                floor = bval * (1.0 - tolerance)
+                if cval < floor:
+                    fails.append(
+                        f"{name}: `{leaf}` regressed {bval:g} -> {cval:g} "
+                        f"(> {tolerance:.0%} drop)")
+            else:
+                ceil = bval * (1.0 + tolerance)
+                if cval > ceil:
+                    fails.append(
+                        f"{name}: `{leaf}` regressed {bval:g} -> {cval:g} "
+                        f"(> {tolerance:.0%} rise)")
+    return fails
+
+
+def update_baselines() -> int:
+    os.makedirs(BASELINE_DIR, exist_ok=True)
+    for name in SPECS:
+        src = os.path.join(REPO, name)
+        if not os.path.exists(src):
+            print(f"check_bench: cannot record {name}: not present "
+                  f"(run the full bench first)")
+            return 1
+        shutil.copyfile(src, os.path.join(BASELINE_DIR, name))
+        print(f"check_bench: recorded {name} -> scripts/bench_baselines/")
+    return 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--update", action="store_true",
+                    help="re-record the baselines from the current BENCH "
+                         "artifacts (after a deliberate perf change)")
+    ap.add_argument("--tolerance", type=float, default=TOLERANCE,
+                    help="allowed relative regression (default 0.20)")
+    args = ap.parse_args()
+    if args.update:
+        return update_baselines()
+    fails = []
+    for name, specs in SPECS.items():
+        fails.extend(check_file(name, specs, args.tolerance))
+    for msg in fails:
+        print(f"check_bench: REGRESSION {msg}")
+    if not fails:
+        print("check_bench: BENCH_sim.json + BENCH_scale.json within "
+              f"{args.tolerance:.0%} of recorded baselines")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

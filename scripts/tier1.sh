@@ -30,7 +30,12 @@
 # scripts/check_tests.py ratchets the collected-test count against
 # scripts/tier1_test_floor.txt so the suite can only grow — a module
 # that silently stops collecting is a loud failure, not missing
-# coverage.  The doc-link checker fails if README.md /
+# coverage.  scripts/check_bench.py pins the recorded bench evidence:
+# the checked-in BENCH_sim.json / BENCH_scale.json throughput and
+# solve-wall fields must stay within 20% of the recorded baselines
+# (scripts/bench_baselines/), so a PR cannot silently regenerate the
+# artifacts with worse numbers — deliberate changes re-record with
+# --update.  The doc-link checker fails if README.md /
 # docs/ARCHITECTURE.md reference a file or symbol that no longer exists.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -45,4 +50,5 @@ python benchmarks/bench_simulator.py --smoke
 python benchmarks/bench_cluster.py --smoke
 python benchmarks/bench_scale.py --smoke
 python benchmarks/sweep.py --smoke
+python scripts/check_bench.py
 bash scripts/check_docs.sh

@@ -39,6 +39,7 @@ from repro.core.accuracy import pas_of
 from repro.core.cluster import ClusterConfig, ClusterModel
 from repro.core.pipeline import PipelineConfig, PipelineModel
 from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
+                                  RoundPipelineSimulator,
                                   StructPipelineSimulator, EVENT_CORES,
                                   make_cluster_simulator)
 from repro.core.trace import SeedLike, arrivals_from_rates
@@ -117,8 +118,9 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
     ``solver`` overrides the policy's enumeration solver (``vec`` — the
     default hot path — ``brute`` or ``enum``); the vec-vs-brute pinning
     tests replay identical traces through both.  ``event_core`` selects
-    the simulator hot loop (``"heap"`` reference or ``"struct"`` — the
-    structured-array core, event-for-event identical)."""
+    the simulator hot loop (``"heap"`` reference, ``"struct"`` — the
+    structured-array core — or ``"round"``, the columnar service-round
+    engine; all event-for-event identical)."""
     rates = np.asarray(rates, np.float64)
     times = arrivals_from_rates(rates, seed=seed)
 
@@ -143,8 +145,9 @@ def run_trace(pipe: PipelineModel, rates: np.ndarray, policy: str = "ipa",
     # can recycle them through a pool instead of churning the allocator
     # (the struct core carries no request objects and ignores the pool)
     pool = RequestPool()
-    sim_cls = PipelineSimulator if event_core == "heap" \
-        else StructPipelineSimulator
+    sim_cls = {"heap": PipelineSimulator,
+               "struct": StructPipelineSimulator,
+               "round": RoundPipelineSimulator}[event_core]
     sim = sim_cls(pipe, sol.config, request_pool=pool)
     sim.lam_est = lam0
     records: List[IntervalRecord] = []
@@ -490,9 +493,11 @@ def run_cluster_trace(cluster: ClusterModel,
     ``FrontierCache`` instance shares it across runs of the *same* model
     objects.
 
-    ``event_core``: the simulator hot loop — ``"heap"`` (reference) or
-    ``"struct"`` (structured-array batch-pop core, event-for-event
-    identical; what BENCH_scale runs).
+    ``event_core``: the simulator hot loop — ``"heap"`` (reference),
+    ``"struct"`` (structured-array batch-pop core) or ``"round"``
+    (service-round core: per-pipeline event frontiers retired in
+    independent rounds), all event-for-event identical; BENCH_scale
+    replays and gates all three.
     """
     rates = [np.asarray(r, np.float64) for r in rates]
     if len(rates) != cluster.n_pipelines:
@@ -516,7 +521,9 @@ def run_cluster_trace(cluster: ClusterModel,
                   # downsizer's freed cores are never granted mid-window
                   "overlap": adaptation_delay > 0}
     if frontier_cache == "auto":
-        cache = OPT.FrontierCache()
+        # the planner cache layers whole-solve / DP-prefix / eval memos on
+        # top of the frontier memo, all exact-keyed: bit-identical results
+        cache = OPT.PlannerCache()
     else:
         cache = frontier_cache          # an instance, or None = bypass
 

@@ -96,9 +96,82 @@ class StageOptions:
     devices: List[str] = dataclasses.field(default_factory=list)
 
 
+class _StageTable:
+    """Rate-independent expansion of one stage's (variant, device, batch)
+    grid: every column ``stage_options`` computes that does not depend on
+    the arrival rate, flattened in the exact enumeration order.  Cached by
+    ``PlannerCache`` so a frontier build at a *new* rate only runs the
+    cheap n*/feasibility arithmetic over these columns instead of
+    re-walking the model objects (the profiled hot spot of a cold solve).
+    The per-option floats are the very values the uncached loop computes
+    (same calls, made once), so the rebuilt ``StageOptions`` is
+    bit-identical by construction.  Shared arrays (``batches``, ``acc``,
+    ``accn``) and lists are treated as immutable by all callers — the same
+    discipline as ``FrontierCache``'s shared frontier lists."""
+
+    __slots__ = ("names", "devices", "batches_l", "h", "svc", "alloc",
+                 "acc_l", "accn_l", "batches", "acc", "accn")
+
+    def __init__(self, stage: StageModel):
+        names, devices, batches, h, svc, alloc, acc, accn = \
+            ([] for _ in range(8))
+        pairs = [(v, d) for v in stage.variants for d in v.device_classes]
+        norm = dict(zip(((v.name, d) for v, d in pairs),
+                        ACC.rank_normalized([v.acc(d) for v, d in pairs])))
+        for v in stage.variants:
+            for d in v.device_classes:
+                for b in stage.batch_choices:
+                    names.append(v.name)
+                    devices.append(d)
+                    batches.append(b)
+                    h.append(float(v.throughput(b, d)))
+                    svc.append(float(v.latency(b, d)))
+                    alloc.append(v.alloc(d))
+                    acc.append(v.acc(d))
+                    accn.append(norm[(v.name, d)])
+        self.names = names
+        self.devices = devices
+        self.batches_l = batches
+        self.h = h
+        self.svc = svc
+        self.alloc = alloc
+        self.acc_l = acc
+        self.accn_l = accn
+        self.batches = np.array(batches)
+        self.acc = np.array(acc)
+        self.accn = np.array(accn)
+
+
+def _options_from_table(tab: _StageTable, arrival: float, max_replicas: int,
+                        latency_model: str) -> StageOptions:
+    """The rate-dependent half of ``stage_options`` over cached static
+    columns — the identical scalar arithmetic on the identical floats, so
+    the result is bit-for-bit the uncached expansion."""
+    lat, cost, reps, feas = [], [], [], []
+    qd = {b: float(queue_delay(b, arrival)) for b in set(tab.batches_l)}
+    expected = latency_model == "expected"
+    for i, b in enumerate(tab.batches_l):
+        h = tab.h[i]
+        n = (max(1, math.ceil(max(arrival, 1e-9) / h)) if h > 0
+             else max_replicas + 1)
+        ok = n <= max_replicas and n * h >= arrival - 1e-9
+        svc = tab.svc[i]
+        if expected:
+            lat.append(svc + float(expected_wait(b, arrival, n, svc)))
+        else:
+            lat.append(svc + qd[b])
+        cost.append(n * tab.alloc[i])
+        reps.append(n)
+        feas.append(ok)
+    return StageOptions(tab.names, tab.batches, np.array(lat),
+                        np.array(cost, np.float64), tab.acc, tab.accn,
+                        np.array(reps), np.array(feas), tab.devices)
+
+
 def stage_options(stage: StageModel, arrival: float,
                   max_replicas: int = DEFAULT_MAX_REPLICAS,
-                  latency_model: str = "worst_case") -> StageOptions:
+                  latency_model: str = "worst_case",
+                  tables: Optional[dict] = None) -> StageOptions:
     """Flatten a stage's (variant, device class, batch) grid with n*
     substituted.  The device loop nests between variant and batch, so a
     single-class stage enumerates bit-identically to the pre-device grid.
@@ -107,9 +180,19 @@ def stage_options(stage: StageModel, arrival: float,
     bit-identical to the original planner); ``"expected"`` opts into the
     M/M/c-style mean delay (``core.queueing.expected_wait``) at the
     substituted replica count n*.
+
+    ``tables``: an optional ``{stage: _StageTable}`` memo (threaded down
+    from ``PlannerCache``) of the rate-independent columns; with it only
+    the n*/feasibility/queue-delay arithmetic runs per rate.  Both paths
+    produce bit-identical ``StageOptions`` (property-tested).
     """
     if latency_model not in ("worst_case", "expected"):
         raise ValueError(latency_model)
+    if tables is not None:
+        tab = tables.get(stage)
+        if tab is None:
+            tab = tables[stage] = _StageTable(stage)
+        return _options_from_table(tab, arrival, max_replicas, latency_model)
     names, batches, lat, cost, acc, accn, reps, feas = ([] for _ in range(8))
     devices: List[str] = []
     pairs = [(v, d) for v in stage.variants for d in v.device_classes]
@@ -563,16 +646,19 @@ class FrontierPoint:
 
 def _combo_eval(pipe: PipelineModel, arrival: float, obj: Objective,
                 max_replicas: int, latency_model: str,
-                max_combos: int = 1 << 22):
+                max_combos: int = 1 << 22,
+                tables: Optional[dict] = None):
     """Vectorized evaluation of the full per-pipeline option cross-product.
 
     Returns (opts, feasible-combo indices as per-stage pick columns, cost,
     objective, pas) over feasible combos only.  Shared by the frontier
     builder and the brute cluster oracle.  The evaluation itself is one
     ``_broadcast_eval`` pass; only the surviving combos' per-stage pick
-    columns are materialized.
+    columns are materialized.  ``tables``: optional ``_StageTable`` memo
+    for the rate-independent half of ``stage_options``.
     """
-    opts = [stage_options(s, arrival, max_replicas, latency_model)
+    opts = [stage_options(s, arrival, max_replicas, latency_model,
+                          tables=tables)
             for s in pipe.stages]
     sizes = [len(o.names) for o in opts]
     K = math.prod(sizes)
@@ -618,7 +704,8 @@ def _combo_cost_by_class(opts, picks, classes: Sequence[str]) -> np.ndarray:
 def pareto_frontier_vec(pipe: PipelineModel, arrival: float,
                         obj: Objective, classes: Tuple[str, ...],
                         max_replicas: int = DEFAULT_MAX_REPLICAS,
-                        latency_model: str = "worst_case"
+                        latency_model: str = "worst_case",
+                        tables: Optional[dict] = None
                         ) -> List[FrontierPoint]:
     """Vector-cost Pareto frontier of one pipeline at one rate: the
     surviving set under *strict* vector dominance — a combo dies only when
@@ -629,7 +716,7 @@ def pareto_frontier_vec(pipe: PipelineModel, arrival: float,
     discipline of ``_prune_candidates``.  Points come back in combo order
     with ``cost_vec`` set (aligned with ``classes``)."""
     opts, picks, cost, score, pas_v, lat = _combo_eval(
-        pipe, arrival, obj, max_replicas, latency_model)
+        pipe, arrival, obj, max_replicas, latency_model, tables=tables)
     n = len(cost)
     if n == 0:
         return []
@@ -664,7 +751,8 @@ def pareto_frontier_vec(pipe: PipelineModel, arrival: float,
 def pareto_frontier(pipe: PipelineModel, arrival: float,
                     obj: Objective = Objective(),
                     max_replicas: int = DEFAULT_MAX_REPLICAS,
-                    latency_model: str = "worst_case") -> List[FrontierPoint]:
+                    latency_model: str = "worst_case",
+                    tables: Optional[dict] = None) -> List[FrontierPoint]:
     """Cost -> objective Pareto frontier of one pipeline at one rate.
 
     Points come back sorted by ascending cost with strictly increasing
@@ -674,7 +762,7 @@ def pareto_frontier(pipe: PipelineModel, arrival: float,
     run a small knapsack per pipeline instead of the full cross-product.
     """
     opts, picks, cost, score, pas_v, lat = _combo_eval(
-        pipe, arrival, obj, max_replicas, latency_model)
+        pipe, arrival, obj, max_replicas, latency_model, tables=tables)
     if len(cost) == 0:
         return []
     order = np.lexsort((-score, cost))
@@ -759,16 +847,23 @@ class FrontierCache:
             self.hits += 1
             return pts
         self.misses += 1
+        tables = self._stage_tables()
         if classes is None:
             pts = pareto_frontier(pipe, lam, obj, max_replicas,
-                                  latency_model)
+                                  latency_model, tables=tables)
         else:
             pts = pareto_frontier_vec(pipe, lam, obj, classes, max_replicas,
-                                      latency_model)
+                                      latency_model, tables=tables)
         if len(self._tab) >= self.max_entries:
             self._tab.pop(next(iter(self._tab)))
         self._tab[key] = pts
         return pts
+
+    def _stage_tables(self) -> Optional[dict]:
+        """Rate-independent ``_StageTable`` memo for frontier builds —
+        ``None`` here (exact legacy build path); ``PlannerCache`` overrides
+        with its table store."""
+        return None
 
     def clear(self) -> None:
         self._tab.clear()
@@ -815,6 +910,127 @@ class FrontierCache:
         total = dh + dm
         return {"hits": dh, "misses": dm, "entries": len(self._tab),
                 "hit_rate": round(dh / total, 4) if total else 0.0}
+
+
+_UNSET = object()
+
+
+class PlannerCache(FrontierCache):
+    """The incremental planning layer: a ``FrontierCache`` plus every memo
+    the cross-interval ``solve_cluster`` fast path needs, all exact-keyed
+    on value objects (the same discipline as the frontier memo) so every
+    path is **bit-identical** to planning without it (property-tested
+    against ``cache=None`` across switch costs, switch budgets, overlap
+    charging and hetero vector costs).
+
+    What it adds over the plain frontier memo:
+
+    * ``_stage_tab`` — rate-independent ``_StageTable`` columns per stage,
+      so a frontier build at a *new* rate (the dominant cost of a decision
+      boundary once frontiers repeat) only runs the n*/feasibility
+      arithmetic instead of re-walking the model objects.
+    * ``_eval_tab`` — ``evaluate_config`` memo for the incumbent/revert
+      stay candidates (keyed on the exact (pipe, config, rate, objective,
+      latency model, classes) tuple).
+    * ``_prune_tab`` — dominance-pruned knapsack candidate tables keyed on
+      the exact candidate values, shared across solves whose tab repeats.
+    * ``_sol_tab`` — whole-``solve_cluster`` memo keyed on every solve
+      input; a boundary whose demand estimates and incumbent both held
+      returns the previous solution outright.
+    * ``_dp_state`` — the incumbent knapsack DP (per-pipeline dp rows and
+      pick tables).  The next solve detects which pipelines' candidate
+      tabs actually changed and resumes the DP after the longest unchanged
+      *prefix*; the DP processes pipelines in order, so a prefix with
+      identical tabs provably reproduces identical dp/pick rows (same
+      float ops in the same order) and only the changed suffix re-solves
+      against the inherited dp vector (the residual-budget view of the
+      prefix).  A change in the first pipeline, a different budget grid or
+      a different switch budget can't prove any reuse — those fall back to
+      the full DP from scratch.  Either way the backtrack runs over the
+      same pick tables a cold solve would produce: bit-identical, not
+      merely equal-objective.
+
+    Counters (`sol_hits`/`sol_misses`, `dp_prefix_pipes`, `dp_full_hits`)
+    surface in ``stats`` for bench observability.  The DP state is
+    volatile and intentionally not pickled (the sweep harness ships warm
+    caches across processes; the memo dicts travel, the incumbent DP does
+    not)."""
+
+    __slots__ = ("_stage_tab", "_eval_tab", "_prune_tab", "_sol_tab",
+                 "_dp_state", "sol_hits", "sol_misses", "dp_prefix_pipes",
+                 "dp_full_hits")
+
+    def __init__(self, quantize: Optional[float] = None,
+                 max_entries: int = 4096):
+        super().__init__(quantize, max_entries)
+        self._stage_tab: dict = {}
+        self._eval_tab: dict = {}
+        self._prune_tab: dict = {}
+        self._sol_tab: dict = {}
+        self._dp_state: Optional[dict] = None
+        self.sol_hits = 0
+        self.sol_misses = 0
+        self.dp_prefix_pipes = 0
+        self.dp_full_hits = 0
+
+    def _stage_tables(self) -> Optional[dict]:
+        return self._stage_tab
+
+    def eval_config(self, pipe, config, arrival, obj, latency_model,
+                    classes):
+        """Memoized ``evaluate_config`` (including ``None`` results)."""
+        key = (pipe, config, float(arrival), obj, latency_model, classes)
+        out = self._eval_tab.get(key, _UNSET)
+        if out is _UNSET:
+            out = evaluate_config(pipe, config, arrival, obj, latency_model,
+                                  classes)
+            if len(self._eval_tab) >= self.max_entries:
+                self._eval_tab.pop(next(iter(self._eval_tab)))
+            self._eval_tab[key] = out
+        return out
+
+    def clear(self) -> None:
+        super().clear()
+        self._stage_tab.clear()
+        self._eval_tab.clear()
+        self._prune_tab.clear()
+        self._sol_tab.clear()
+        self._dp_state = None
+
+    def __getstate__(self):
+        state = super().__getstate__()
+        state.update(stage_tab=self._stage_tab, eval_tab=self._eval_tab,
+                     prune_tab=self._prune_tab, sol_tab=self._sol_tab,
+                     sol_hits=self.sol_hits, sol_misses=self.sol_misses,
+                     dp_prefix_pipes=self.dp_prefix_pipes,
+                     dp_full_hits=self.dp_full_hits)
+        return state
+
+    def __setstate__(self, state):
+        super().__setstate__(state)
+        self._stage_tab = state.get("stage_tab", {})
+        self._eval_tab = state.get("eval_tab", {})
+        self._prune_tab = state.get("prune_tab", {})
+        self._sol_tab = state.get("sol_tab", {})
+        self._dp_state = None
+        self.sol_hits = state.get("sol_hits", 0)
+        self.sol_misses = state.get("sol_misses", 0)
+        self.dp_prefix_pipes = state.get("dp_prefix_pipes", 0)
+        self.dp_full_hits = state.get("dp_full_hits", 0)
+
+    @property
+    def stats(self) -> dict:
+        out = FrontierCache.stats.fget(self)
+        total = self.sol_hits + self.sol_misses
+        out["planner"] = {
+            "sol_hits": self.sol_hits, "sol_misses": self.sol_misses,
+            "sol_hit_rate": round(self.sol_hits / total, 4) if total
+            else 0.0,
+            "dp_prefix_pipes": self.dp_prefix_pipes,
+            "dp_full_hits": self.dp_full_hits,
+            "stage_tables": len(self._stage_tab),
+        }
+        return out
 
 
 def _frontier(pipe: PipelineModel, arrival: float, obj: Objective,
@@ -1083,6 +1299,17 @@ def _resolve_weights(cluster, sla_weights) -> List[float]:
     return [float(w) for w in sla_weights]
 
 
+def _remember(plan: Optional["PlannerCache"], skey, sol):
+    """Store a finished solve in the planner's whole-solve memo (FIFO
+    capped).  Infeasible solutions are remembered too — re-asking the same
+    impossible question is just as common at a flapping boundary."""
+    if plan is not None and skey is not None:
+        if len(plan._sol_tab) >= plan.max_entries:
+            plan._sol_tab.pop(next(iter(plan._sol_tab)))
+        plan._sol_tab[skey] = sol
+    return sol
+
+
 def solve_cluster(cluster, arrivals: Sequence[float],
                   obj: Objective = Objective(),
                   budget: Optional[float] = None,
@@ -1155,7 +1382,12 @@ def solve_cluster(cluster, arrivals: Sequence[float],
     ``cache``: an optional ``FrontierCache`` memoizing the per-pipeline
     frontier builds across calls (the dominant cost when rates repeat
     across adaptation intervals).  With exact keying (the default cache
-    construction) results are bit-identical to ``cache=None``.
+    construction) results are bit-identical to ``cache=None``.  Passing a
+    ``PlannerCache`` (the adapter's default) additionally memoizes whole
+    solves on their exact inputs, the incumbent evaluations, and the
+    knapsack DP's unchanged pipeline prefix across consecutive calls —
+    every layer keyed on exact values, so still bit-identical to
+    ``cache=None`` (property-tested in ``tests/test_incremental.py``).
 
     Heterogeneous clusters (``cluster.is_hetero``): the frontier carries
     vector costs, the knapsack runs over the per-class budget grid
@@ -1178,11 +1410,30 @@ def solve_cluster(cluster, arrivals: Sequence[float],
     weights = _resolve_weights(cluster, sla_weights)
     if current is not None and len(current.pipelines) != len(cluster.pipelines):
         raise ValueError("current config/cluster pipeline count mismatch")
+    plan = cache if isinstance(cache, PlannerCache) else None
+    skey = None
+    if plan is not None:
+        skey = (tuple(cluster.pipelines), classes,
+                budgets if hetero else float(budget), tuple(weights), obj,
+                int(max_replicas), latency_model,
+                None if current is None else tuple(current.pipelines),
+                float(switch_cost),
+                None if switch_budget is None else int(switch_budget),
+                bool(overlap),
+                None if serving is None else tuple(serving.pipelines),
+                tuple(float(a) for a in arrivals))
+        hit = plan._sol_tab.get(skey, _UNSET)
+        if hit is not _UNSET:
+            plan.sol_hits += 1
+            return dataclasses.replace(
+                hit, solve_time=time.perf_counter() - t0)
+        plan.sol_misses += 1
     frontiers = [_frontier(p, lam, obj, max_replicas, latency_model, cache,
                            classes)
                  for p, lam in zip(cluster.pipelines, arrivals)]
     if any(not f for f in frontiers):
-        return _cluster_infeasible(cluster, t0, "cluster_knap")
+        return _remember(plan, skey,
+                         _cluster_infeasible(cluster, t0, "cluster_knap"))
 
     old_costs = _overlap_old_costs(cluster, current, overlap, serving,
                                    classes)
@@ -1190,24 +1441,23 @@ def solve_cluster(cluster, arrivals: Sequence[float],
                                               or switch_budget is not None
                                               or old_costs is not None)
     if not track_switches:
-        return _solve_cluster_plain(cluster, frontiers, weights,
-                                    budgets if hetero else budget,
-                                    current, t0, hetero)
+        return _remember(plan, skey, _solve_cluster_plain(
+            cluster, frontiers, weights, budgets if hetero else budget,
+            current, t0, hetero, plan))
 
     serving_cfg = serving                 # current is not None here
     if serving_cfg is not None and \
             len(serving_cfg.pipelines) != len(cluster.pipelines):
         raise ValueError("serving config/cluster pipeline count mismatch")
-    incumbents = [evaluate_config(pipe, cfg, lam, obj, latency_model,
-                                  classes)
+    ev = evaluate_config if plan is None else plan.eval_config
+    incumbents = [ev(pipe, cfg, lam, obj, latency_model, classes)
                   for pipe, cfg, lam in zip(cluster.pipelines,
                                             current.pipelines, arrivals)]
     # mid-window free-revert candidates: the still-serving config, whose
     # re-proposal cancels the pending rollout for free in the simulator
     reverts: List[Optional[FrontierPoint]] = [None] * len(cluster.pipelines)
     if serving_cfg is not None:
-        reverts = [evaluate_config(pipe, scfg, lam, obj, latency_model,
-                                   classes)
+        reverts = [ev(pipe, scfg, lam, obj, latency_model, classes)
                    if scfg != ccfg else None
                    for pipe, scfg, ccfg, lam
                    in zip(cluster.pipelines, serving_cfg.pipelines,
@@ -1221,21 +1471,24 @@ def solve_cluster(cluster, arrivals: Sequence[float],
         chosen = _knapsack_nd(
             cand_tabs, budgets,
             min(int(switch_budget), len(cand_tabs))
-            if switch_budget is not None else None)
+            if switch_budget is not None else None, plan=plan)
     elif switch_budget is None:
-        chosen = _knapsack_1d(cand_tabs, budget)
+        chosen = _knapsack_1d(cand_tabs, budget, plan=plan)
     else:
         chosen = _knapsack_2d(cand_tabs, budget,
-                              min(int(switch_budget), len(cand_tabs)))
+                              min(int(switch_budget), len(cand_tabs)),
+                              plan=plan)
     if chosen is None:
-        return _cluster_infeasible(cluster, t0, "cluster_knap")
-    return _cluster_solution(cluster, [c.point for c in chosen], t0,
-                             "cluster_knap", weights, current, switch_cost,
-                             serving_cfg)
+        return _remember(plan, skey,
+                         _cluster_infeasible(cluster, t0, "cluster_knap"))
+    return _remember(plan, skey, _cluster_solution(
+        cluster, [c.point for c in chosen], t0, "cluster_knap", weights,
+        current, switch_cost, serving_cfg))
 
 
 def _solve_cluster_plain(cluster, frontiers, weights, budget, current, t0,
-                         hetero: bool = False):
+                         hetero: bool = False,
+                         plan: Optional["PlannerCache"] = None):
     """The PR 2 exact 1-D knapsack (no switch dimension).  Weighted values
     only — with weights of 1.0 this is bit-identical to the unweighted DP
     (IEEE multiplication by 1.0 is exact, and ``_knapsack_1d`` runs the
@@ -1246,12 +1499,12 @@ def _solve_cluster_plain(cluster, frontiers, weights, budget, current, t0,
         cand_tabs = [[_Candidate(tuple(int(round(x)) for x in p.cost_vec),
                                  w * p.objective, False, p)
                       for p in f] for f, w in zip(frontiers, weights)]
-        chosen = _knapsack_nd(cand_tabs, budget)
+        chosen = _knapsack_nd(cand_tabs, budget, plan=plan)
     else:
         cand_tabs = [[_Candidate(int(round(p.cost)), w * p.objective,
                                  False, p)
                       for p in f] for f, w in zip(frontiers, weights)]
-        chosen = _knapsack_1d(cand_tabs, budget)
+        chosen = _knapsack_1d(cand_tabs, budget, plan=plan)
     if chosen is None:
         return _cluster_infeasible(cluster, t0, "cluster_knap")
     return _cluster_solution(cluster, [c.point for c in chosen], t0,
@@ -1314,22 +1567,91 @@ def _prune_candidates(cands: List[_Candidate],
     return out
 
 
-def _knapsack_1d(cand_tabs: List[List[_Candidate]], budget: float
+def _tab_key(cands: List[_Candidate]) -> tuple:
+    """Exact value key of one pipeline's (unpruned) knapsack tab.  The DP
+    is a pure function of these values, so equal keys across solves mean
+    equal dp/pick rows bit-for-bit — the reuse test of the incremental
+    solve path."""
+    return tuple((c.cost, c.value, c.switch, c.point) for c in cands)
+
+
+def _dp_prefix(plan: Optional["PlannerCache"], gkey: tuple,
+               tab_keys: List[tuple]):
+    """Longest prefix of the incumbent DP state reusable for this solve:
+    the stored global key (DP flavor + budget grid + switch budget) must
+    match exactly, then pipelines match in order until the first changed
+    tab.  Returns ``(start, state)`` with ``state=None`` when nothing is
+    reusable."""
+    if plan is None:
+        return 0, None
+    st = plan._dp_state
+    if st is None or st["gkey"] != gkey:
+        return 0, None
+    start = 0
+    for a, b in zip(st["tab_keys"], tab_keys):
+        if a != b:
+            break
+        start += 1
+    plan.dp_prefix_pipes += start
+    return start, st
+
+
+def _pruned_memo(plan: Optional["PlannerCache"], key: tuple,
+                 cands: List[_Candidate], cross_class: bool,
+                 vec: bool) -> List[_Candidate]:
+    """Memoized dominance pruning (pruning is a pure function of the tab
+    values, so sharing the pruned list across solves is invisible)."""
+    prune = _prune_candidates_vec if vec else _prune_candidates
+    if plan is None:
+        return prune(cands, cross_class)
+    mkey = (key, cross_class)
+    out = plan._prune_tab.get(mkey)
+    if out is None:
+        out = prune(cands, cross_class)
+        if len(plan._prune_tab) >= plan.max_entries:
+            plan._prune_tab.pop(next(iter(plan._prune_tab)))
+        plan._prune_tab[mkey] = out
+    return out
+
+
+def _knapsack_1d(cand_tabs: List[List[_Candidate]], budget: float,
+                 plan: Optional["PlannerCache"] = None
                  ) -> Optional[List[_Candidate]]:
     """Exact multiple-choice knapsack over pre-valued candidates (switch
     penalties already folded into ``value``).  Dominated rows are pruned
     first, and each pipeline's DP row only sweeps the budget columns its
     prefix can actually reach (``hi``) — the flat tail beyond is one
-    broadcast fill, not per-candidate vector work."""
+    broadcast fill, not per-candidate vector work.
+
+    ``plan``: optional ``PlannerCache`` carrying the incumbent DP.  The
+    solve resumes after the longest prefix of pipelines whose candidate
+    tabs are value-identical to the incumbent's (their stored dp/pick rows
+    are exactly what recomputing would produce), re-running only the
+    changed suffix; bit-identical to the cold DP by construction."""
     if not np.isfinite(budget):
         return [max(cands, key=lambda c: c.value) for cands in cand_tabs]
-    cand_tabs = [_prune_candidates(cands, cross_class=True)
-                 for cands in cand_tabs]
     B = int(np.floor(budget + 1e-9))
-    dp = np.zeros(B + 1)
-    pick_tabs: List[np.ndarray] = []
-    hi = 0                               # reachable-cost bound so far
-    for cands in cand_tabs:
+    n = len(cand_tabs)
+    tab_keys = [_tab_key(c) for c in cand_tabs] if plan is not None else []
+    start, st = _dp_prefix(plan, ("1d", B), tab_keys)
+    if st is not None and start == n == len(st["tab_keys"]):
+        plan.dp_full_hits += 1
+        ch = st["chosen"]
+        return None if ch is None else list(ch)
+    if start:
+        pruned = list(st["pruned"][:start])
+        pick_tabs = list(st["pick_tabs"][:start])
+        dp_list = list(st["dp_list"][:start])
+        hi_list = list(st["hi_list"][:start])
+        dp, hi = dp_list[-1], hi_list[-1]
+    else:
+        pruned, pick_tabs, dp_list, hi_list = [], [], [], []
+        dp = np.zeros(B + 1)
+        hi = 0                           # reachable-cost bound so far
+    for i in range(start, n):
+        cands = _pruned_memo(plan, tab_keys[i] if plan is not None else (),
+                             cand_tabs[i], cross_class=True, vec=False)
+        pruned.append(cands)
         cur = np.full(B + 1, -np.inf)
         pick = np.full(B + 1, -1, dtype=np.int64)
         step = max((c.cost for c in cands if c.cost <= B), default=0)
@@ -1347,12 +1669,24 @@ def _knapsack_1d(cand_tabs: List[List[_Candidate]], budget: float
             cur[hi + 1:] = cur[hi]
             pick[hi + 1:] = pick[hi]
         pick_tabs.append(pick)
+        dp_list.append(cur)
+        hi_list.append(hi)
         dp = cur
-    if not np.isfinite(dp[B]):
+    chosen = _backtrack_1d(pruned, pick_tabs, dp, B)
+    if plan is not None:
+        plan._dp_state = {
+            "gkey": ("1d", B), "tab_keys": tab_keys, "pruned": pruned,
+            "dp_list": dp_list, "hi_list": hi_list, "pick_tabs": pick_tabs,
+            "chosen": None if chosen is None else tuple(chosen)}
+    return chosen
+
+
+def _backtrack_1d(pruned, pick_tabs, dp, B):
+    if not np.isfinite(dp[B] if len(pick_tabs) else 0.0):
         return None
     b = B
     chosen_rev: List[_Candidate] = []
-    for cands, pick in zip(reversed(cand_tabs), reversed(pick_tabs)):
+    for cands, pick in zip(reversed(pruned), reversed(pick_tabs)):
         j = int(pick[b])
         if j < 0:
             return None
@@ -1361,7 +1695,8 @@ def _knapsack_1d(cand_tabs: List[List[_Candidate]], budget: float
     return list(reversed(chosen_rev))
 
 
-def _knapsack_2d(cand_tabs: List[List[_Candidate]], budget: float, K: int
+def _knapsack_2d(cand_tabs: List[List[_Candidate]], budget: float, K: int,
+                 plan: Optional["PlannerCache"] = None
                  ) -> Optional[List[_Candidate]]:
     """Exact DP over (switches used, cores used): ``dp[k][b]`` is the best
     prefix value using exactly ``k`` switches within ``b`` cores.  The
@@ -1369,18 +1704,36 @@ def _knapsack_2d(cand_tabs: List[List[_Candidate]], budget: float, K: int
     tab is dominance-pruned per switch class first, the ``k`` rows swept
     per pipeline are capped at the prefix length, and budget columns
     beyond the prefix's reachable cost are filled flat rather than swept
-    — all three provably change nothing, not even tie-breaks."""
+    — all three provably change nothing, not even tie-breaks.
+
+    ``plan`` resumes the incumbent DP after the longest value-identical
+    pipeline prefix (see ``_knapsack_1d``); ``kmax`` uses the absolute
+    pipeline index, which the resume loop preserves."""
     n = len(cand_tabs)
     if not np.isfinite(budget):
         return _bounded_switch_unbounded_cores(cand_tabs, K)
-    cand_tabs = [_prune_candidates(cands, cross_class=False)
-                 for cands in cand_tabs]
     B = int(np.floor(budget + 1e-9))
-    dp = np.full((K + 1, B + 1), -np.inf)
-    dp[0, :] = 0.0
-    pick_tabs: List[np.ndarray] = []
-    hi = 0                               # reachable-cost bound so far
-    for i, cands in enumerate(cand_tabs):
+    tab_keys = [_tab_key(c) for c in cand_tabs] if plan is not None else []
+    start, st = _dp_prefix(plan, ("2d", B, K), tab_keys)
+    if st is not None and start == n == len(st["tab_keys"]):
+        plan.dp_full_hits += 1
+        ch = st["chosen"]
+        return None if ch is None else list(ch)
+    if start:
+        pruned = list(st["pruned"][:start])
+        pick_tabs = list(st["pick_tabs"][:start])
+        dp_list = list(st["dp_list"][:start])
+        hi_list = list(st["hi_list"][:start])
+        dp, hi = dp_list[-1], hi_list[-1]
+    else:
+        pruned, pick_tabs, dp_list, hi_list = [], [], [], []
+        dp = np.full((K + 1, B + 1), -np.inf)
+        dp[0, :] = 0.0
+        hi = 0                           # reachable-cost bound so far
+    for i in range(start, n):
+        cands = _pruned_memo(plan, tab_keys[i] if plan is not None else (),
+                             cand_tabs[i], cross_class=False, vec=False)
+        pruned.append(cands)
         cur = np.full((K + 1, B + 1), -np.inf)
         pick = np.full((K + 1, B + 1), -1, dtype=np.int64)
         step = max((c.cost for c in cands if c.cost <= B), default=0)
@@ -1401,13 +1754,25 @@ def _knapsack_2d(cand_tabs: List[List[_Candidate]], budget: float, K: int
             cur[:, hi + 1:] = cur[:, hi:hi + 1]
             pick[:, hi + 1:] = pick[:, hi:hi + 1]
         pick_tabs.append(pick)
+        dp_list.append(cur)
+        hi_list.append(hi)
         dp = cur
+    chosen = _backtrack_2d(pruned, pick_tabs, dp, B)
+    if plan is not None:
+        plan._dp_state = {
+            "gkey": ("2d", B, K), "tab_keys": tab_keys, "pruned": pruned,
+            "dp_list": dp_list, "hi_list": hi_list, "pick_tabs": pick_tabs,
+            "chosen": None if chosen is None else tuple(chosen)}
+    return chosen
+
+
+def _backtrack_2d(pruned, pick_tabs, dp, B):
     k_best = int(np.argmax(dp[:, B]))
     if not np.isfinite(dp[k_best, B]):
         return None
     k, b = k_best, B
     chosen_rev: List[_Candidate] = []
-    for cands, pick in zip(reversed(cand_tabs), reversed(pick_tabs)):
+    for cands, pick in zip(reversed(pruned), reversed(pick_tabs)):
         j = int(pick[k, b])
         if j < 0:
             return None
@@ -1487,7 +1852,9 @@ def _prune_candidates_vec(cands: List[_Candidate],
 
 def _knapsack_nd(cand_tabs: List[List[_Candidate]],
                  budgets: Sequence[float],
-                 K: Optional[int] = None) -> Optional[List[_Candidate]]:
+                 K: Optional[int] = None,
+                 plan: Optional["PlannerCache"] = None
+                 ) -> Optional[List[_Candidate]]:
     """Exact multiple-choice knapsack over per-class budget vectors —
     candidate costs are int tuples aligned with the cluster's device
     classes.  Structurally the 1-D DP with the budget axis replaced by a
@@ -1497,7 +1864,13 @@ def _knapsack_nd(cand_tabs: List[List[_Candidate]],
     maxima), so tiny accelerator budgets keep the grid tiny regardless of
     how large the CPU pool is.  Same candidate order, float operations and
     strict tie-breaking as the scalar DPs — the brute oracle's
-    first-occurrence argmax is reproduced exactly."""
+    first-occurrence argmax is reproduced exactly.
+
+    ``plan`` resumes the incumbent DP after the longest value-identical
+    pipeline prefix (see ``_knapsack_1d``).  The reach-capped grid ``B``
+    is part of the resume key: the reach sums span *all* tabs, so any tab
+    change that moves the grid invalidates the whole state, and a matching
+    key guarantees identical array shapes."""
     C = len(budgets)
     if all(not np.isfinite(b) for b in budgets):
         if K is None:
@@ -1510,16 +1883,30 @@ def _knapsack_nd(cand_tabs: List[List[_Candidate]],
     B = tuple(min(int(np.floor(b + 1e-9)), reach[c]) if np.isfinite(b)
               else reach[c]
               for c, b in enumerate(budgets))
-    cand_tabs = [_prune_candidates_vec(cands, cross_class=(K is None))
-                 for cands in cand_tabs]
+    n = len(cand_tabs)
+    tab_keys = [_tab_key(c) for c in cand_tabs] if plan is not None else []
+    start, st = _dp_prefix(plan, ("nd", B, K), tab_keys)
+    if st is not None and start == n == len(st["tab_keys"]):
+        plan.dp_full_hits += 1
+        ch = st["chosen"]
+        return None if ch is None else list(ch)
     shape = tuple(b + 1 for b in B)
-    if K is None:
-        dp = np.zeros(shape)
+    if start:
+        pruned = list(st["pruned"][:start])
+        pick_tabs = list(st["pick_tabs"][:start])
+        dp_list = list(st["dp_list"][:start])
+        dp = dp_list[-1]
     else:
-        dp = np.full((K + 1,) + shape, -np.inf)
-        dp[0] = 0.0
-    pick_tabs: List[np.ndarray] = []
-    for i, cands in enumerate(cand_tabs):
+        pruned, pick_tabs, dp_list = [], [], []
+        if K is None:
+            dp = np.zeros(shape)
+        else:
+            dp = np.full((K + 1,) + shape, -np.inf)
+            dp[0] = 0.0
+    for i in range(start, n):
+        cands = _pruned_memo(plan, tab_keys[i] if plan is not None else (),
+                             cand_tabs[i], cross_class=(K is None), vec=True)
+        pruned.append(cands)
         cur = np.full(dp.shape, -np.inf)
         pick = np.full(dp.shape, -1, dtype=np.int64)
         kmax = min(K, i + 1) if K is not None else None
@@ -1545,7 +1932,18 @@ def _knapsack_nd(cand_tabs: List[List[_Candidate]],
                     seg[better] = cand[better]
                     sel[better] = j
         pick_tabs.append(pick)
+        dp_list.append(cur)
         dp = cur
+    chosen = _backtrack_nd(pruned, pick_tabs, dp, B, K)
+    if plan is not None:
+        plan._dp_state = {
+            "gkey": ("nd", B, K), "tab_keys": tab_keys, "pruned": pruned,
+            "dp_list": dp_list, "hi_list": [], "pick_tabs": pick_tabs,
+            "chosen": None if chosen is None else tuple(chosen)}
+    return chosen
+
+
+def _backtrack_nd(pruned, pick_tabs, dp, B, K):
     end = tuple(B)
     if K is None:
         if not np.isfinite(dp[end]):
@@ -1557,7 +1955,7 @@ def _knapsack_nd(cand_tabs: List[List[_Candidate]],
             return None
         state = (k_best,) + end
     chosen_rev: List[_Candidate] = []
-    for cands, pick in zip(reversed(cand_tabs), reversed(pick_tabs)):
+    for cands, pick in zip(reversed(pruned), reversed(pick_tabs)):
         j = int(pick[state])
         if j < 0:
             return None

@@ -332,11 +332,11 @@ class ClusterSimulator:
         self._dead: List[set] = [set() for _ in range(self.n_pipelines)]
         self._join_buf: List[Optional[dict]] = [
             {} if n > 1 else None for n in self._n_parents]
-        if self._pool is not None and any(self._dag_pipe):
-            # a pool reset re-stamps req_id/rid, which would corrupt join
-            # matching of still-in-flight sibling copies — run DAG
-            # simulations unpooled (same contract as the struct core)
-            self._pool = None
+        # pooled DAG runs: rid -> Request registry so a request is released
+        # exactly once, at full retirement (when its rid leaves
+        # ``_inflight``) — never while sibling fan-out copies of the same
+        # object are still queued, in service or buffered at a join
+        self._req_of: List[dict] = [{} for _ in range(self.n_pipelines)]
 
         self.configs: List[StageConfig] = []
         for cfg in config.pipelines:
@@ -804,9 +804,12 @@ class ClusterSimulator:
                 self._bump(s)
                 if self._dag_route[s]:
                     # §4.5 drop propagation: cancel the sibling branches'
-                    # in-flight copies of every dropped request
+                    # in-flight copies of every dropped request.  Pool
+                    # release happens inside the cancel path at full
+                    # retirement — sibling copies of the same object may
+                    # still be in flight here
                     self._dag_cancel(s, [r.rid for r in dropped])
-                if self._pool is not None:
+                elif self._pool is not None:
                     self._pool.release_many(dropped)
         nq = len(q.reqs) - q.head
         if not nq:
@@ -883,6 +886,10 @@ class ClusterSimulator:
                     infl[rid] = 1
                     rid += 1
                 self._rid_next[p] = rid
+                if self._pool is not None:
+                    reg = self._req_of[p]
+                    for r in reqs:
+                        reg[r.rid] = r
             if arrs is None:
                 for r in reqs:
                     q.push(r, self.now)
@@ -974,6 +981,8 @@ class ClusterSimulator:
         else:
             del infl[rid]
             self._dead[p].discard(rid)
+            if self._pool is not None:   # last copy gone: fully retired
+                self._pool.release(self._req_of[p].pop(rid))
 
     def _done_dag(self, s: int, batch, arrs) -> None:
         p = self._pipe_of[s]
@@ -1000,6 +1009,11 @@ class ClusterSimulator:
             m = self.metrics_by_pipe[p]
             m.completed += len(alive)
             m._lat.extend([now - a for a in alive_arrs])
+            if self._pool is not None:       # single sink: last copy each
+                reg = self._req_of[p]
+                for r in alive:
+                    del reg[r.rid]
+                self._pool.release_many(alive)
             return
         if len(children) > 1:                # fan-out: one token per copy
             extra = len(children) - 1
@@ -1063,6 +1077,8 @@ class ClusterSimulator:
                 purge.add(rid)
             else:
                 del infl[rid]
+                if self._pool is not None:   # no other copies: retired now
+                    self._pool.release(self._req_of[p].pop(rid))
         if not purge:
             return
         for j in self._stages_of[p]:
@@ -1290,13 +1306,16 @@ class _ArrayStageQueue:
             self.min_arr = arrival
 
     def push_bulk(self, arrivals: np.ndarray, enter,
-                  rids: Optional[np.ndarray] = None) -> None:
+                  rids: Optional[np.ndarray] = None,
+                  ascending: bool = False) -> None:
         """Append a block of arrivals; ``enter`` may be a scalar (upstream
         handoff: the whole batch enters now) or a parallel array (bulk
         injection of stale + fresh arrivals).  A sorted_fifo queue only
         ever receives ascending blocks, so the min is the first element;
         handoff batches popped from a non-first stage can be out of order
-        (completions overtake) and need the full scan."""
+        (completions overtake) and need the full scan — unless the caller
+        proves the block ascending (``ascending=True``: a FIFO pop from a
+        still-sorted queue, as the round core's chain loop tracks)."""
         k = arrivals.size
         self._room(k)
         n = self.n
@@ -1307,7 +1326,8 @@ class _ArrayStageQueue:
         if self._rid is not None:
             self._rid[n:n + k] = rids
         self.n = n + k
-        m = float(arrivals[0]) if self.sorted_fifo else float(arrivals.min())
+        m = float(arrivals[0]) if (self.sorted_fifo or ascending) \
+            else float(arrivals.min())
         if m < self.min_arr:
             self.min_arr = m
 
@@ -1979,6 +1999,518 @@ class _StructCore:
             self.now = t_end
 
 
+# ---------------------------------------------------------------------------
+# service-round event core
+#
+# The struct core above still sequences every derived event (done / timeout /
+# wake / apply) through ONE global heap and re-classifies a pipeline's
+# arrival trigger on every event that touches its injection stage — at
+# BENCH_scale that global interleaving is pure overhead, because pipelines
+# sharing a cluster do not interact between control-plane actions: queues,
+# replica fleets, generation counters, metrics and DAG state are all
+# per-pipeline, and the only cross-pipeline couplings are the replica
+# ledger (consulted at reconfigure time, outside run_until) and the
+# ``peak_serving_cores`` witness (touched only by §5.3 apply events).
+#
+# The round core exploits that independence: each pipeline keeps its own
+# event columns, and ``run_until`` retires one pipeline's *entire* event
+# frontier — service starts, completions, timeout fires, wake scans, bulk
+# arrival appends — in one round before moving to the next, instead of
+# interleaving single events across pipelines.  Within a pipeline the event
+# order is exactly the struct core's (same (t, seq) discipline, same
+# tie-breaks), so every per-pipeline stream is bit-identical by
+# construction; the order-coupled remainder — the relative order of §5.3
+# apply events across pipelines, which is what the serving-peak witness
+# observes — is restored exactly by logging each apply's ledger settlement
+# and replaying the log in global (t, seq) order afterwards.  Chains
+# additionally run a fully inlined per-pipeline loop (locals instead of
+# attribute chases, dispatch/arrive/sync inlined); DAG pipelines and any
+# other order-coupled path (joins, drop propagation, deferred applies)
+# take the exact scalar struct path per event, still inside their own
+# round.  The equivalence suites pin completed / dropped / latency
+# streams / events_processed / reconfig_log / peaks bit-identical to BOTH
+# existing cores.
+# ---------------------------------------------------------------------------
+
+
+class _RoutedEventQueue:
+    """``_EventColumns``-compatible push target that files each derived
+    event into the owning pipeline's private round heap.  Control-plane
+    code (reconfigure, set_lam_est, deferred applies) pushes through the
+    shared ``_push``/``_try_dispatch`` paths without knowing which core
+    runs underneath; the shared ``seq`` counter keeps same-timestamp
+    events in push order exactly like ``_EventColumns``."""
+
+    __slots__ = ("_sim",)
+
+    def __init__(self, sim):
+        self._sim = sim
+
+    def push(self, t: float, kind: int, payload) -> None:
+        sim = self._sim
+        if kind == _EV_WAKE:
+            p = sim._pipe_of[payload]
+        elif kind == _EV_APPLY:
+            p = payload[0]
+        else:                            # done / timeout payloads lead with s
+            p = sim._pipe_of[payload[0]]
+        heapq.heappush(sim._pq[p], (t, next(sim._rseq), kind, payload))
+
+
+class _RoundCore(_StructCore):
+    """Mixin implementing the service-round event core (see the section
+    comment above).  Same external contract and limitations as
+    ``_StructCore`` — aggregate metrics bit-identical to both other cores,
+    no per-request objects — at a higher events/sec: pipelines are retired
+    in independent rounds instead of through one globally interleaved
+    heap."""
+
+    def __init__(self, *args, **kw):
+        super().__init__(*args, **kw)
+        # one event heap per pipeline, ordered by (t, seq) with a shared
+        # seq counter — the struct core's global order restricted to the
+        # pipeline, which is all any per-pipeline state can observe
+        self._pq: List[List[Tuple[float, int, int, object]]] = [
+            [] for _ in range(self.n_pipelines)]
+        self._rseq = itertools.count()
+        self._evq = _RoutedEventQueue(self)
+        # §5.3 apply events are the one cross-pipeline coupling inside a
+        # run (the serving-peak witness sums every pipeline's serving cost
+        # at each settlement): while a round runs, ledger settlements are
+        # logged instead of sampled, then replayed in global (t, seq)
+        # order against the run-entry snapshot
+        self._defer_peak = False
+        self._peak_log: List[tuple] = []
+        self._apply_seq = 0
+        self._apply_p = 0
+
+    def _note_serving_peak(self) -> None:
+        if self._defer_peak:
+            p = self._apply_p
+            vec = None if self._serving_vec is None else self._serving_vec[p]
+            self._peak_log.append((self.now, self._apply_seq, p,
+                                   self._serving_cost[p], vec))
+            return
+        super()._note_serving_peak()
+
+    def _replay_serving_peaks(self, snap: List[float],
+                              vsnap: Optional[List[tuple]]) -> None:
+        """Replay the round's deferred ledger settlements in global
+        (t, seq) order against the run-entry serving snapshot — the exact
+        sequence of ``sum(_serving_cost)`` values the struct core samples
+        at each apply event."""
+        log = self._peak_log
+        log.sort(key=lambda e: (e[0], e[1]))
+        peak = self.peak_serving_cores
+        for _t, _seq, p, cost, vec in log:
+            snap[p] = cost
+            total = sum(snap)
+            if total > peak:
+                peak = total
+            if vec is not None:
+                vsnap[p] = vec
+                self.peak_serving_by_class = tuple(
+                    max(pk, sum(v[c] for v in vsnap))
+                    for c, pk in enumerate(self.peak_serving_by_class))
+        self.peak_serving_cores = peak
+        log.clear()
+
+    def run_until(self, t_end: float) -> None:
+        P = self.n_pipelines
+        for p in range(P):
+            if self._p_unsorted[p]:
+                self._pt[p][self._pi[p]:self._pn[p]].sort(kind="stable")
+                self._p_unsorted[p] = False
+        now0 = self.now
+        self._now0 = now0
+        snap = list(self._serving_cost)
+        vsnap = None if self._serving_vec is None else list(self._serving_vec)
+        self._defer_peak = True
+        n_ev = 0
+        try:
+            for p in range(P):
+                self.now = now0
+                if self._dag_pipe[p]:
+                    n_ev += self._run_pipe_generic(p, t_end)
+                else:
+                    n_ev += self._run_pipe_chain(p, t_end)
+        finally:
+            self._defer_peak = False
+        if self._peak_log:
+            self._replay_serving_peaks(snap, vsnap)
+        self.events_processed += n_ev
+        self.now = t_end if t_end > now0 else now0
+
+    def _compact_buf(self, p: int) -> None:
+        i = self._pi[p]
+        if i > 4096 and 2 * i >= self._pn[p]:
+            n = self._pn[p]
+            live = n - i
+            self._pt[p][:live] = self._pt[p][i:n].copy()
+            self._pi[p] = 0
+            self._pn[p] = live
+
+    def _run_pipe_generic(self, p: int, t_end: float) -> int:
+        """One pipeline's round through the exact scalar struct paths —
+        the order-coupled fallback (DAG joins / drop propagation, and any
+        topology the inlined chain loop doesn't cover)."""
+        pq = self._pq[p]
+        first = self._first[p]
+        buf = self._pt[p]
+        handle = self._handle_ev
+        pop = heapq.heappop
+        i, n = self._pi[p], self._pn[p]
+        k = self._first_trigger(first, buf, i, n) if i < n else n
+        self._next_k[p] = k
+        n_ev = 0
+        while True:
+            t_trig = buf[k] if k < n else _INF
+            t_head = pq[0][0] if pq else _INF
+            # arrivals win ties against events, exactly like both cores
+            if t_trig <= t_head and t_trig <= t_end:
+                tf = float(t_trig)
+                n_ev += self._sync(p, tf) + 1
+                if tf > self.now:
+                    self.now = tf
+                self._pi[p] = k + 1
+                self._arrive_one(first, tf)
+                i = self._pi[p]
+                k = self._first_trigger(first, buf, i, n) if i < n else n
+                self._next_k[p] = k
+                continue
+            if t_head > t_end:
+                break
+            if t_head > self.now:
+                self.now = t_head
+            t0, sq, kind, pay = pop(pq)
+            batch = [(sq, kind, pay)]
+            while pq and pq[0][0] == t0:
+                _t, sq2, kd2, py2 = pop(pq)
+                batch.append((sq2, kd2, py2))
+            for sq, kind, pay in batch:
+                if kind == _EV_DONE or kind == _EV_TIMEOUT:
+                    s = pay[0]
+                elif kind == _EV_WAKE:
+                    s = pay
+                else:
+                    s = first            # apply: settles this pipeline
+                if s == first:
+                    n_ev += self._sync(p, t0)
+                    if kind == _EV_APPLY:
+                        self._apply_seq = sq
+                        self._apply_p = p
+                    handle(kind, pay)
+                    i = self._pi[p]
+                    k = self._first_trigger(first, buf, i, n) \
+                        if i < n else n
+                    self._next_k[p] = k
+                else:
+                    handle(kind, pay)
+            n_ev += len(batch)
+        n_ev += self._sync(p, t_end)
+        self._compact_buf(p)
+        return n_ev
+
+    def _run_pipe_chain(self, p: int, t_end: float) -> int:
+        """One chain pipeline's round, fully inlined: the struct core's
+        _first_trigger / _sync / _arrive_one / _handle_ev / _try_dispatch
+        bodies with per-stage state in locals — instruction-for-
+        instruction the same state transitions (the equivalence and golden
+        suites pin it), minus the per-event attribute chases and method
+        dispatch."""
+        pq = self._pq[p]
+        base = self._first[p]
+        buf = self._pt[p]
+        queues = self.queues
+        q0 = queues[base]
+        gen = self._gen
+        timeout_at = self._timeout_at
+        wake_at = self._wake_at
+        free_at = self.free_at
+        rr = self.rr
+        nxt = self._next
+        thr_g = self._drop_thr_s
+        lat_tab = self._lat_tab
+        batch_of = self._batch_of
+        m = self.metrics_by_pipe[p]
+        lat_buf = m._lat
+        rseq = self._rseq
+        push = heapq.heappush
+        pop = heapq.heappop
+        now0 = self._now0
+        thr0 = thr_g[base]
+        insvc = 0
+        peak_qd = self.peak_queue_depth
+        n_ev = 0
+
+        def dispatch(s: int, now: float) -> None:
+            # struct _try_dispatch, chain path, with hot state in closure
+            nonlocal insvc
+            q = queues[s]
+            thr = thr_g[s]
+            if now - q.min_arr > thr:
+                kd = q.drop_expired(now, thr)
+                if kd:
+                    m.dropped += kd
+                    gen[s] += 1
+                    timeout_at[s] = _INF
+            nq = q.n - q.head
+            if not nq:
+                return
+            batch_sz = batch_of[s]
+            free = free_at[s]
+            limit = now + _EPS
+            tab = lat_tab[s]
+            tab_n = len(tab)
+            while nq:
+                if nq < batch_sz:
+                    wb = self._wb
+                    if wb is None:
+                        wb = self._wait_bounds()
+                    deadline = float(q._enter[q.head] + wb[s])
+                    if now < deadline - _EPS:
+                        if deadline < timeout_at[s] - _EPS:   # _schedule_timeout
+                            timeout_at[s] = deadline
+                            push(pq, (deadline, next(rseq), _EV_TIMEOUT,
+                                      (s, gen[s])))
+                        return
+                    k = nq
+                else:
+                    k = batch_sz
+                # armed-wake short-circuit: the wake marker was set to the
+                # fleet's min free time, and free times only move when a
+                # service starts, which needs a free replica — so strictly
+                # before the marker no replica can be available and the
+                # rearm attempt is provably the no-op the struct core
+                # recomputes from scratch
+                w = wake_at[s]
+                if w != _INF and now < w - _EPS and free:
+                    return
+                nf = len(free)
+                if nf == 0:
+                    t = float(q._arr[q.head] + thr)
+                    if t <= now + _EPS:                       # _schedule_wake
+                        t = now + 1e-9
+                    if t < wake_at[s] - _EPS:
+                        wake_at[s] = t
+                        push(pq, (t, next(rseq), _EV_WAKE, s))
+                    return
+                if nf > _NP_SCAN_MIN:
+                    arr = np.asarray(free)
+                    avail = (arr <= limit).nonzero()[0]
+                    n_avail = avail.size
+                    if n_avail == 0:
+                        t = float(arr.min())
+                        if t <= now + _EPS:
+                            t = now + 1e-9
+                        if t < wake_at[s] - _EPS:
+                            wake_at[s] = t
+                            push(pq, (t, next(rseq), _EV_WAKE, s))
+                        return
+                    rep = int(avail[rr[s] % n_avail])
+                else:
+                    avail = [j for j, tv in enumerate(free) if tv <= limit]
+                    n_avail = len(avail)
+                    if n_avail == 0:
+                        t = float(min(free))
+                        if t <= now + _EPS:
+                            t = now + 1e-9
+                        if t < wake_at[s] - _EPS:
+                            wake_at[s] = t
+                            push(pq, (t, next(rseq), _EV_WAKE, s))
+                        return
+                    rep = avail[rr[s] % n_avail]
+                asc = q.fifo_ok
+                arrs = q.pop_batch(k)
+                nq -= k
+                rr[s] += 1
+                done_t = now + (tab[k] if k < tab_n
+                                else self._stage_latency(s, k))
+                free[rep] = done_t
+                insvc += k
+                push(pq, (done_t, next(rseq), _EV_DONE, (s, arrs, asc)))
+                gen[s] += 1              # inlined _bump (lazy cancel)
+                timeout_at[s] = _INF
+
+        # round-scoped classification caches: buf[i0:n] is immutable and
+        # ascending for the whole round, so the absolute insertion point of
+        # a given wake time / drop trigger is computed once per distinct
+        # value instead of once per event (struct re-searches every time)
+        i0 = self._pi[p]
+        pi = i0
+        n = self._pn[p]
+        cw_val = cd_val = None
+        cw_pos = cd_pos = 0
+
+        def classify(i: int) -> int:
+            # struct _first_trigger for the injection stage
+            nonlocal cw_val, cw_pos, cd_val, cd_pos
+            w = wake_at[base]
+            if w != _INF:
+                if w != cw_val:
+                    cw_val = w
+                    cw_pos = i0 + int(
+                        buf[i0:n].searchsorted(w - 1e-9, side="left"))
+                k = cw_pos if cw_pos > i else i
+            elif timeout_at[base] != _INF:
+                k = i + batch_of[base] - 1 - (q0.n - q0.head)
+                if k < i:
+                    k = i
+                elif k > n:
+                    k = n
+            else:
+                k = i
+            if k > i:
+                m_eff = q0.min_arr
+                t0v = buf.item(i)
+                if t0v < m_eff:
+                    m_eff = t0v
+                t_trig = m_eff + thr0
+                if now0 > t_trig:
+                    k = i
+                elif buf.item(k - 1) > t_trig:
+                    if t_trig != cd_val:
+                        cd_val = t_trig
+                        cd_pos = i0 + int(
+                            buf[i0:n].searchsorted(t_trig, side="right"))
+                    kd = cd_pos if cd_pos > i else i
+                    if kd < k:
+                        k = kd
+            return k
+
+        def deliver(j: int) -> int:
+            # struct _sync tail: hand buf[pi:j] to the injection queue
+            nonlocal pi, peak_qd
+            cnt = j - pi
+            vals = buf[pi:j]
+            enter = np.maximum(vals, now0) if now0 > vals[0] else vals
+            q0.push_bulk(vals, enter)
+            d = q0.n - q0.head
+            if d > peak_qd:
+                peak_qd = d
+            pi = j
+            return cnt
+
+        k = classify(pi) if pi < n else n
+        now = self.now
+        while True:
+            t_trig = buf.item(k) if k < n else _INF
+            t_head = pq[0][0] if pq else _INF
+            if t_trig <= t_head and t_trig <= t_end:
+                tf = t_trig
+                # everything in [pi, k) is <= buf[k] by sort order, so the
+                # pre-trigger sync is one unconditional block delivery
+                if pi < k:
+                    n_ev += deliver(k)
+                n_ev += 1
+                if tf > now:
+                    now = tf
+                pi = k + 1
+                q0.push_scalar(tf, now)                       # _arrive_one
+                d = q0.n - q0.head
+                if d > peak_qd:
+                    peak_qd = d
+                if (d >= batch_of[base] or timeout_at[base] == _INF
+                        or now - q0.min_arr > thr0):
+                    dispatch(base, now)
+                k = classify(pi) if pi < n else n
+                continue
+            if t_head > t_end:
+                break
+            if t_head > now:
+                now = t_head
+            t0, sq, kind, pay = pop(pq)
+            batch = [(sq, kind, pay)]
+            while pq and pq[0][0] == t0:
+                _t, sq2, kd2, py2 = pop(pq)
+                batch.append((sq2, kd2, py2))
+            for sq, kind, pay in batch:
+                if kind == _EV_DONE:
+                    s = pay[0]
+                    if s == base:
+                        if pi < k and buf[pi] <= t0:          # _sync
+                            j = pi + int(
+                                buf[pi:k].searchsorted(t0, side="right"))
+                            n_ev += deliver(j)
+                    arrs = pay[1]
+                    ksz = arrs.size
+                    insvc -= ksz
+                    nx = nxt[s]
+                    if nx >= 0:
+                        q = queues[nx]                        # _arrive_batch
+                        q.push_bulk(arrs, now, None,
+                                    len(pay) == 3 and pay[2])
+                        d = q.n - q.head
+                        if d > peak_qd:
+                            peak_qd = d
+                        if (d >= batch_of[nx] or timeout_at[nx] == _INF
+                                or now - q.min_arr > thr_g[nx]):
+                            dispatch(nx, now)
+                    else:
+                        m.completed += ksz
+                        lat_buf.extend(now - arrs)
+                    q = queues[s]
+                    if q.n > q.head:
+                        dispatch(s, now)
+                    if s == base:
+                        k = classify(pi) if pi < n else n
+                elif kind == _EV_TIMEOUT:
+                    s, g = pay
+                    if s == base:
+                        if pi < k and buf[pi] <= t0:
+                            j = pi + int(
+                                buf[pi:k].searchsorted(t0, side="right"))
+                            n_ev += deliver(j)
+                    if timeout_at[s] <= now + _EPS:
+                        timeout_at[s] = _INF
+                    if g == gen[s]:
+                        q = queues[s]
+                        if q.n > q.head:
+                            dispatch(s, now)
+                    if s == base:
+                        k = classify(pi) if pi < n else n
+                elif kind == _EV_WAKE:
+                    s = pay
+                    if s == base:
+                        if pi < k and buf[pi] <= t0:
+                            j = pi + int(
+                                buf[pi:k].searchsorted(t0, side="right"))
+                            n_ev += deliver(j)
+                    if wake_at[s] <= now + _EPS:
+                        wake_at[s] = _INF
+                    q = queues[s]
+                    if q.n > q.head:
+                        dispatch(s, now)
+                    if s == base:
+                        k = classify(pi) if pi < n else n
+                else:                    # _EV_APPLY: order-coupled, exact path
+                    if pi < k and buf[pi] <= t0:
+                        j = pi + int(
+                            buf[pi:k].searchsorted(t0, side="right"))
+                        n_ev += deliver(j)
+                    self.now = now
+                    self._pi[p] = pi
+                    self._apply_seq = sq
+                    self._apply_p = p
+                    self._handle_ev(kind, pay)
+                    k = classify(pi) if pi < n else n
+            n_ev += len(batch)
+        if pi < n and buf[pi] <= t_end:                       # final _sync
+            lim = k if k < n else n
+            if pi < lim:
+                j = pi + int(buf[pi:lim].searchsorted(t_end, side="right"))
+                if j > pi:
+                    n_ev += deliver(j)
+        self.now = now
+        self._pi[p] = pi
+        self._next_k[p] = k
+        self.in_service += insvc
+        if peak_qd > self.peak_queue_depth:
+            self.peak_queue_depth = peak_qd
+        self._compact_buf(p)
+        return n_ev
+
+
 class PipelineSimulator(ClusterSimulator):
     """The N=1 special case: one pipeline, unbounded core budget, the
     original single-pipeline API.  Shares every event-machinery code path
@@ -2024,7 +2556,15 @@ class StructPipelineSimulator(_StructCore, PipelineSimulator):
     """``PipelineSimulator`` on the structured-array event core."""
 
 
-EVENT_CORES = ("heap", "struct")
+class RoundClusterSimulator(_RoundCore, ClusterSimulator):
+    """``ClusterSimulator`` on the service-round event core."""
+
+
+class RoundPipelineSimulator(_RoundCore, PipelineSimulator):
+    """``PipelineSimulator`` on the service-round event core."""
+
+
+EVENT_CORES = ("heap", "struct", "round")
 
 
 def make_cluster_simulator(cluster, config, event_core: str = "heap", **kw):
@@ -2033,11 +2573,15 @@ def make_cluster_simulator(cluster, config, event_core: str = "heap", **kw):
     ``"heap"`` is the per-event reference core (full per-request
     bookkeeping: timelines, pools, injected-object writeback); ``"struct"``
     is the structured-array bulk core — bit-identical aggregate results,
-    several times the throughput at production scale (see
+    several times the throughput at production scale; ``"round"`` is the
+    service-round core — bit-identical to both, retiring each pipeline's
+    event frontier in independent rounds for another multiple on top (see
     ``benchmarks/bench_scale.py``)."""
     if event_core == "heap":
         return ClusterSimulator(cluster, config, **kw)
     if event_core == "struct":
         return StructClusterSimulator(cluster, config, **kw)
+    if event_core == "round":
+        return RoundClusterSimulator(cluster, config, **kw)
     raise ValueError(f"unknown event core {event_core!r}; "
                      f"expected one of {EVENT_CORES}")

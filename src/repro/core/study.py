@@ -245,9 +245,10 @@ _WORKER: Dict = {}
 def worker_init() -> None:
     """Per-process warm state, built once per worker (the pool passes this
     as the executor ``initializer``; the serial path calls it per run).
-    The frontier cache is exact-keyed, so sharing it across every cell a
-    worker drains is a pure wall-clock win — bit-identical results."""
-    _WORKER["frontier_cache"] = OPT.FrontierCache(max_entries=8192)
+    The planner cache is exact-keyed at every layer (frontiers, whole
+    solves, DP prefixes), so sharing it across every cell a worker drains
+    is a pure wall-clock win — bit-identical results."""
+    _WORKER["frontier_cache"] = OPT.PlannerCache(max_entries=8192)
     _WORKER["traces"] = {}
     _WORKER["clusters"] = {}
 

@@ -30,12 +30,12 @@ except ModuleNotFoundError:
 # --enforce-fast): any test not marked `slow` that takes longer than this
 # fails the run — the tier-1 loop stays interactive by construction.
 FAST_CEILING_S = 2.0
-# tests that predate the gate and genuinely need the time (the sweep
-# invariance test runs a real 4-process pool twice).  Frozen: new tests
-# either fit the ceiling or carry @pytest.mark.slow — do not add here.
-FAST_GRANDFATHERED = {
-    "tests/test_sweep.py::test_sweep_nproc_invariance_hash",
-}
+# tests that predate the gate and genuinely need the time.  Empty since
+# the sweep spawn-pool test went @pytest.mark.slow (its property is
+# covered fast by the chunk-drain variant + the tier-1 sweep smoke).
+# Frozen: new tests either fit the ceiling or carry @pytest.mark.slow —
+# do not add here.
+FAST_GRANDFATHERED: set = set()
 _fast_offenders = []
 
 

@@ -8,9 +8,10 @@ from repro.core.paper_profiles import video_fanout
 from repro.core.pipeline import (ModelVariant, PipelineConfig, PipelineModel,
                                  StageConfig, StageModel)
 from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
+                                  RoundPipelineSimulator,
                                   StructPipelineSimulator)
 
-CORES = (PipelineSimulator, StructPipelineSimulator)
+CORES = (PipelineSimulator, StructPipelineSimulator, RoundPipelineSimulator)
 
 
 def var(name, l1, acc=70.0, alloc=1):
@@ -156,7 +157,9 @@ def test_struct_core_bit_identical_on_dag(lam, n, df):
     cfg = unit_config(pipe, batch=2)
     h = _replay(PipelineSimulator, pipe, cfg, lam, n, df, seed=0)
     s = _replay(StructPipelineSimulator, pipe, cfg, lam, n, df, seed=0)
+    r = _replay(RoundPipelineSimulator, pipe, cfg, lam, n, df, seed=0)
     assert h == s
+    assert h == r
 
 
 # ---------------------------------------------------------------------------
@@ -234,6 +237,8 @@ def test_golden_video_fanout_trace_is_pinned(cls):
     lambda: ClusterSimulator,
     lambda: __import__("repro.core.simulator", fromlist=["x"]
                        ).StructClusterSimulator,
+    lambda: __import__("repro.core.simulator", fromlist=["x"]
+                       ).RoundClusterSimulator,
 ])
 def test_mixed_cluster_dag_and_chain(make):
     from repro.core.cluster import ClusterConfig, ClusterModel

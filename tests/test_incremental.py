@@ -1,0 +1,242 @@
+"""Incremental cross-interval planning (``optimizer.PlannerCache``).
+
+Every layer the planner cache adds over the frontier memo — stage tables,
+evaluate_config memo, pruned-tab memo, whole-solve memo, DP prefix
+resume — is *pure memoization*: exact-keyed on value objects, so a solve
+sequence threaded through one ``PlannerCache`` must be **bit-identical**
+(same chosen configs, same float objective/cost bits, same charged switch
+counts) to running every solve with ``cache=None``.  The properties here
+cover the paths the DP-resume proof has to hold on: scalar budgets,
+switch costs with an incumbent, per-interval switch budgets (the 2d DP),
+hetero vector costs (the nd DP), and overlap charging with a serving
+config that diverges from the committed incumbent.
+"""
+import numpy as np
+import pytest
+from _hypothesis_compat import given, settings, st
+
+from repro.core import adapter as AD
+from repro.core import optimizer as OPT
+from test_cluster import toy_cluster
+from test_hetero import hetero_cluster
+
+
+def snap(sol):
+    """Everything an incremental-solve bug could perturb, compared with
+    exact float equality (bit-identity, not approx)."""
+    if not sol.feasible:
+        return ("infeasible",)
+    return (sol.config, sol.objective, sol.cost, sol.n_switches,
+            tuple((s.config, s.objective, s.pas, s.cost)
+                  for s in sol.per_pipeline))
+
+
+# ---------------------------------------------------------------------------
+# whole-solve memo
+# ---------------------------------------------------------------------------
+def test_repeat_solve_is_whole_solution_memo_hit():
+    cl = toy_cluster()
+    plan = OPT.PlannerCache()
+    a = OPT.solve_cluster(cl, [8.0, 14.0], cache=plan)
+    b = OPT.solve_cluster(cl, [8.0, 14.0], cache=plan)
+    ref = OPT.solve_cluster(cl, [8.0, 14.0])
+    assert snap(a) == snap(b) == snap(ref)
+    assert (plan.sol_hits, plan.sol_misses) == (1, 1)
+    # the hit is a fresh wrapper with its own solve_time, not the cached
+    # object handed out mutably
+    assert b is not a
+
+
+def test_infeasible_solves_are_memoized_too():
+    cl = toy_cluster(cores=1.0)           # nothing fits
+    plan = OPT.PlannerCache()
+    a = OPT.solve_cluster(cl, [50.0, 50.0], max_replicas=2, cache=plan)
+    b = OPT.solve_cluster(cl, [50.0, 50.0], max_replicas=2, cache=plan)
+    assert not a.feasible and not b.feasible
+    assert plan.sol_hits == 1
+
+
+def test_solve_memo_keyed_on_every_input():
+    """Perturbing any solve input must miss the whole-solve memo (and then
+    still agree with cache=None)."""
+    cl = toy_cluster()
+    plan = OPT.PlannerCache()
+    base = dict(budget=30.0, max_replicas=6)
+    OPT.solve_cluster(cl, [8.0, 14.0], cache=plan, **base)
+    variants = [
+        ([8.0, 15.0], base),
+        ([8.0, 14.0], dict(base, budget=28.0)),
+        ([8.0, 14.0], dict(base, max_replicas=5)),
+        ([8.0, 14.0], dict(base, latency_model="expected")),
+        ([8.0, 14.0], dict(base, sla_weights=[2.0, 1.0])),
+    ]
+    for lams, kw in variants:
+        got = OPT.solve_cluster(cl, lams, cache=plan, **kw)
+        ref = OPT.solve_cluster(cl, lams, **kw)
+        assert snap(got) == snap(ref), (lams, kw)
+    assert plan.sol_hits == 0
+    assert plan.sol_misses == 1 + len(variants)
+
+
+# ---------------------------------------------------------------------------
+# DP prefix resume
+# ---------------------------------------------------------------------------
+def test_single_pipeline_change_resumes_after_prefix():
+    """Changing only the *last* pipeline's rate keeps the first pipeline's
+    candidate tab bit-identical, so the DP resumes after a 1-pipeline
+    prefix instead of recomputing it — and the answer matches cache=None
+    exactly."""
+    cl = toy_cluster()
+    plan = OPT.PlannerCache()
+    OPT.solve_cluster(cl, [8.0, 14.0], budget=30.0, cache=plan)
+    assert plan.dp_prefix_pipes == 0      # cold solve: nothing to resume
+    # 14 -> 44 moves pipeline 1's n* (and so its candidate tab); 8.0
+    # repeats, so pipeline 0's tab is the exact cached objects
+    got = OPT.solve_cluster(cl, [8.0, 44.0], budget=30.0, cache=plan)
+    assert plan.dp_prefix_pipes == 1
+    ref = OPT.solve_cluster(cl, [8.0, 44.0], budget=30.0)
+    assert snap(got) == snap(ref)
+
+
+def test_rate_change_that_keeps_tabs_identical_is_full_dp_reuse():
+    """n* absorbs small rate moves: at lam 8 vs 11 the toy pipeline's
+    frontier is value-identical, so the whole-solve memo misses but every
+    candidate tab matches — the DP is reused outright and the answer still
+    matches a cold cache=None solve bit-for-bit."""
+    cl = toy_cluster()
+    plan = OPT.PlannerCache()
+    OPT.solve_cluster(cl, [8.0, 14.0], budget=30.0, cache=plan)
+    got = OPT.solve_cluster(cl, [11.0, 14.0], budget=30.0, cache=plan)
+    assert plan.sol_hits == 0 and plan.dp_full_hits == 1
+    assert snap(got) == snap(OPT.solve_cluster(cl, [11.0, 14.0],
+                                               budget=30.0))
+
+
+def test_first_pipeline_change_falls_back_to_full_dp():
+    """A change in pipeline 0 proves no prefix; the fallback full DP must
+    still be bit-identical to cache=None."""
+    cl = toy_cluster()
+    plan = OPT.PlannerCache()
+    OPT.solve_cluster(cl, [8.0, 14.0], budget=30.0, cache=plan)
+    got = OPT.solve_cluster(cl, [40.0, 14.0], budget=30.0, cache=plan)
+    assert plan.dp_prefix_pipes == 0 and plan.dp_full_hits == 0
+    assert snap(got) == snap(OPT.solve_cluster(cl, [40.0, 14.0],
+                                               budget=30.0))
+
+
+def test_budget_change_invalidates_dp_state():
+    """A different budget grid shares no dp rows: the stored state must be
+    ignored (gkey mismatch), never sliced into the wrong-width arrays."""
+    cl = toy_cluster()
+    plan = OPT.PlannerCache()
+    OPT.solve_cluster(cl, [8.0, 14.0], budget=30.0, cache=plan)
+    got = OPT.solve_cluster(cl, [8.0, 14.0], budget=22.0, cache=plan)
+    assert plan.dp_prefix_pipes == 0
+    assert snap(got) == snap(OPT.solve_cluster(cl, [8.0, 14.0],
+                                               budget=22.0))
+
+
+# ---------------------------------------------------------------------------
+# property: perturbed solve sequences with chained incumbents
+# ---------------------------------------------------------------------------
+@given(seed=st.integers(0, 4000), sw=st.floats(0.0, 1.0),
+       kbud=st.integers(0, 2))
+@settings(max_examples=15, deadline=None)
+def test_sequences_bit_identical_with_switch_knobs(seed, sw, kbud):
+    """Scalar-budget sequences under switch costs and (2d DP) switch
+    budgets, incumbents chained boundary-to-boundary: PlannerCache solves
+    must be bit-identical to fresh cache=None solves at every step."""
+    cl = toy_cluster()
+    rng = np.random.default_rng(seed)
+    plan = OPT.PlannerCache()
+    cur = None
+    lams = [8.0, 14.0]
+    kw = dict(switch_cost=float(sw), switch_budget=(kbud or None),
+              max_replicas=6)
+    for _step in range(5):
+        lams[int(rng.integers(0, 2))] = float(
+            np.round(rng.uniform(2.0, 25.0), 2))
+        got = OPT.solve_cluster(cl, lams, current=cur, cache=plan, **kw)
+        ref = OPT.solve_cluster(cl, lams, current=cur, **kw)
+        assert snap(got) == snap(ref), (lams, cur is None)
+        if got.feasible:
+            cur = got.config
+
+
+@given(seed=st.integers(0, 4000), overlap=st.sampled_from([False, True]))
+@settings(max_examples=8, deadline=None)
+def test_hetero_sequences_bit_identical(seed, overlap):
+    """Hetero vector costs (the nd DP, reach-capped budget grid) with
+    switch costs and — when ``overlap`` — transition charging against a
+    serving config one boundary behind the committed incumbent."""
+    cl = hetero_cluster()
+    rng = np.random.default_rng(seed)
+    plan = OPT.PlannerCache()
+    cur = serving = None
+    lams = [6.0, 9.0]
+    for _step in range(4):
+        lams[int(rng.integers(0, 2))] = float(
+            np.round(rng.uniform(2.0, 18.0), 2))
+        kw = dict(max_replicas=4, switch_cost=0.3, overlap=overlap,
+                  serving=serving)
+        got = OPT.solve_cluster(cl, lams, current=cur, cache=plan, **kw)
+        ref = OPT.solve_cluster(cl, lams, current=cur, **kw)
+        assert snap(got) == snap(ref), (lams, overlap)
+        if got.feasible:
+            serving = cur                 # serving lags the commit
+            cur = got.config
+
+
+# ---------------------------------------------------------------------------
+# stage tables
+# ---------------------------------------------------------------------------
+def test_stage_options_with_tables_bit_identical():
+    """``stage_options`` through a ``_StageTable`` memo must reproduce the
+    direct enumeration bit-for-bit — every column, both latency models,
+    single-class and hetero stages, feasible or not."""
+    stages = [s for cl in (toy_cluster(), hetero_cluster())
+              for p in cl.pipelines for s in p.stages]
+    tables = {}
+    for stg in stages:
+        for lam in (0.0, 3.7, 12.0, 400.0):
+            for lm in ("worst_case", "expected"):
+                a = OPT.stage_options(stg, lam, max_replicas=5,
+                                      latency_model=lm, tables=tables)
+                b = OPT.stage_options(stg, lam, max_replicas=5,
+                                      latency_model=lm)
+                assert a.names == b.names and a.devices == b.devices
+                for f in ("batches", "lat", "cost", "acc", "acc_norm",
+                          "replicas", "feasible"):
+                    np.testing.assert_array_equal(
+                        getattr(a, f), getattr(b, f), err_msg=f)
+    assert len(tables) == len(set(stages))
+
+
+# ---------------------------------------------------------------------------
+# end to end: the adapter's "auto" cache is a PlannerCache and the full
+# trace stays bit-identical to no caching at all
+# ---------------------------------------------------------------------------
+def test_cluster_trace_with_planner_cache_matches_uncached():
+    cl = toy_cluster(cores=24.0)
+    t = np.arange(40, dtype=np.float64)
+    traces = [np.clip(4.0 + 10.0 * np.exp(-((t - 12.0) % 30.0) / 6.0), 0.5,
+                      None),
+              np.full(40, 6.0)]
+    common = dict(policy="ipa", obj=OPT.Objective(alpha=1.0, beta=0.02),
+                  switch_cost=0.1, adaptation_delay=4.0, seed=3)
+    plan = OPT.PlannerCache()
+    got = AD.run_cluster_trace(cl, traces, frontier_cache=plan, **common)
+    ref = AD.run_cluster_trace(cl, traces, frontier_cache=None, **common)
+    assert got.n_reconfigs == ref.n_reconfigs
+    assert got.reconfig_log == ref.reconfig_log
+    assert [(p.completed, p.dropped) for p in got.per_pipeline] == \
+        [(p.completed, p.dropped) for p in ref.per_pipeline]
+    for a, b in zip(got.per_pipeline, ref.per_pipeline):
+        np.testing.assert_array_equal(np.asarray(a.latencies),
+                                      np.asarray(b.latencies))
+        assert [(r.pas, r.cost, r.feasible) for r in a.intervals] == \
+            [(r.pas, r.cost, r.feasible) for r in b.intervals]
+    # the layered memos actually engaged
+    st_ = plan.stats["planner"]
+    assert st_["sol_misses"] > 0 and st_["stage_tables"] > 0
+    assert st_["sol_hits"] + st_["dp_prefix_pipes"] + st_["dp_full_hits"] > 0

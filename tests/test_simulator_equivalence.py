@@ -16,6 +16,7 @@ from repro.core.pipeline import (DeviceProfile, ModelVariant, PipelineConfig,
                                  PipelineModel, StageConfig, StageModel)
 from repro.core.queueing import wait_bound
 from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
+                                  RoundClusterSimulator,
                                   StructClusterSimulator)
 from repro.core.simulator_legacy import LegacyTickSimulator
 from repro.serving.request import Request
@@ -177,6 +178,59 @@ def test_bulk_injection_acquires_from_attached_pool():
     sim2.inject_arrivals(arrivals)
     sim2.run_until(horizon)
     assert pool.reused > 0
+
+
+def test_dag_pipeline_recycles_pool_requests():
+    """Pool recycling on DAG pipelines: the shared Request object behind a
+    fan-out is released exactly once, at *full retirement* (when its rid
+    leaves the in-flight registry) — never while sibling copies are still
+    live in a branch.  A pooled diamond run must be bit-identical to the
+    unpooled one, actually reuse objects under windowed injection, and
+    retire every registry entry by drain time."""
+    from repro.serving.request import RequestPool
+
+    def diamond():
+        def stage(name, l1):
+            v = ModelVariant(name + "0", 70.0, 1, (0.0, l1 * 0.7, l1 * 0.3))
+            return StageModel(name, (v,), sla=5 * l1, batch_choices=(1, 2, 4))
+        return PipelineModel(
+            "diamond", (stage("src", 0.01), stage("fast", 0.01),
+                        stage("slow", 0.05), stage("sink", 0.01)),
+            parents=((), (0,), (0,), (1, 2)))
+
+    pipe = diamond()
+    cfg = PipelineConfig((StageConfig("src0", 1, 2),
+                          StageConfig("fast0", 2, 2),
+                          StageConfig("slow0", 1, 1),
+                          StageConfig("sink0", 1, 2)))
+    rng = np.random.default_rng(3)
+    windows = [np.sort(5.0 * w + 5.0 * rng.random(150)) for w in range(4)]
+
+    def run(pool):
+        sim = PipelineSimulator(pipe, cfg, drop_factor=1.0, max_wait=0.1,
+                                request_pool=pool)
+        # windowed injection: releases from window w refill the free list
+        # before window w+1 acquires — exercising actual reuse, not just
+        # allocation
+        for w, ts in enumerate(windows):
+            sim.inject_arrivals(ts)
+            sim.run_until(5.0 * (w + 1))
+        sim.run_until(40.0)
+        return sim
+
+    plain = run(None)
+    pool = RequestPool()
+    pooled = run(pool)
+    for a, b in ((plain, pooled),):
+        assert a.metrics.arrived == b.metrics.arrived
+        assert a.metrics.completed == b.metrics.completed
+        assert a.metrics.dropped == b.metrics.dropped
+        assert a.events_processed == b.events_processed
+        np.testing.assert_array_equal(a.metrics.latencies,
+                                      b.metrics.latencies)
+    assert pool.reused > 0
+    assert all(not infl for infl in pooled._inflight)
+    assert all(not reg for reg in pooled._req_of)
 
 
 # ---------------------------------------------------------------------------
@@ -430,18 +484,22 @@ def _golden_cluster():
                                    mk("p2", 0.06, 0.035)), cores=40.0)
 
 
-def test_golden_cluster_trace_is_pinned():
-    """Deterministic seeded 3-pipeline ClusterSimulator run with scripted
+@pytest.mark.parametrize("sim_cls", (ClusterSimulator,
+                                     StructClusterSimulator,
+                                     RoundClusterSimulator))
+def test_golden_cluster_trace_is_pinned(sim_cls):
+    """Deterministic seeded 3-pipeline cluster run with scripted
     mid-flight reconfigurations (adaptation windows in flight across
     boundaries).  The exact event count, per-pipeline completion/drop
     totals and the reconfiguration log are golden — any change means the
-    cluster event-loop semantics moved and must be re-derived on purpose."""
+    cluster event-loop semantics moved and must be re-derived on purpose.
+    All three event cores must replay the pin."""
     cl = _golden_cluster()
     cfg0 = ClusterConfig(tuple(
         PipelineConfig((StageConfig(p.stages[0].variants[0].name, 2, 2),
                         StageConfig(p.stages[1].variants[0].name, 2, 1)))
         for p in cl.pipelines))
-    sim = ClusterSimulator(cl, cfg0, adaptation_delay=1.5)
+    sim = sim_cls(cl, cfg0, adaptation_delay=1.5)
     for p, rate in enumerate((18.0, 90.0, 12.0)):
         for t in TR.arrivals_from_rates(np.full(12, rate), seed=100 + p):
             sim.inject(Request(arrival=float(t), sla=cl.pipelines[p].sla), p)
@@ -561,11 +619,13 @@ def test_golden_hetero_cluster_trace_is_pinned():
     """Seeded heterogeneous golden trace with a scripted cpu→gpu move
     (superseded mid-window): the event count, per-pipeline totals, the
     reconfiguration log, the per-class serving peak and the final
-    per-class ledgers are golden, and both event cores must replay them
-    bit-identically."""
+    per-class ledgers are golden, and all three event cores must replay
+    them bit-identically."""
     heap = _replay_golden_hetero(ClusterSimulator)
     struct = _replay_golden_hetero(StructClusterSimulator)
+    rnd = _replay_golden_hetero(RoundClusterSimulator)
     assert heap == struct
+    assert heap == rnd
     (log, n_rec, totals, events, queued, in_service,
      peak_by_class, alloc_vec, serving_vec) = heap
     assert log == ((5.0, 0, 6.5), (5.0, 1, 6.5), (6.0, 0, 7.5))

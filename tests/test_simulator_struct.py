@@ -1,22 +1,32 @@
-"""The structured-array event core must be *event-for-event identical* to
-the heapq reference core: same completed/dropped/arrived counts, the exact
-same latency streams (bit-identical float64), the same
-``events_processed``, reconfig log, peak depths and residual queue state —
-on golden traces, the shared equivalence scenarios, and randomized bursty
-cluster traces with mid-window ``adaptation_delay > 0`` transitions."""
+"""The structured-array and service-round event cores must be
+*event-for-event identical* to the heapq reference core: same
+completed/dropped/arrived counts, the exact same latency streams
+(bit-identical float64), the same ``events_processed``, reconfig log,
+peak depths and residual queue state — on golden traces, the shared
+equivalence scenarios, randomized bursty cluster traces with mid-window
+``adaptation_delay > 0`` transitions, and hypothesis-random DAG/hetero
+clusters."""
 import numpy as np
 import pytest
+from _hypothesis_compat import given, st
 
 from repro.core.cluster import ClusterModel, ClusterConfig
-from repro.core.pipeline import (ModelVariant, PipelineModel, PipelineConfig,
-                                 StageConfig, StageModel)
+from repro.core.pipeline import (DeviceProfile, ModelVariant, PipelineModel,
+                                 PipelineConfig, StageConfig, StageModel)
 from repro.core.simulator import (ClusterSimulator, PipelineSimulator,
+                                  RoundClusterSimulator,
+                                  RoundPipelineSimulator,
                                   StructClusterSimulator,
                                   StructPipelineSimulator,
                                   make_cluster_simulator, EVENT_CORES)
 from repro.serving.request import Request
 
 from test_simulator_equivalence import two_stage, EQUIV_TRACES
+
+PIPE_CORES = (PipelineSimulator, StructPipelineSimulator,
+              RoundPipelineSimulator)
+CLUSTER_CORES = (ClusterSimulator, StructClusterSimulator,
+                 RoundClusterSimulator)
 
 
 # ---------------------------------------------------------------------------
@@ -37,10 +47,13 @@ def full_snapshot(sim):
     )
 
 
-def assert_same(heap_sim, struct_sim):
-    a, b = full_snapshot(heap_sim), full_snapshot(struct_sim)
-    for key in a:
-        assert a[key] == b[key], f"struct core diverges on {key}"
+def assert_same(heap_sim, *others):
+    a = full_snapshot(heap_sim)
+    for other in others:
+        b = full_snapshot(other)
+        for key in a:
+            assert a[key] == b[key], \
+                f"{type(other).__name__} diverges on {key}"
 
 
 # ---------------------------------------------------------------------------
@@ -51,7 +64,7 @@ def test_pipeline_equiv_traces(trace_name):
     config, arrivals, horizon = EQUIV_TRACES[trace_name]
     pipe = two_stage()
     sims = []
-    for cls in (PipelineSimulator, StructPipelineSimulator):
+    for cls in PIPE_CORES:
         sim = cls(pipe, config)
         sim.inject_arrivals(np.asarray(arrivals, dtype=np.float64))
         sim.run_until(horizon)
@@ -110,7 +123,7 @@ def test_cluster_random_bursty_with_transitions(seed):
         plans.append(winj)
 
     sims = []
-    for cls in (ClusterSimulator, StructClusterSimulator):
+    for cls in CLUSTER_CORES:
         sim = cls(cluster, cc, adaptation_delay=delay)
         for w, winj in enumerate(plans):
             for p, ts in enumerate(winj):
@@ -143,13 +156,17 @@ def test_factory_builds_both_cores_and_rejects_unknown():
     cc = ClusterConfig((PipelineConfig((StageConfig("a0", 4, 1),
                                         StageConfig("b0", 2, 1))),))
     from repro.core.cluster import single
+    from repro.core.simulator import RoundClusterSimulator
     cluster = single(pipe)
-    assert EVENT_CORES == ("heap", "struct")
+    assert EVENT_CORES == ("heap", "struct", "round")
     assert isinstance(make_cluster_simulator(cluster, cc),
                       ClusterSimulator)
     assert isinstance(make_cluster_simulator(cluster, cc,
                                              event_core="struct"),
                       StructClusterSimulator)
+    assert isinstance(make_cluster_simulator(cluster, cc,
+                                             event_core="round"),
+                      RoundClusterSimulator)
     with pytest.raises(ValueError, match="unknown event core"):
         make_cluster_simulator(cluster, cc, event_core="vectorized")
 
@@ -170,7 +187,7 @@ def test_struct_core_handles_unsorted_and_stale_injections():
     config = PipelineConfig((StageConfig("a0", 4, 1),
                              StageConfig("b0", 2, 1)))
     sims = []
-    for cls in (PipelineSimulator, StructPipelineSimulator):
+    for cls in PIPE_CORES:
         sim = cls(pipe, config)
         sim.inject_arrivals(np.array([0.5, 0.1, 0.9, 0.3]))
         sim.run_until(2.0)
@@ -179,3 +196,96 @@ def test_struct_core_handles_unsorted_and_stale_injections():
         sims.append(sim)
     assert_same(*sims)
     assert sims[1].metrics.completed + sims[1].metrics.dropped == 7
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: all three cores agree event-for-event on random bursty
+# DAG / hetero clusters
+# ---------------------------------------------------------------------------
+def _coeffs(l1):
+    return (0.0, l1 * 0.7, l1 * 0.3)
+
+
+def _dag_pipe(name, l_fast, l_slow):
+    """Diamond fan-out: src -> (fast || slow) -> join sink."""
+    def stage(sname, l1):
+        return StageModel(sname, (ModelVariant(sname + "0", 70.0, 1,
+                                               _coeffs(l1)),),
+                          sla=6 * l1, batch_choices=(1, 2, 4))
+    stages = (stage(f"{name}_src", 0.01), stage(f"{name}_fast", l_fast),
+              stage(f"{name}_slow", l_slow), stage(f"{name}_sink", 0.01))
+    return PipelineModel(name, stages, parents=((), (0,), (0,), (1, 2)))
+
+
+def _hetero_pipe(name, l1, l2):
+    """Two-stage chain whose heavy variant ships a 3x-faster gpu build."""
+    heavy = ModelVariant(
+        f"{name}a1", 75.0, 2, _coeffs(2 * l1),
+        device_profiles=(DeviceProfile("cpu", _coeffs(2 * l1), 2, 75.0),
+                         DeviceProfile("gpu", _coeffs(2 * l1 / 3.0), 1,
+                                       78.0)))
+    s1 = StageModel(f"{name}_a",
+                    (ModelVariant(f"{name}a0", 60.0, 1, _coeffs(l1)), heavy),
+                    sla=5 * l1, batch_choices=(1, 2, 4))
+    s2 = StageModel(f"{name}_b",
+                    (ModelVariant(f"{name}b0", 70.0, 1, _coeffs(l2)),),
+                    sla=5 * l2, batch_choices=(1, 2, 4))
+    return PipelineModel(name, (s1, s2))
+
+
+@given(
+    seed=st.integers(0, 2**16),
+    l_slow=st.sampled_from([0.05, 0.12, 0.3]),
+    on_gpu=st.sampled_from([False, True]),
+    delay=st.sampled_from([0.0, 1.5]),
+    burst=st.sampled_from([8.0, 40.0, 150.0]),
+)
+def test_three_cores_agree_random_dag_hetero(seed, l_slow, on_gpu, delay,
+                                             burst):
+    """heap vs struct vs round on a mixed cluster — one diamond DAG
+    pipeline (fan-out, join, §4.5 drop propagation) plus one hetero chain
+    (per-class ledger) — under bursty arrivals with exact ties and a
+    mid-run reconfiguration: full snapshots must be identical."""
+    rng = np.random.default_rng(seed)
+    dag = _dag_pipe("d", l_fast=0.01, l_slow=l_slow)
+    het = _hetero_pipe("h", 0.04, 0.02)
+    cluster = ClusterModel("fzmix", (dag, het), cores={"cpu": 64.0,
+                                                       "gpu": 8.0})
+    cfg = ClusterConfig((
+        PipelineConfig((StageConfig("d_src0", 1, 2),
+                        StageConfig("d_fast0", 2, 2),
+                        StageConfig("d_slow0", 1, 1),
+                        StageConfig("d_sink0", 1, 2))),
+        PipelineConfig((StageConfig("ha0", 2, 2),
+                        StageConfig("hb0", 2, 1)))))
+    cfg2 = ClusterConfig((
+        cfg.pipelines[0],
+        PipelineConfig((StageConfig("ha1", 2, 2, "gpu" if on_gpu
+                                    else "cpu"),
+                        StageConfig("hb0", 1, 2)))))
+    # two 5 s windows of bursty traffic per pipeline, with exact-tie
+    # arrivals; the hetero pipe reconfigures (possibly onto gpu) at t=5
+    plans = []
+    for w in range(2):
+        winj = []
+        for _p in range(2):
+            ts = np.sort(5.0 * w + 5.0 * rng.random(rng.poisson(burst)))
+            if ts.size > 2:
+                ts[1] = ts[0]            # exact tie
+            winj.append(ts)
+        plans.append(winj)
+
+    sims = []
+    for cls in CLUSTER_CORES:
+        sim = cls(cluster, cfg, adaptation_delay=delay, drop_factor=1.2,
+                  max_wait=0.25)
+        for w, winj in enumerate(plans):
+            for p, ts in enumerate(winj):
+                sim.inject_arrivals(ts, p)
+            if w == 1:
+                sim.reconfigure_pipeline(1, cfg2.pipelines[1])
+                sim.set_lam_est(1, float(burst) / 5.0)
+            sim.run_until(5.0 * (w + 1))
+        sim.run_until(30.0)
+        sims.append(sim)
+    assert_same(*sims)

@@ -43,9 +43,36 @@ def tiny_grid(reps: int = 2, seconds: int = 20):
 # ---------------------------------------------------------------------------
 # determinism across worker counts
 # ---------------------------------------------------------------------------
+def test_sweep_worker_schedule_invariance_hash():
+    """Inline drain in canonical order vs two worker-style chunk drains
+    (heavy-first scheduling order, fresh per-worker warm state each —
+    the pool's code path minus the process boundary): identical hash and
+    identical volatile-stripped records cell-for-cell.  The real spawn
+    pool is covered by the slow-marked test below, and nproc=1-vs-4
+    hash identity is independently gated every tier-1 run by
+    ``benchmarks/sweep.py --smoke``."""
+    specs = tiny_grid()
+    rec1, _ = SW.run_grid(specs, 1, shard_dir=None, quiet=True)
+    todo = sorted(specs,
+                  key=lambda s: -(s.seconds * s.budget * s.n_pipelines))
+    by_cell = {}
+    for half in (todo[0::2], todo[1::2]):    # interleaved "workers"
+        ST.worker_init()                     # fresh warm state per worker
+        for rec in ST.run_chunk(list(half)):
+            by_cell[rec["cell"]] = rec
+    rec2 = [by_cell[s.cell_id] for s in specs]
+    assert ST.result_hash(rec1) == ST.result_hash(rec2)
+    for a, b in zip(rec1, rec2):
+        assert ST.strip_volatile(a) == ST.strip_volatile(b)
+
+
+@pytest.mark.slow
 def test_sweep_nproc_invariance_hash():
     """Same grid, nproc=1 inline vs nproc=2 spawn pool: identical hash,
-    and identical volatile-stripped records cell-for-cell."""
+    and identical volatile-stripped records cell-for-cell.  Slow (the
+    spawn pool costs ~2.4 s to boot); the fast tier covers the same
+    property via the chunk-drain test above and the tier-1 sweep smoke
+    gate."""
     specs = tiny_grid()
     rec1, _ = SW.run_grid(specs, 1, shard_dir=None, quiet=True)
     rec2, _ = SW.run_grid(specs, 2, shard_dir=None, quiet=True)
